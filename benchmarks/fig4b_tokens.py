@@ -1,0 +1,39 @@
+"""Figure 4b — bit-width ↔ SQNR trade-off vs number of high-precision
+tokens (activation quantization only, DWT sequence transform)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import lvm_activations, timed
+from repro.core import quant as Q
+from repro.core.stamp import StampConfig, stamp_fake_quant
+
+
+def run() -> list[dict]:
+    hw = (32, 32)
+    x = lvm_activations(batch=4, hw=hw, d=128, seed=0)
+    s = hw[0] * hw[1]
+    rows = []
+    # uniform baselines at increasing bit widths
+    for bits in (4, 5, 6):
+        q = Q.fake_quant(x, float(bits), axis=-1)
+        rows.append({"name": f"fig4b/uniform_a{bits}", "us_per_call": 0.0,
+                     "derived": f"avg_bits={bits:.3f},"
+                                f"sqnr_db={float(Q.sqnr_db(x, q)):.2f}"})
+    # STaMP with growing high-precision budgets
+    for num_hi in (0, 16, 64, 128, 256):
+        cfg = StampConfig(seq_transform="dwt2d", levels=3, hw=hw,
+                          num_hi_tokens=num_hi, skip_first_token=False)
+        us, q = timed(lambda: stamp_fake_quant(x, cfg))
+        avg = cfg.average_bits(s)
+        rows.append({"name": f"fig4b/stamp_hi{num_hi}", "us_per_call": us,
+                     "derived": f"avg_bits={avg:.3f},"
+                                f"sqnr_db={float(Q.sqnr_db(x, q)):.2f}"})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,47 @@
+"""Figure 7 — feature transforms (rows) × sequence transforms (columns):
+improvements are complementary, and DCT ≈ WHT ≈ DWT."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (QuantSetting, lvm_activations,
+                               quantized_linear_output, timed)
+from repro.core.quant import sqnr_db
+from repro.core.stamp import StampConfig
+
+FEATURES = ["rtn", "smoothquant", "quarot"]
+SEQUENCES = ["none", "dwt", "dct", "wht"]
+
+
+def run() -> list[dict]:
+    d, dout = 128, 128
+    x = lvm_activations(batch=4, hw=(32, 32), d=d, seed=0)
+    x = x.at[..., :3].multiply(8.0)     # outlier channels
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(d, dout)).astype(np.float32) / np.sqrt(d))
+    ref = x @ w
+    rows = []
+    for feat in FEATURES:
+        for seq in SEQUENCES:
+            stamp = None
+            if seq != "none":
+                stamp = StampConfig(seq_transform=seq, num_hi_tokens=64,
+                                    skip_first_token=False)
+            setting = QuantSetting(method=feat, stamp=stamp, act_bits=4,
+                                   weight_bits=None)
+            us, y = timed(lambda: quantized_linear_output(
+                x, w, setting, key=jax.random.PRNGKey(2)))
+            rows.append({
+                "name": f"fig7/{feat}+{seq}",
+                "us_per_call": us,
+                "derived": f"sqnr_db={float(sqnr_db(ref, y)):.2f}",
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

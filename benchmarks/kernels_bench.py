@@ -1,0 +1,45 @@
+"""Kernel micro-benchmarks (interpret mode on CPU — correctness +
+derived TPU traffic estimates; wall times are NOT TPU latencies)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timed
+from repro.kernels import ops
+
+
+def run() -> list[dict]:
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 1024, 256)).astype(np.float32))
+    rows = []
+
+    us, _ = timed(lambda: ops.haar_dwt_seq(x, levels=4, interpret=True), reps=2)
+    hbm = 2 * x.size * 4
+    rows.append({"name": "kernels/haar_dwt_seq_1k", "us_per_call": us,
+                 "derived": f"tpu_hbm_bytes={hbm}"})
+
+    us, _ = timed(lambda: ops.walsh_hadamard(x, axis=-2, interpret=True), reps=2)
+    rows.append({"name": "kernels/wht_seq_1k", "us_per_call": us,
+                 "derived": f"tpu_hbm_bytes={hbm}"})
+
+    us, _ = timed(lambda: ops.quantize_pack(x, bits=4, interpret=True), reps=2)
+    rows.append({"name": "kernels/quant_pack_int4", "us_per_call": us,
+                 "derived": f"tpu_hbm_bytes={int(x.size * 4.5)}"})
+
+    m = k = n = 256
+    qx = jnp.asarray(rng.integers(0, 16, (m, k)), jnp.int8)
+    qw = jnp.asarray(rng.integers(0, 16, (k, n)), jnp.int8)
+    ones = jnp.ones((m, 1), jnp.float32)
+    onesn = jnp.ones((1, n), jnp.float32)
+    us, _ = timed(lambda: ops.int8_matmul(qx, qw, ones, ones, onesn, onesn,
+                                          interpret=True), reps=2)
+    rows.append({"name": "kernels/int8_matmul_256", "us_per_call": us,
+                 "derived": f"tpu_int_macs={2 * m * n * k}"})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

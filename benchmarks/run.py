@@ -1,0 +1,38 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (plus a kernel-throughput suite)."""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    modules = [
+        "benchmarks.table1_lvm",
+        "benchmarks.table2_llm",
+        "benchmarks.table3_overhead",
+        "benchmarks.fig4b_tokens",
+        "benchmarks.fig7_combinations",
+        "benchmarks.table4_sites",
+        "benchmarks.fig3_energy",
+        "benchmarks.kernels_bench",
+    ]
+    print("name,us_per_call,derived")
+    failed = []
+    for mod_name in modules:
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            for row in mod.run():
+                print(f"{row['name']},{row['us_per_call']:.1f},"
+                      f"\"{row['derived']}\"", flush=True)
+        except Exception:
+            failed.append(mod_name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

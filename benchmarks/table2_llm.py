@@ -1,0 +1,115 @@
+"""Table 2 — STaMP always improves LLM quantization (W4A4KV4, 64@8b).
+
+A small in-framework LM is trained briefly on the locally-correlated
+corpus, then evaluated under W4A4KV4 serving with each feature-transform
+baseline (RTN, SmoothQuant, QuaRot, FlatQuant-lite) × STaMP on/off.
+Metric: held-out perplexity (the paper's WikiText-2 PPL analog) via the
+layer-simulation harness on true model activations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import QuantSetting, quantized_linear_output, stamp_1d, timed
+from repro.core.quant import sqnr_db
+from repro.data.pipeline import DataConfig, markov_batch
+from repro.launch.train import TrainConfig, train
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+METHODS = ["rtn", "smoothquant", "quarot", "flatquant"]
+
+CFG = ModelConfig(name="bench-lm", family="dense", num_layers=4,
+                  d_model=256, num_heads=8, num_kv_heads=4, d_ff=512,
+                  vocab_size=256, tie_embeddings=True)
+
+
+@functools.lru_cache(maxsize=1)
+def _trained():
+    out = train(CFG, TrainConfig(steps=400, global_batch=8, seq=128,
+                                 lr=3e-3, warmup=40), ckpt_dir=None,
+                verbose=False)
+    return out["params"]
+
+
+def _block_inputs(params, batch):
+    """True activations entering the first block's qkv projection."""
+    emb = lm._embed(params, jnp.asarray(batch["tokens"]))
+    from repro.models.layers import rms_norm
+    p0 = jax.tree.map(lambda a: a[0], params["period"])[0]
+    return rms_norm(emb, p0["ln1"].astype(emb.dtype)), p0
+
+
+def run() -> list[dict]:
+    params = _trained()
+    dcfg = DataConfig(vocab_size=CFG.vocab_size, seq_len=128, global_batch=8)
+    x, p0 = _block_inputs(params, markov_batch(dcfg, -100))
+    x = x.astype(jnp.float32)
+    x_calib, _ = _block_inputs(params, markov_batch(dcfg, -101))
+    x_calib = x_calib.astype(jnp.float32)
+    w = jnp.asarray(p0["wq"], jnp.float32)
+    ref = x @ w
+
+    rows = []
+    for method in METHODS:
+        for use_stamp in (False, True):
+            setting = QuantSetting(
+                method=method,
+                stamp=stamp_1d(num_hi=16) if use_stamp else None,
+                act_bits=4, weight_bits=4)
+            us, y = timed(lambda: quantized_linear_output(
+                x, w, setting, x_calib=x_calib,
+                key=jax.random.PRNGKey(1)))
+            rows.append({
+                "name": f"table2/{method}{'+stamp' if use_stamp else ''}",
+                "us_per_call": us,
+                "derived": f"sqnr_db={float(sqnr_db(ref, y)):.2f}",
+            })
+
+    # end-to-end perplexity under full W4A4KV4 serving (model-level claim)
+    eval_batch = markov_batch(dcfg, -102)
+    from repro.core.stamp import StampConfig
+    from repro.serving.kvcache import KVCacheConfig
+
+    def ppl(seq_transform: str):
+        # A4 everywhere, 16 tokens at 8 bits for BOTH settings (the paper
+        # gives baselines the same mixed-precision budget, §B.2) — the only
+        # difference is the sequence transform.
+        stamp = StampConfig(seq_transform=seq_transform, num_hi_tokens=16,
+                            skip_first_token=True)
+        serve = lm.ServeConfig(stamp=stamp,
+                               kv=KVCacheConfig(quantized=True, num_hi=16),
+                               weight_bits=None)
+        x_h, _, _ = lm.model_hidden(
+            params, {k: jnp.asarray(v) for k, v in eval_batch.items()},
+            CFG, mode="prefill", policy=None,
+            stamp=serve.stamp, kv_cfg=serve.kv, remat=False)
+        loss = lm.chunked_xent(x_h, lm._head_weight(params),
+                               jnp.asarray(eval_batch["labels"]))
+        return float(jnp.exp(loss))
+
+    base = ppl("none")
+    stamped = ppl("dwt")
+    x_fp, _, _ = lm.model_hidden(
+        params, {k: jnp.asarray(v) for k, v in eval_batch.items()},
+        CFG, mode="train", policy=None, remat=False)
+    fp = float(jnp.exp(lm.chunked_xent(x_fp, lm._head_weight(params),
+                                       jnp.asarray(eval_batch["labels"]))))
+    rows.append({"name": "table2/ppl_fp", "us_per_call": 0.0,
+                 "derived": f"ppl={fp:.2f}"})
+    rows.append({"name": "table2/ppl_a4_uniform", "us_per_call": 0.0,
+                 "derived": f"ppl={base:.2f}"})
+    rows.append({"name": "table2/ppl_a4_stamp", "us_per_call": 0.0,
+                 "derived": f"ppl={stamped:.2f}"})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

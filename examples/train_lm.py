@@ -1,0 +1,50 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps on
+the synthetic locally-correlated corpus, with checkpointing and the same
+sharded train step the 512-chip dry run lowers.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+(~100M params: 12 layers, d_model 768, llama-style — a few ms/step on TPU,
+minutes on this CPU container; use --tiny for a smoke run.)
+"""
+
+import argparse
+import dataclasses
+
+from repro.configs import get_config
+from repro.launch.train import TrainConfig, train
+from repro.models.config import ModelConfig
+
+
+def hundred_m() -> ModelConfig:
+    return ModelConfig(
+        name="llama-100m", family="dense",
+        num_layers=12, d_model=768, num_heads=12, num_kv_heads=4,
+        d_ff=2048, vocab_size=8192, tie_embeddings=True,
+        schedule="wsd",
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = hundred_m()
+    if args.tiny:
+        cfg = dataclasses.replace(cfg, num_layers=2, d_model=128,
+                                  num_heads=4, num_kv_heads=2, d_ff=256,
+                                  vocab_size=512)
+    tc = TrainConfig(steps=args.steps, global_batch=4 if args.tiny else 8,
+                     seq=128 if args.tiny else 512, lr=3e-3 if args.tiny else 1e-3,
+                     ckpt_every=max(args.steps // 4, 10))
+    out = train(cfg, tc, ckpt_dir=args.ckpt_dir)
+    print(f"loss: {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f} "
+          f"over {len(out['losses'])} steps")
+    assert out["losses"][-1] < out["losses"][0], "model failed to learn"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""repro: STaMP (sequence-transform + mixed-precision activation
+quantization) as a first-class feature of a multi-pod JAX training/serving
+framework."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,92 @@
+"""CLI: where do the roofline bytes/flops of a dry-run cell come from?
+
+    PYTHONPATH=src python -m repro.analysis.inspect_hlo \
+        experiments/dryrun/qwen2-72b_decode_32k_singlepod.hlo.zst [--ops N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import collections
+import pathlib
+
+import zstandard
+
+from repro.analysis import hlo as H
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path")
+    ap.add_argument("--ops", type=int, default=12)
+    ap.add_argument("--comp", default="",
+                    help="show top ops of this computation")
+    args = ap.parse_args()
+
+    raw = pathlib.Path(args.path).read_bytes()
+    text = (zstandard.ZstdDecompressor().decompress(raw).decode()
+            if args.path.endswith(".zst") else raw.decode())
+    comps, entry = H.parse_computations(text)
+    stats = {n: H.comp_stats(c, comps) for n, c in comps.items()}
+
+    mult = collections.defaultdict(float)
+
+    def walk(name, m, fused):
+        if name not in comps:
+            return
+        if not fused:
+            mult[name] += m
+        for callee, k, cf in stats[name].calls:
+            walk(callee, m * k, fused or cf)
+
+    walk(entry, 1.0, False)
+
+    rows = sorted(((stats[n].hbm_bytes * m, stats[n].dot_flops * m,
+                    sum(stats[n].coll_bytes.values()) * m, n, m)
+                   for n, m in mult.items()), reverse=True)
+    print(f"{'GB(hbm)':>10s} {'GF(dot)':>10s} {'GB(coll)':>10s} "
+          f"{'mult':>6s}  computation")
+    for b, f, c, n, m in rows[:args.ops]:
+        print(f"{b/1e9:10.2f} {f/1e9:10.2f} {c/1e9:10.2f} {m:6.0f}  {n}")
+
+    target = args.comp or rows[0][3]
+    c = comps[target]
+    users: dict = {}
+    for op in c.ops:
+        for o in op.operands:
+            users.setdefault(o, []).append(op)
+    is_ew = {op.name: op.kind in H._ELEMENTWISE for op in c.ops}
+
+    def opbytes(op):
+        k = op.kind
+        if k == "fusion":
+            return H._fusion_hbm_bytes(op, c, comps)
+        if k in H._SKIP_BYTES_OPS:
+            return 0
+        if k == "dynamic-slice":
+            return 2 * H.shape_bytes(op.out_type)
+        if k == "dynamic-update-slice":
+            return (2 * H.shape_bytes(c.symbols.get(op.operands[1], ""))
+                    if len(op.operands) > 1 else 0)
+        if k in H._ELEMENTWISE:
+            b = 0.0
+            use = users.get(op.name, [])
+            if op.is_root or not use or any(not is_ew.get(u.name, False)
+                                            for u in use):
+                b += H.shape_bytes(op.out_type)
+            for o in op.operands:
+                if not is_ew.get(o, False) and len(users.get(o, [])) > 1:
+                    b += H.shape_bytes(c.symbols.get(o, ""))
+            return b
+        return (sum(H.shape_bytes(c.symbols.get(o, "")) for o in op.operands)
+                + H.shape_bytes(op.out_type))
+
+    print(f"\ntop ops in {target} (mult={mult.get(target, 0):.0f}):")
+    sizes = sorted(((opbytes(op), op.kind, op.name, op.out_type[:70])
+                    for op in c.ops), reverse=True)
+    for s, k, n, t in sizes[:args.ops]:
+        print(f"  {s/1e9:9.3f} GB {k:24s} {n[:42]:42s} {t}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Roofline terms for TPU v5e from the dry-run artifacts.
+
+    compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+All inputs from :mod:`repro.analysis.hlo` are *per device*, so the per-chip
+division is already done; the terms below are seconds-per-step on the
+slowest (uniform) device.  MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D
+(MoE), ×3 for training (fwd+bwd), ×1 for prefill, with D = tokens processed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.models.config import ModelConfig, ShapeConfig
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link (≈ effective per-chip)
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    hlo_flops_per_device: float
+    useful_ratio: float          # MODEL_FLOPS / (HLO_FLOPs × chips)
+    step_time_s: float           # max of the three terms
+    roofline_fraction: float     # compute term / step time (→1 = compute-bound)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6·N·D convention (N = active params, D = tokens)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def compute_roofline(
+    hlo_stats: dict,
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    chips: int,
+) -> Roofline:
+    flops_dev = (hlo_stats["dot_flops_per_device"]
+                 + hlo_stats.get("elem_flops_per_device", 0.0))
+    bytes_dev = hlo_stats["hbm_bytes_per_device"]
+    coll_dev = hlo_stats["collective_bytes_per_device"]
+
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_dev / ICI_BW
+
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    total_hlo = hlo_stats["dot_flops_per_device"] * chips
+    useful = mf / total_hlo if total_hlo else 0.0
+    step = max(terms.values())
+    frac = compute_s / step if step else 0.0
+    return Roofline(
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck, model_flops=mf,
+        hlo_flops_per_device=flops_dev, useful_ratio=useful,
+        step_time_s=step, roofline_fraction=frac)
+
+
+def summarize(r: Roofline) -> dict:
+    return {
+        "compute_s": r.compute_s,
+        "memory_s": r.memory_s,
+        "collective_s": r.collective_s,
+        "bottleneck": r.bottleneck,
+        "model_flops": r.model_flops,
+        "useful_flops_ratio": r.useful_ratio,
+        "step_time_s": r.step_time_s,
+        "roofline_fraction": r.roofline_fraction,
+    }

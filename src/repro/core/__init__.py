@@ -1,0 +1,10 @@
+"""STaMP core: quantizers, sequence/feature transforms, bit allocation."""
+
+from repro.core.stamp import StampConfig, stamp_linear, stamp_fake_quant  # noqa: F401
+from repro.core.quant import (  # noqa: F401
+    fake_quant,
+    fake_quant_per_block,
+    mixed_precision_bits,
+    rtn_quantize_weight,
+    sqnr_db,
+)

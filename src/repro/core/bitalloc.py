@@ -1,0 +1,90 @@
+"""Bit-width allocation (paper §3.3 and Appendix A.2/A.3).
+
+Given per-token energies ``e`` of the *transformed* activations, the optimal
+real-valued allocation for a total budget of ``B`` bits is
+
+    b_i* = log2 sqrt(e_i) + (B − Σ log2 sqrt(e_i)) / s        (Eq. 18)
+
+Hardware restricts us to a small set of integer widths, so STaMP's practical
+scheme is two-level: first ``num_hi`` tokens at ``hi`` bits, remainder at
+``lo`` bits (Fig. 4a, yellow).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+_EPS = 1e-12
+
+
+def optimal_bits(energies: Array, total_bits: float) -> Array:
+    """Eq. 18 — water-filling style log-energy allocation (real-valued)."""
+    e = jnp.maximum(jnp.asarray(energies, jnp.float32), _EPS)
+    log_sqrt_e = 0.5 * jnp.log2(e)
+    s = e.shape[-1]
+    c = (total_bits - jnp.sum(log_sqrt_e, axis=-1, keepdims=True)) / s
+    return log_sqrt_e + c
+
+
+def bound_value(energies: Array, bits: Array, d: int) -> Array:
+    """Theorem-1 upper bound ``d/2 · Σ e_i / (2^{b_i} − 1)²`` for a given
+    allocation (used to compare schemes, Fig. 2b)."""
+    e = jnp.asarray(energies, jnp.float32)
+    denom = (2.0 ** jnp.asarray(bits, jnp.float32) - 1.0) ** 2
+    return 0.5 * d * jnp.sum(e / jnp.maximum(denom, _EPS), axis=-1)
+
+
+def two_level_bits(seq_len: int, num_hi: int, hi: int = 8, lo: int = 4) -> Array:
+    """STaMP's practical two-precision vector."""
+    idx = jnp.arange(seq_len)
+    return jnp.where(idx < num_hi, float(hi), float(lo))
+
+
+def greedy_two_level(
+    energies: np.ndarray,
+    avg_budget: float,
+    hi: int = 8,
+    lo: int = 4,
+) -> int:
+    """Pick the largest ``num_hi`` (tokens at ``hi`` bits) whose average bit
+    width stays within ``avg_budget``; assumes energies are already sorted
+    descending (true after DWT/DCT/KLT reordering)."""
+    s = len(energies)
+    max_hi = int(np.floor(s * (avg_budget - lo) / (hi - lo)))
+    return int(np.clip(max_hi, 0, s))
+
+
+def integer_rounded_allocation(
+    energies: np.ndarray,
+    total_bits: int,
+    min_bits: int = 2,
+    max_bits: int = 8,
+) -> np.ndarray:
+    """Round Eq. 18 to integers with a greedy budget repair: floor, then give
+    leftover bits to the tokens with the largest marginal bound reduction.
+
+    Marginal gain of b→b+1 for token i is e_i (1/(2^b−1)² − 1/(2^{b+1}−1)²),
+    monotone in e_i / (2^b−1)², so a heap-free argmax loop is exact.
+    """
+    e = np.maximum(np.asarray(energies, np.float64), _EPS)
+    b_star = np.asarray(optimal_bits(jnp.asarray(e), float(total_bits)))
+    b = np.clip(np.floor(b_star), min_bits, max_bits).astype(np.int64)
+    budget = total_bits - int(b.sum())
+    gain = e / (2.0 ** b - 1) ** 2
+    while budget > 0:
+        i = int(np.argmax(np.where(b < max_bits, gain, -np.inf)))
+        if not np.isfinite(gain[i]):
+            break
+        b[i] += 1
+        budget -= 1
+        gain[i] = e[i] / (2.0 ** b[i] - 1) ** 2
+    while budget < 0:
+        i = int(np.argmin(np.where(b > min_bits, gain, np.inf)))
+        b[i] -= 1
+        budget += 1
+        gain[i] = e[i] / (2.0 ** b[i] - 1) ** 2
+    return b

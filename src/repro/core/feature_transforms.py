@@ -1,0 +1,239 @@
+"""Feature-dimension transforms and baselines the paper combines with STaMP.
+
+These implement the comparison/combination methods of Tables 1–2 and §4:
+
+* **Hadamard / QuaRot** [Ashkboos et al. 2024] — orthogonal feature rotation
+  ``X → X·R`` with ``R⁻¹`` folded into the weights, plus QuaRot's 10 %
+  min-max range shrink.
+* **SmoothQuant** [Xiao et al. 2023] — per-channel scale migration
+  ``X → X·diag(s)⁻¹``, ``W → diag(s)·W`` with
+  ``s_j = max|X_j|^α / max|W_j|^{1−α}``.
+* **ViDiT-Q SDCB** [Zhao et al. 2025] — static channel balancing from
+  calibration stats (α = 0.01 for the DiT setup, §B.1).
+* **SVDQuant** [Li et al. 2025] — absorb outliers into a high-precision
+  low-rank branch ``W ≈ L₁L₂ + ΔW_q``; activations/residual quantized.
+* **FlatQuant-lite** [Sun et al. 2025] — a learned per-layer affine
+  (diagonal ∘ Hadamard) minimizing the layer-output quantization MSE with a
+  few STE gradient steps on calibration data (lightweight stand-in for the
+  full Kronecker-factored FlatQuant).
+
+Feature transforms are *right* multiplications on activations — exactly the
+``R`` of Eq. 4/6 — hence freely composable with STaMP's left transform ``L``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant as Q
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Hadamard (QuaRot)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=32)
+def hadamard_matrix(d: int) -> np.ndarray:
+    """Orthonormal Hadamard-like rotation for any ``d``.
+
+    For ``d = 2^k`` this is the Sylvester Hadamard.  Otherwise we factor
+    ``d = 2^k · m`` and use ``H_{2^k} ⊗ I_m`` — orthonormal, mixes within
+    2^k-sized groups (the standard fallback when no exact Hadamard of size d
+    is available).
+    """
+    k = 0
+    m = d
+    while m % 2 == 0:
+        m //= 2
+        k += 1
+    h = np.array([[1.0]])
+    for _ in range(k):
+        h = np.block([[h, h], [h, -h]])
+    h = h / np.sqrt(h.shape[0])
+    if m > 1:
+        h = np.kron(h, np.eye(m))
+    return h.astype(np.float32)
+
+
+def random_hadamard(d: int, key: jax.Array) -> Array:
+    """QuaRot's randomized Hadamard ``H · diag(±1)`` (still orthonormal)."""
+    signs = jax.random.rademacher(key, (d,), dtype=jnp.float32)
+    return jnp.asarray(hadamard_matrix(d)) * signs[None, :]
+
+
+# ---------------------------------------------------------------------------
+# SmoothQuant / SDCB channel scaling
+# ---------------------------------------------------------------------------
+
+
+def smoothquant_scales(act_absmax: Array, w_absmax: Array,
+                       alpha: float = 0.5) -> Array:
+    """``s_j = max|X_j|^α / max|W_j|^{1−α}`` (SmoothQuant Eq. 4)."""
+    a = jnp.maximum(act_absmax, 1e-5) ** alpha
+    w = jnp.maximum(w_absmax, 1e-5) ** (1.0 - alpha)
+    return a / w
+
+
+def sdcb_scales(act_absmax: Array, w_absmax: Array,
+                alpha: float = 0.01) -> Array:
+    """ViDiT-Q's static channel balancing — SmoothQuant with the DiT-tuned
+    α = 0.01 (§B.1), i.e. scaling almost entirely towards the weights."""
+    return smoothquant_scales(act_absmax, w_absmax, alpha=alpha)
+
+
+# ---------------------------------------------------------------------------
+# SVDQuant-style low-rank absorption
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SVDQuantWeight:
+    """``W ≈ l1 @ l2 (fp) + residual (int)`` — the residual carries much less
+    dynamic range, so 4-bit RTN on it is accurate (SVDQuant §3)."""
+
+    l1: Array               # (d_in, r) fp16/bf16
+    l2: Array               # (r, d_out)
+    residual: Q.QuantizedWeight
+
+    def dequant(self, dtype=jnp.bfloat16) -> Array:
+        return (self.l1 @ self.l2).astype(dtype) + self.residual.dequant(dtype)
+
+
+def svdquant_decompose(w: Array, rank: int = 32,
+                       bits: int = 4) -> SVDQuantWeight:
+    wf = np.asarray(w, np.float32)
+    u, s, vt = np.linalg.svd(wf, full_matrices=False)
+    l1 = u[:, :rank] * s[:rank][None, :]
+    l2 = vt[:rank]
+    resid = wf - l1 @ l2
+    rq = Q.rtn_quantize_weight(jnp.asarray(resid), bits=bits, axis=0)
+    return SVDQuantWeight(l1=jnp.asarray(l1), l2=jnp.asarray(l2), residual=rq)
+
+
+# ---------------------------------------------------------------------------
+# FlatQuant-lite: learned diagonal ∘ Hadamard
+# ---------------------------------------------------------------------------
+
+
+def flatquant_lite_fit(
+    x_calib: Array,
+    w: Array,
+    bits: int = 4,
+    steps: int = 100,
+    lr: float = 1e-2,
+) -> tuple[Array, Array]:
+    """Learn ``R = diag(exp θ) · H`` minimizing ‖Q(X R) R⁻¹ W − X W‖².
+
+    Returns ``(R, R⁻¹)``; the inverse is analytic
+    (``R⁻¹ = Hᵀ · diag(exp −θ)``), so it can be folded into the weights like
+    any other feature transform.
+    """
+    d = x_calib.shape[-1]
+    h = jnp.asarray(hadamard_matrix(d))
+    ref = x_calib @ w
+
+    def loss(theta):
+        r = (jnp.exp(theta)[:, None]) * h          # diag(e^θ) @ H
+        r_inv = h.T * jnp.exp(-theta)[None, :]
+        tx = x_calib @ r
+        tq = Q.fake_quant(tx, bits, axis=-1)
+        y = (tq @ r_inv) @ w
+        return jnp.mean((y - ref) ** 2)
+
+    theta = jnp.zeros((d,), jnp.float32)
+    grad = jax.jit(jax.grad(loss))
+    # plain Adam, few steps — FlatQuant trains 15 epochs; this is the lite
+    # calibration-time variant.
+    m = jnp.zeros_like(theta)
+    v = jnp.zeros_like(theta)
+    for t in range(1, steps + 1):
+        g = grad(theta)
+        m = 0.9 * m + 0.1 * g
+        v = 0.999 * v + 0.001 * g * g
+        mh = m / (1 - 0.9**t)
+        vh = v / (1 - 0.999**t)
+        theta = theta - lr * mh / (jnp.sqrt(vh) + 1e-8)
+    r = (jnp.exp(theta)[:, None]) * h
+    r_inv = h.T * jnp.exp(-theta)[None, :]
+    return r, r_inv
+
+
+def fold_feature_transform(w: Array, r: Array) -> Array:
+    """Fold ``R⁻¹`` into a (d_in, d_out) weight: ``W' = R⁻¹ W``.
+
+    For orthonormal R, ``R⁻¹ = Rᵀ``; for the FlatQuant diag∘H form the
+    caller passes the analytic inverse directly.
+    """
+    return r.T @ w
+
+
+# ---------------------------------------------------------------------------
+# method registry used by the benchmark harness
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FeatureTransformSpec:
+    """A calibrated feature-transform: R applied to activations, R⁻¹ already
+    folded into the weight supplied at construction time."""
+
+    name: str
+    r: Optional[Array]        # None = identity
+    r_inv: Optional[Array]
+    act_scale: Optional[Array] = None   # SmoothQuant/SDCB diag scaling
+
+    def apply_to_activation(self, x: Array) -> Array:
+        if self.act_scale is not None:
+            x = x / self.act_scale.astype(x.dtype)
+        if self.r is not None:
+            x = x @ self.r.astype(x.dtype)
+        return x
+
+    def fold_into_weight(self, w: Array) -> Array:
+        if self.r_inv is not None:
+            w = self.r_inv.astype(w.dtype) @ w
+        if self.act_scale is not None:
+            w = w * self.act_scale[:, None].astype(w.dtype)
+        return w
+
+
+def build_feature_transform(
+    name: str,
+    d: int,
+    *,
+    x_calib: Optional[Array] = None,
+    w: Optional[Array] = None,
+    key: Optional[jax.Array] = None,
+    bits: int = 4,
+) -> FeatureTransformSpec:
+    """Factory over the paper's feature-transform baselines."""
+    if name in ("none", "identity", "rtn", "svdquant"):
+        # SVDQuant is a *weight* decomposition — activations untransformed;
+        # the low-rank branch is handled by the caller.
+        return FeatureTransformSpec(name, None, None)
+    if name in ("hadamard", "quarot"):
+        r = (random_hadamard(d, key) if key is not None
+             else jnp.asarray(hadamard_matrix(d)))
+        return FeatureTransformSpec(name, r, r.T)
+    if name in ("smoothquant", "sdcb", "vidit-q"):
+        assert x_calib is not None and w is not None
+        alpha = 0.5 if name == "smoothquant" else 0.01
+        s = smoothquant_scales(
+            jnp.max(jnp.abs(x_calib.reshape(-1, d)), axis=0),
+            jnp.max(jnp.abs(w), axis=1),
+            alpha=alpha)
+        return FeatureTransformSpec(name, None, None, act_scale=s)
+    if name == "flatquant":
+        assert x_calib is not None and w is not None
+        r, r_inv = flatquant_lite_fit(x_calib.reshape(-1, d), w, bits=bits)
+        return FeatureTransformSpec(name, r, r_inv)
+    raise ValueError(f"unknown feature transform {name!r}")

@@ -1,0 +1,228 @@
+"""Integer activation/weight quantization (paper §2.1, Eq. 1).
+
+Conventions
+-----------
+Activations are ``(..., s, d)`` — sequence axis ``-2``, feature axis ``-1``.
+Per-token quantization shares scale/offset across the feature axis (the
+paper's ``s_ij = s_i``); per-block shares them across feature blocks of size
+``block_size`` (SVDQuant-style, Table 1 uses block 64).
+
+``bits`` may be a scalar or a per-token array broadcastable against the
+sequence axis — this is how STaMP's mixed precision is expressed: the same
+vectorized quantizer evaluates 8-bit head tokens and 4-bit tail tokens in one
+pass (Eq. 1 with ``b_ij = b_i``).
+
+All fake-quant paths are differentiable via a straight-through estimator so
+that calibration-time learned transforms (FlatQuant-lite) can backprop
+through them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Bits = Union[int, Array]
+
+_EPS = 1e-8
+
+
+@jax.custom_jvp
+def _round_ste(x: Array) -> Array:
+    """Round-to-nearest-even with straight-through gradient."""
+    return jnp.round(x)
+
+
+@_round_ste.defjvp
+def _round_ste_jvp(primals, tangents):
+    (x,), (t,) = primals, tangents
+    return jnp.round(x), t
+
+
+def _levels(bits: Bits) -> Array:
+    """Number of representable steps ``2**b - 1`` (float, supports arrays)."""
+    return jnp.asarray(2.0, jnp.float32) ** jnp.asarray(bits, jnp.float32) - 1.0
+
+
+def minmax_scale_offset(
+    x: Array,
+    bits: Bits,
+    axis: int = -1,
+) -> tuple[Array, Array]:
+    """Asymmetric min-max scale & zero point (no clipping error, §2.1).
+
+    Returns ``(scale, zero_point)`` with the reduced ``axis`` kept so the
+    result broadcasts against ``x``.  ``scale = range / (2^b - 1)`` (the paper
+    writes its reciprocal; we store the dequant step size).
+    """
+    xf = x.astype(jnp.float32)
+    mn = jnp.min(xf, axis=axis, keepdims=True)
+    mx = jnp.max(xf, axis=axis, keepdims=True)
+    n = _levels(bits)
+    if isinstance(bits, Array) and bits.ndim:
+        # per-token bit vector: align with the sequence axis of the kept-dims
+        # shape, i.e. bits has shape (s,) and scale has shape (..., s, 1).
+        n = _align_token_axis(n, mn.ndim, axis)
+    scale = (mx - mn) / n
+    scale = jnp.maximum(scale, _EPS)
+    zero_point = _round_ste(-mn / scale)
+    return scale, zero_point
+
+
+def _align_token_axis(v: Array, ndim: int, reduced_axis: int) -> Array:
+    """Reshape a per-token vector ``(s,)`` for broadcast against a keepdims
+    tensor of rank ``ndim`` whose ``reduced_axis`` was the feature axis."""
+    reduced_axis = reduced_axis % ndim
+    token_axis = reduced_axis - 1  # sequence axis sits just before features
+    shape = [1] * ndim
+    shape[token_axis] = v.shape[0]
+    return v.reshape(shape)
+
+
+def quantize(x: Array, scale: Array, zero_point: Array, bits: Bits) -> Array:
+    """Eq. 1: ``clamp(round(x / s) + z, 0, 2^b - 1)`` (kept in float for
+    differentiability; see :func:`to_int` for the storage cast)."""
+    n = _levels(bits)
+    if isinstance(bits, Array) and bits.ndim:
+        n = _align_token_axis(n, x.ndim, -1)
+    q = _round_ste(x.astype(jnp.float32) / scale) + zero_point
+    return jnp.clip(q, 0.0, n)
+
+
+def dequantize(q: Array, scale: Array, zero_point: Array) -> Array:
+    """``(q - z) * s`` (§2.1)."""
+    return (q - zero_point) * scale
+
+
+def to_int(q: Array, bits: int) -> Array:
+    """Cast a float-held quantized tensor to its integer storage dtype."""
+    dtype = jnp.int8 if bits <= 8 else jnp.int32
+    return q.astype(dtype)
+
+
+def fake_quant(
+    x: Array,
+    bits: Bits,
+    axis: int = -1,
+    out_dtype: Optional[jnp.dtype] = None,
+) -> Array:
+    """Quantize-dequantize ``Q(x) = Q⁻¹(Q(x))`` with per-``axis``-reduced
+    min-max scales.  ``bits`` may be a per-token vector for mixed precision."""
+    scale, zp = minmax_scale_offset(x, bits, axis=axis)
+    q = quantize(x, scale, zp, bits)
+    out = dequantize(q, scale, zp)
+    return out.astype(out_dtype or x.dtype)
+
+
+def fake_quant_per_block(
+    x: Array,
+    bits: Bits,
+    block_size: int,
+    out_dtype: Optional[jnp.dtype] = None,
+) -> Array:
+    """Per-(token, feature-block) quantization (SVDQuant setting, Table 1).
+
+    The feature axis is split into ``d // block_size`` groups, each with its
+    own min-max scale.  ``d`` must be divisible by ``block_size``.
+    """
+    *lead, d = x.shape
+    if d % block_size:
+        raise ValueError(f"feature dim {d} not divisible by block {block_size}")
+    xb = x.reshape(*lead, d // block_size, block_size)
+    out = fake_quant(xb, bits, axis=-1, out_dtype=out_dtype)
+    return out.reshape(*lead, d)
+
+
+def mixed_precision_bits(
+    seq_len: int,
+    num_hi: int,
+    hi_bits: int = 8,
+    lo_bits: int = 4,
+) -> Array:
+    """STaMP's two-level bit vector: first ``num_hi`` tokens at ``hi_bits``,
+    the rest at ``lo_bits`` (§3.3, Fig. 4a 'yellow' scheme)."""
+    idx = jnp.arange(seq_len)
+    return jnp.where(idx < num_hi, hi_bits, lo_bits).astype(jnp.float32)
+
+
+def average_bits(bits: Array) -> float:
+    """Effective average bit width of an allocation (e.g. 4.125 for
+    64×8b + 1984×4b)."""
+    return float(jnp.mean(jnp.asarray(bits, jnp.float32)))
+
+
+# ---------------------------------------------------------------------------
+# Weight quantization (RTN with clip-range search, paper §B.2)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedWeight:
+    """Integer weight + affine dequant params (per output channel or block)."""
+
+    q: Array          # int8 storage (int4 values occupy [0, 15])
+    scale: Array      # float32, broadcastable against q
+    zero_point: Array
+    bits: int
+
+    def dequant(self, dtype=jnp.bfloat16) -> Array:
+        return dequantize(self.q.astype(jnp.float32), self.scale,
+                          self.zero_point).astype(dtype)
+
+
+def rtn_quantize_weight(
+    w: Array,
+    bits: int = 4,
+    axis: int = 0,
+    num_candidates: int = 17,
+    min_shrink: float = 0.6,
+) -> QuantizedWeight:
+    """Round-to-nearest weight quantization with min-max *range search*.
+
+    The paper (§B.2): "we range set the weights by computing the weight
+    quantization squared error for a grid of candidate ranges and selecting
+    the candidate with lowest error".  We shrink the min-max range by factors
+    in ``[min_shrink, 1.0]`` and keep the per-channel argmin.  ``axis`` is the
+    reduction axis (input-feature axis for per-output-channel scales).
+    """
+    wf = w.astype(jnp.float32)
+    mn = jnp.min(wf, axis=axis, keepdims=True)
+    mx = jnp.max(wf, axis=axis, keepdims=True)
+    n = float(2**bits - 1)
+
+    def err_for(shrink):
+        smn, smx = mn * shrink, mx * shrink
+        scale = jnp.maximum((smx - smn) / n, _EPS)
+        zp = jnp.round(-smn / scale)
+        q = jnp.clip(jnp.round(wf / scale) + zp, 0.0, n)
+        deq = (q - zp) * scale
+        err = jnp.sum((deq - wf) ** 2, axis=axis, keepdims=True)
+        return err, (scale, zp)
+
+    shrinks = jnp.linspace(min_shrink, 1.0, num_candidates)
+    errs, (scales, zps) = jax.vmap(err_for)(shrinks)
+    best = jnp.argmin(errs, axis=0)
+    scale = jnp.take_along_axis(scales, best[None], axis=0)[0]
+    zp = jnp.take_along_axis(zps, best[None], axis=0)[0]
+    q = jnp.clip(jnp.round(wf / scale) + zp, 0.0, n)
+    return QuantizedWeight(q=q.astype(jnp.int8), scale=scale, zero_point=zp,
+                           bits=bits)
+
+
+def quant_error(x: Array, q: Array) -> Array:
+    """Expected squared quantization error ``E‖Q(x) − x‖²`` (Eq. 2)."""
+    d = (q.astype(jnp.float32) - x.astype(jnp.float32))
+    return jnp.sum(d * d)
+
+
+def sqnr_db(orig: Array, quant: Array) -> Array:
+    """Signal-to-quantized-noise ratio in dB (§5.1)."""
+    orig = orig.astype(jnp.float32)
+    noise = orig - quant.astype(jnp.float32)
+    num = jnp.sum(orig**2)
+    den = jnp.maximum(jnp.sum(noise**2), _EPS)
+    return 10.0 * jnp.log10(num / den)

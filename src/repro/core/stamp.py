@@ -1,0 +1,157 @@
+"""STaMP: the sequence-transformed, mixed-precision linear layer (Fig. 2a).
+
+The algorithm for ``y = act_quant(X) @ W + β`` under STaMP:
+
+    1.  ``T = L · X``                      (sequence transform, §3)
+    2.  ``T = T · R``                      (optional feature transform;
+                                            ``R⁻¹`` is pre-folded into W)
+    3.  ``Tq = Q(T)``                       (mixed-precision fake quant,
+                                            first ``num_hi`` tokens hi-bit)
+    4.  ``Y = Tq · W'``                     (W' = R⁻¹ W, possibly int)
+    5.  ``y = L⁻¹ · Y + 1βᵀ``               (inverse transform then bias —
+                                            Eq. 7 commutation)
+
+``L`` is never materialized: DWT/DCT/WHT are applied as fast operators.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant as Q
+from repro.core import transforms as T
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class StampConfig:
+    """Configuration for STaMP activation quantization.
+
+    Defaults reproduce the paper's headline setting: Haar DWT, 3 levels,
+    64 tokens at 8 bits, rest at 4 bits (avg 4.0625–4.125), first-token
+    exception on for LLMs (§B.2).
+    """
+
+    seq_transform: str = "dwt"       # none|dwt|dwt2d|dct|wht|klt
+    levels: Optional[int] = None     # None = auto: log2(seq / num_hi), so the
+                                     # low-pass band aligns with the hi-bit
+                                     # token budget (total cost stays O(s·d))
+    num_hi_tokens: int = 64
+    hi_bits: int = 8
+    lo_bits: int = 4
+    skip_first_token: bool = True    # attention-sink exception (§B.2)
+    granularity: str = "token"       # token | block
+    block_size: int = 64
+    hw: Optional[tuple[int, int]] = None   # (H, W) grid for dwt2d
+    enabled: bool = True
+
+    def bits_vector(self, seq_len: int) -> Array:
+        return Q.mixed_precision_bits(seq_len, self.num_hi_tokens,
+                                      self.hi_bits, self.lo_bits)
+
+    def resolved_levels(self, seq_len: int) -> int:
+        if self.levels is not None:
+            return self.levels
+        import math
+        ratio = max(seq_len / max(self.num_hi_tokens, 1), 2)
+        return max(1, int(math.ceil(math.log2(ratio))))
+
+    def average_bits(self, seq_len: int) -> float:
+        return Q.average_bits(self.bits_vector(seq_len))
+
+
+def apply_seq_transform(x: Array, cfg: StampConfig, axis: int = -2,
+                        basis: Optional[Array] = None) -> Array:
+    if not cfg.enabled or cfg.seq_transform == "none":
+        return x
+    return T.sequence_transform(
+        x, cfg.seq_transform, axis=axis,
+        levels=cfg.resolved_levels(x.shape[axis]),
+        skip_first=cfg.skip_first_token, hw=cfg.hw, basis=basis)
+
+
+def invert_seq_transform(y: Array, cfg: StampConfig, axis: int = -2,
+                         basis: Optional[Array] = None) -> Array:
+    if not cfg.enabled or cfg.seq_transform == "none":
+        return y
+    return T.inverse_sequence_transform(
+        y, cfg.seq_transform, axis=axis,
+        levels=cfg.resolved_levels(y.shape[axis]),
+        skip_first=cfg.skip_first_token, hw=cfg.hw, basis=basis)
+
+
+def stamp_fake_quant(x: Array, cfg: StampConfig, axis: int = -2,
+                     basis: Optional[Array] = None) -> Array:
+    """Full STaMP round trip on an activation: ``L⁻¹ Q(L X)`` — used when a
+    consumer needs the activation back in the original domain (e.g. KV-cache
+    values feeding non-linear attention math)."""
+    if not cfg.enabled:
+        return x
+    tx = apply_seq_transform(x, cfg, axis=axis, basis=basis)
+    bits = cfg.bits_vector(tx.shape[axis])
+    if cfg.granularity == "block":
+        # per-(token, block) scales — bits stays per-token
+        tq = _blockwise_mixed(tx, bits, cfg.block_size)
+    else:
+        tq = Q.fake_quant(tx, bits, axis=-1)
+    return invert_seq_transform(tq, cfg, axis=axis, basis=basis)
+
+
+def _blockwise_mixed(tx: Array, bits: Array, block_size: int) -> Array:
+    *lead, s, d = tx.shape
+    if d % block_size:
+        return Q.fake_quant(tx, bits, axis=-1)
+    xb = tx.reshape(*lead, s, d // block_size, block_size)
+    bitsb = bits[:, None]  # per-token bits broadcast over feature blocks
+    n = 2.0 ** bitsb - 1.0
+    mn = jnp.min(xb, axis=-1, keepdims=True)
+    mx = jnp.max(xb, axis=-1, keepdims=True)
+    scale = jnp.maximum((mx - mn) / n[..., None], 1e-8)
+    zp = jnp.round(-mn / scale)
+    q = jnp.clip(jnp.round(xb / scale) + zp, 0.0, n[..., None])
+    deq = ((q - zp) * scale).astype(tx.dtype)
+    return deq.reshape(*lead, s, d)
+
+
+def stamp_linear(
+    x: Array,
+    w: Array,
+    b: Optional[Array],
+    cfg: StampConfig,
+    *,
+    w_quant: Optional[Q.QuantizedWeight] = None,
+    basis: Optional[Array] = None,
+    feature_rot: Optional[Array] = None,
+) -> Array:
+    """STaMP linear layer (Fig. 2a).
+
+    ``feature_rot`` is the feature-transform matrix R applied to the
+    activation; callers must pre-fold ``R⁻¹`` into ``w`` (QuaRot-style).
+    ``w_quant`` replaces ``w`` with its dequantized int approximation
+    (W4 path).  The bias is added *after* the inverse sequence transform,
+    which is exact per Eq. 7.
+    """
+    if not cfg.enabled:
+        wmat = w_quant.dequant(x.dtype) if w_quant is not None else w
+        y = x @ wmat
+        return y + b if b is not None else y
+
+    tx = apply_seq_transform(x, cfg, basis=basis)
+    if feature_rot is not None:
+        tx = tx @ feature_rot.astype(tx.dtype)
+    bits = cfg.bits_vector(tx.shape[-2])
+    if cfg.granularity == "block":
+        tq = _blockwise_mixed(tx, bits, cfg.block_size)
+    else:
+        tq = Q.fake_quant(tx, bits, axis=-1)
+    wmat = w_quant.dequant(x.dtype) if w_quant is not None else w
+    y = tq @ wmat
+    y = invert_seq_transform(y, cfg, basis=basis)
+    if b is not None:
+        y = y + b
+    return y

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for STaMP's compute hot spots.
+
+`<name>.py` holds the ``pl.pallas_call`` + BlockSpec tiling, `ops.py` the
+jit'd wrappers (interpret-mode on CPU), `ref.py` the pure-jnp oracles.
+"""
+
+from repro.kernels.ops import (  # noqa: F401
+    haar_dwt_seq,
+    int8_matmul,
+    quantize_pack,
+    walsh_hadamard,
+)
+from repro.kernels.cache_attention import cache_decode_attention  # noqa: F401

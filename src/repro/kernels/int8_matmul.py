@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: int8 × int8 GEMM with per-row / per-column scales.
+
+The W4A4/W4A8 deployment matmul: activations quantized per token (row
+scale/offset), weights per output channel (column scale/offset), integer
+accumulation in int32 on the MXU (``preferred_element_type``), dequantized
+once at the epilogue:
+
+    Y[m,n] = (Σ_k (qx[m,k] − zx[m]) (qw[k,n] − zw[n])) · sx[m] · sw[n]
+           = (Σ qx·qw − zx[m]·Σ qw − zw[n]·Σ qx + K·zx·zw) · sx·sw
+
+The correction terms use the per-block column/row sums, also computed on
+the fly, so the kernel reads each operand exactly once.  Blocks are
+128-aligned for the MXU; the K loop accumulates into a VMEM scratch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _matmul_kernel(qx_ref, qw_ref, sx_ref, zx_ref, sw_ref, zw_ref, o_ref,
+                   acc_ref, qw_sum_ref, qx_sum_ref, *, n_k: int, k_total: int):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        qw_sum_ref[...] = jnp.zeros_like(qw_sum_ref)
+        qx_sum_ref[...] = jnp.zeros_like(qx_sum_ref)
+
+    qx = qx_ref[...]                                  # (bm, bk) int8
+    qw = qw_ref[...]                                  # (bk, bn) int8
+    acc_ref[...] += jnp.dot(qx, qw, preferred_element_type=jnp.int32)
+    qw_sum_ref[...] += jnp.sum(qw.astype(jnp.int32), axis=0, keepdims=True)
+    qx_sum_ref[...] += jnp.sum(qx.astype(jnp.int32), axis=1, keepdims=True)
+
+    @pl.when(k_idx == n_k - 1)
+    def _emit():
+        sx = sx_ref[...].astype(jnp.float32)          # (bm, 1)
+        zx = zx_ref[...].astype(jnp.float32)
+        sw = sw_ref[...].astype(jnp.float32)          # (1, bn)
+        zw = zw_ref[...].astype(jnp.float32)
+        acc = acc_ref[...].astype(jnp.float32)
+        corr = (acc
+                - zx * qw_sum_ref[...].astype(jnp.float32)
+                - zw * qx_sum_ref[...].astype(jnp.float32)
+                + float(k_total) * zx * zw)
+        o_ref[...] = (corr * sx * sw).astype(o_ref.dtype)
+
+
+def int8_matmul_pallas(
+    qx: jax.Array, qw: jax.Array,
+    sx: jax.Array, zx: jax.Array,
+    sw: jax.Array, zw: jax.Array,
+    *, block_m: int = 128, block_n: int = 128, block_k: int = 128,
+    out_dtype=jnp.bfloat16, interpret: bool = False,
+) -> jax.Array:
+    """qx: (M, K) int8; qw: (K, N) int8; sx/zx: (M, 1); sw/zw: (1, N)."""
+    m, k = qx.shape
+    k2, n = qw.shape
+    assert k == k2
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k)
+    n_k = k // bk
+    kernel = functools.partial(_matmul_kernel, n_k=n_k, k_total=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.int32),
+            pltpu.VMEM((1, bn), jnp.int32),
+            pltpu.VMEM((bm, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(qx, qw, sx, zx, sw, zw)

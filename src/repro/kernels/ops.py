@@ -1,0 +1,66 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute via ``interpret=True`` — the
+kernel body runs in Python, which validates BlockSpec indexing and kernel
+math against the `ref.py` oracles.  On TPU the same call sites compile to
+Mosaic.  ``force_interpret`` exists so tests pin the mode explicitly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.haar_dwt import haar_dwt_pallas
+from repro.kernels.int8_matmul import int8_matmul_pallas
+from repro.kernels.quant_pack import quant_pack_pallas
+from repro.kernels.wht import wht_pallas
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("levels", "inverse", "block_d",
+                                             "interpret"))
+def haar_dwt_seq(x, levels: int = 3, inverse: bool = False,
+                 block_d: int = 128, interpret: bool | None = None):
+    """Multi-level sequence-axis Haar DWT, fused over levels.  x: (b, s, d)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    d = x.shape[2]
+    block_d = min(block_d, d)
+    while d % block_d:
+        block_d //= 2
+    # keep the per-program VMEM tile (s × block_d × 4B) under ~8 MiB
+    while x.shape[1] * block_d * 4 > 8 * 2**20 and block_d > 8:
+        block_d //= 2
+    while d % block_d:
+        block_d //= 2
+    return haar_dwt_pallas(x, levels=levels, inverse=inverse,
+                           block_d=max(block_d, 1), interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("axis", "interpret"))
+def walsh_hadamard(x, axis: int = -2, interpret: bool | None = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return wht_pallas(x, axis=axis, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def quantize_pack(x, bits: int = 4, interpret: bool | None = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return quant_pack_pallas(x, bits=bits, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "interpret"))
+def int8_matmul(qx, qw, sx, zx, sw, zw, out_dtype=jnp.bfloat16,
+                interpret: bool | None = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return int8_matmul_pallas(qx, qw, sx, zx, sw, zw, out_dtype=out_dtype,
+                              interpret=interpret)

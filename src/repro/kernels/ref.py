@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth
+for the interpret-mode shape/dtype sweeps in tests/test_kernels.py)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import transforms as T
+
+
+def haar_dwt_ref(x: jax.Array, levels: int = 3,
+                 inverse: bool = False) -> jax.Array:
+    fn = T.haar_idwt if inverse else T.haar_dwt
+    return fn(x, levels=levels, axis=-2)
+
+
+def wht_ref(x: jax.Array, axis: int = -2) -> jax.Array:
+    return T.wht(x, axis=axis)
+
+
+def quant_pack_ref(x: jax.Array, bits: int = 4):
+    xf = x.astype(jnp.float32)
+    n = float(2**bits - 1)
+    mn = jnp.min(xf, axis=-1, keepdims=True)
+    mx = jnp.max(xf, axis=-1, keepdims=True)
+    scale = jnp.maximum((mx - mn) / n, 1e-8)
+    zp = jnp.round(-mn / scale)
+    q = jnp.clip(jnp.round(xf / scale) + zp, 0.0, n)
+    if bits == 4:
+        qi = q.astype(jnp.uint8)
+        packed = (qi[..., 0::2] << 4) | qi[..., 1::2]
+    else:
+        packed = (q - 128.0).astype(jnp.int8)
+        zp = zp - 128.0
+    return packed, scale, zp
+
+
+def unpack_dequant_ref(packed: jax.Array, scale: jax.Array, zp: jax.Array,
+                       bits: int = 4, dtype=jnp.float32) -> jax.Array:
+    if bits == 4:
+        hi = (packed >> 4).astype(jnp.float32)
+        lo = (packed & 0xF).astype(jnp.float32)
+        q = jnp.stack([hi, lo], axis=-1).reshape(
+            *packed.shape[:-1], packed.shape[-1] * 2)
+    else:
+        q = packed.astype(jnp.float32)
+    return ((q - zp) * scale).astype(dtype)
+
+
+def int8_matmul_ref(qx, qw, sx, zx, sw, zw, out_dtype=jnp.float32):
+    x = (qx.astype(jnp.float32) - zx) * sx
+    w = (qw.astype(jnp.float32) - zw) * sw
+    return (x @ w).astype(out_dtype)

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: fast Walsh–Hadamard transform (sequence or feature).
+
+The CUDA warp-shuffle butterflies of `fast-hadamard-transform` become
+in-VMEM (s/2h, 2, h, bd) reshapes; Mosaic lowers the pairwise add/sub to
+VREG-level shuffles on (8, 128) tiles.  All log2(n) stages run in one VMEM
+residency — one HBM read + one write, versus one round trip per stage if
+expressed as XLA ops.
+
+Sequence mode transforms axis -2 (STaMP's L); feature mode transforms the
+last axis (QuaRot's R) by transposing tiles on the fly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _wht_seq_kernel(x_ref, o_ref, *, n: int):
+    x = x_ref[0].astype(jnp.float32)          # (s, bd); s == n (pow2)
+    h = 1
+    while h < n:
+        shaped = x.reshape(n // (2 * h), 2, h, x.shape[-1])
+        a = shaped[:, 0]
+        b = shaped[:, 1]
+        x = jnp.stack([a + b, a - b], axis=1).reshape(n, x.shape[-1])
+        h *= 2
+    o_ref[0] = (x * float(1.0 / np.sqrt(n))).astype(o_ref.dtype)
+
+
+def _wht_feat_kernel(x_ref, o_ref, *, n: int):
+    x = x_ref[0].astype(jnp.float32)          # (bs, d); d == n (pow2)
+    h = 1
+    while h < n:
+        shaped = x.reshape(x.shape[0], n // (2 * h), 2, h)
+        a = shaped[:, :, 0]
+        b = shaped[:, :, 1]
+        x = jnp.stack([a + b, a - b], axis=2).reshape(x.shape[0], n)
+        h *= 2
+    o_ref[0] = (x * float(1.0 / np.sqrt(n))).astype(o_ref.dtype)
+
+
+def wht_pallas(x: jax.Array, axis: int = -2, block: int = 128,
+               interpret: bool = False) -> jax.Array:
+    """Orthonormal WHT along ``axis`` (-2 sequence, -1 feature).
+    The transformed axis length must be a power of two."""
+    b, s, d = x.shape
+    if axis in (-2, 1):
+        n = s
+        assert n & (n - 1) == 0, f"seq {n} not a power of two"
+        assert d % block == 0
+        kernel = functools.partial(_wht_seq_kernel, n=n)
+        return pl.pallas_call(
+            kernel,
+            grid=(b, d // block),
+            in_specs=[pl.BlockSpec((1, s, block), lambda i, j: (i, 0, j))],
+            out_specs=pl.BlockSpec((1, s, block), lambda i, j: (i, 0, j)),
+            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            interpret=interpret,
+        )(x)
+    n = d
+    assert n & (n - 1) == 0, f"feature dim {n} not a power of two"
+    assert s % block == 0 or s < block
+    bs = min(block, s)
+    kernel = functools.partial(_wht_feat_kernel, n=n)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, s // bs),
+        in_specs=[pl.BlockSpec((1, bs, d), lambda i, j: (i, j, 0))],
+        out_specs=pl.BlockSpec((1, bs, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)

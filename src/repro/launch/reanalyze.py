@@ -1,0 +1,59 @@
+"""Re-derive roofline records from saved .hlo.zst files (no recompilation).
+
+Used whenever the HLO analyzer improves: the compiled artifacts are the
+ground truth; the JSON records are views.  Keeps `memory`/`xla_cost` fields
+from the original record (they come from the compiled object).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+import sys
+
+import zstandard
+
+from repro.analysis import hlo as H
+from repro.analysis import roofline as rl
+from repro.configs import get_config
+from repro.models.config import SHAPES
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+_NAME = re.compile(r"(?P<arch>.+?)_(?P<shape>train_4k|prefill_32k|decode_32k|"
+                   r"long_500k)_(?P<mesh>singlepod|multipod)(?P<tag>.*)")
+
+
+def reanalyze(json_path: pathlib.Path) -> str:
+    rec = json.loads(json_path.read_text())
+    if rec.get("status") != "ok":
+        return "skip"
+    hlo_path = json_path.with_suffix("").with_suffix("")  # strip .json
+    hlo_path = json_path.parent / (json_path.stem + ".hlo.zst")
+    if not hlo_path.exists():
+        return "no-hlo"
+    m = _NAME.match(json_path.stem)
+    if not m:
+        return "no-name"
+    cfg = get_config(m.group("arch"))
+    shape = SHAPES[m.group("shape")]
+    chips = 512 if m.group("mesh") == "multipod" else 256
+    text = zstandard.ZstdDecompressor().decompress(
+        hlo_path.read_bytes()).decode()
+    stats = H.analyze_hlo_text(text)
+    roof = rl.compute_roofline(stats, cfg, shape, chips)
+    rec["hlo_stats"] = stats
+    rec["roofline"] = rl.summarize(roof)
+    json_path.write_text(json.dumps(rec, indent=2, default=str))
+    return f"ok {roof.bottleneck} frac={roof.roofline_fraction:.4f}"
+
+
+def main():
+    dirs = [OUT_DIR, OUT_DIR.parent / "perf"]
+    for d in dirs:
+        for p in sorted(d.glob("*.json")):
+            print(f"{p.stem:60s} {reanalyze(p)}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

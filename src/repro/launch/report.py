@@ -1,0 +1,99 @@
+"""Generate the §Dry-run / §Roofline tables of EXPERIMENTS.md from the
+recorded JSONs.  Usage:
+    PYTHONPATH=src python -m repro.launch.report [--dir experiments/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parents[3]
+
+ARCHS = ["minicpm-2b", "deepseek-7b", "mistral-nemo-12b", "qwen2-72b",
+         "llava-next-mistral-7b", "jamba-1.5-large-398b",
+         "seamless-m4t-large-v2", "kimi-k2-1t-a32b", "arctic-480b",
+         "mamba2-1.3b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt(x, n=3):
+    return f"{x:.{n}f}"
+
+
+def roofline_table(d: pathlib.Path, mesh: str) -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | bottleneck |"
+        " roofline frac | useful FLOPs |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCHS:
+        for shape in SHAPES:
+            p = d / f"{arch}_{shape}_{mesh}.json"
+            if not p.exists():
+                lines.append(f"| {arch} | {shape} | — | — | — | missing | |")
+                continue
+            rec = json.loads(p.read_text())
+            if rec.get("status") == "skipped":
+                lines.append(f"| {arch} | {shape} | | | | "
+                             f"*{rec['reason']}* | | |")
+                continue
+            if rec.get("status") != "ok":
+                lines.append(f"| {arch} | {shape} | | | | ERROR | | |")
+                continue
+            r = rec["roofline"]
+            lines.append(
+                f"| {arch} | {shape} | {fmt(r['compute_s'])} | "
+                f"{fmt(r['memory_s'])} | {fmt(r['collective_s'])} | "
+                f"{r['bottleneck']} | {fmt(r['roofline_fraction'], 4)} | "
+                f"{fmt(r['useful_flops_ratio'], 2)} |")
+    return "\n".join(lines)
+
+
+def dryrun_table(d: pathlib.Path) -> str:
+    lines = [
+        "| arch | shape | mesh | chips | arg GB/dev | temp GB/dev | "
+        "HLO GF/dev | coll GB/dev | compile s |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCHS:
+        for shape in SHAPES:
+            for mesh in ("singlepod", "multipod"):
+                p = d / f"{arch}_{shape}_{mesh}.json"
+                if not p.exists():
+                    continue
+                rec = json.loads(p.read_text())
+                if rec.get("status") != "ok":
+                    if mesh == "singlepod" and rec.get("status") == "skipped":
+                        lines.append(f"| {arch} | {shape} | both | | | | "
+                                     f"*skipped (long_500k rule)* | | |")
+                    continue
+                m = rec["memory"]
+                h = rec["hlo_stats"]
+                lines.append(
+                    f"| {arch} | {shape} | {mesh} | {rec['chips']} | "
+                    f"{m['argument_bytes_per_device']/1e9:.2f} | "
+                    f"{m['temp_bytes_per_device']/1e9:.2f} | "
+                    f"{h['dot_flops_per_device']/1e9:.0f} | "
+                    f"{h['collective_bytes_per_device']/1e9:.1f} | "
+                    f"{rec['t_compile_s']} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=str(ROOT / "experiments" / "dryrun"))
+    ap.add_argument("--section", default="roofline",
+                    choices=["roofline", "dryrun"])
+    ap.add_argument("--mesh", default="singlepod")
+    args = ap.parse_args()
+    d = pathlib.Path(args.dir)
+    if args.section == "roofline":
+        print(roofline_table(d, args.mesh))
+    else:
+        print(dryrun_table(d))
+
+
+if __name__ == "__main__":
+    main()

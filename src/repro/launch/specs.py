@@ -1,0 +1,167 @@
+"""ShapeDtypeStruct stand-ins + shardings for every dry-run cell.
+
+``input_specs(cfg, shape)`` returns weak-type-correct, shardable stand-ins
+for the model inputs (no device allocation); companion helpers build the
+matching NamedShardings from a :class:`ShardingPolicy`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import lm
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.serving.kvcache import KVCacheConfig
+from repro.core.stamp import StampConfig
+from repro.sharding import ShardingPolicy
+from repro.optim import AdamWConfig, adamw_init
+
+Pytree = Any
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Stand-ins for the data inputs of one (arch × shape) cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {"tokens": _sds((b,), jnp.int32),
+                "pos": _sds((), jnp.int32)}
+    batch: dict = {}
+    if cfg.frontend == "patch":
+        s_txt = s - cfg.num_patches
+        batch["tokens"] = _sds((b, s_txt), jnp.int32)
+        batch["patches"] = _sds((b, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+    else:
+        batch["tokens"] = _sds((b, s), jnp.int32)
+    if cfg.frontend == "frames" or cfg.encoder_layers:
+        batch["frames"] = _sds((b, max(s // cfg.frame_ratio, 1), cfg.d_model),
+                               jnp.bfloat16)
+    if shape.kind == "train":
+        batch["labels"] = _sds((b, s), jnp.int32)
+    return batch
+
+
+def _data_size(policy: ShardingPolicy) -> int:
+    n = 1
+    for ax in policy.batch_axes:
+        n *= policy.mesh.shape[ax]
+    return n
+
+
+def batch_shardings(batch: dict, policy: ShardingPolicy,
+                    global_batch: Optional[int] = None) -> dict:
+    ba = policy.batch_axes
+    if global_batch is not None and global_batch < _data_size(policy):
+        ba = None   # tiny batch (long-context decode): replicate it
+    out = {}
+    for k, v in batch.items():
+        if v.ndim == 0:
+            out[k] = policy.named(P())
+        elif v.ndim == 1:
+            out[k] = policy.named(P(ba))
+        elif v.ndim == 2:
+            out[k] = policy.named(P(ba, None))
+        else:
+            out[k] = policy.named(P(ba, None, None))
+    return out
+
+
+def param_struct(cfg: ModelConfig, dtype=jnp.float32) -> Pytree:
+    return jax.eval_shape(
+        lambda: lm.init_params(jax.random.PRNGKey(0), cfg, dtype))
+
+
+def serve_param_struct(cfg: ModelConfig, weight_bits: Optional[int] = 4
+                       ) -> Pytree:
+    def build():
+        p = lm.init_params(jax.random.PRNGKey(0), cfg, jnp.bfloat16)
+        if weight_bits:
+            p = lm.quantize_weights_for_serving(p, weight_bits)
+        return p
+    return jax.eval_shape(build)
+
+
+def opt_struct(params: Pytree, opt_cfg: AdamWConfig) -> Pytree:
+    return jax.eval_shape(functools.partial(adamw_init, cfg=opt_cfg), params)
+
+
+def opt_shardings(opt_struct_tree: Pytree, params_sh: Pytree,
+                  policy: ShardingPolicy) -> Pytree:
+    return {
+        "step": policy.named(P()),
+        "m": params_sh,
+        "v": params_sh,
+    }
+
+
+def cache_struct(cfg: ModelConfig, shape: ShapeConfig,
+                 serve: lm.ServeConfig) -> Pytree:
+    return jax.eval_shape(
+        functools.partial(lm.init_cache, cfg, shape.global_batch,
+                          shape.seq_len, serve))
+
+
+_SEQ_KEYS = ("k_hi", "v_hi", "k_lo", "v_lo", "k", "v", "xk", "xv")
+_SCALE_KEYS = ("k_scale", "k_zp", "v_scale", "v_zp")
+
+
+def cache_shardings(cache: Pytree, policy: ShardingPolicy,
+                    global_batch: Optional[int] = None) -> Pytree:
+    ba = policy.batch_axes
+    seq_pref = ("model",)
+    if global_batch is not None and global_batch < _data_size(policy):
+        # long-context decode (batch=1): context-parallel over ALL axes —
+        # the cache sequence is the only parallel dimension left.
+        seq_pref = tuple(ba) + ("model",)
+        ba = None
+
+    def axes_size(axes) -> int:
+        n = 1
+        for ax in axes:
+            n *= policy.mesh.shape[ax]
+        return n
+
+    def fit_seq(dim: int):
+        """Largest seq sharding that divides `dim` (the 64-token hi region
+        of the mixed-precision cache is tiny — replicate if needed)."""
+        if dim % axes_size(seq_pref) == 0:
+            return seq_pref
+        if dim % policy.mesh.shape["model"] == 0:
+            return "model"
+        return None
+
+    def spec_for(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        nd = len(leaf.shape)
+        if name in _SEQ_KEYS:           # (..., b, s, kv, hd)
+            base = [ba, fit_seq(leaf.shape[-3]), None, None]
+        elif name in _SCALE_KEYS:       # (..., b, s, kv)
+            base = [ba, fit_seq(leaf.shape[-2]), None]
+        elif name == "state":           # (..., b, h, p, n)
+            base = [ba, "model", None, None]
+        elif name == "conv":            # (..., b, w, c)
+            base = [ba, None, "model"]
+        else:
+            base = [None] * nd
+        lead = nd - len(base)
+        return policy.named(P(*([None] * lead), *base))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)
+
+
+def make_serve_config(cfg: ModelConfig, quantize_acts: bool = True,
+                      weight_bits: Optional[int] = 4) -> lm.ServeConfig:
+    stamp = None
+    if quantize_acts:
+        stamp = StampConfig(seq_transform="dwt", levels=None,  # auto
+                            num_hi_tokens=64, skip_first_token=True)
+    return lm.ServeConfig(stamp=stamp, kv=KVCacheConfig(quantized=True),
+                          weight_bits=weight_bits)

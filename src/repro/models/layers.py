@@ -1,0 +1,361 @@
+"""Model building blocks, written for GSPMD-friendly lowering.
+
+Design constraints (CPU-only container, 512-way dry-run compiles):
+
+* memory-bounded attention: double-scan flash-style accumulation so a 32k
+  prefill never materializes an (s × s) score tensor;
+* GShard-style capacity-based MoE dispatch (einsum form — partitions cleanly
+  with experts on the 'model' mesh axis);
+* chunked Mamba2 / SSD with a `lax.scan` over chunks (state-passing);
+* every op keeps the feature/flattened-head dims divisible by the TP axis —
+  head-count itself may not divide the mesh (MiniCPM: 36 heads), which GSPMD
+  handles via the flat projections.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# norms & rope
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: Array, gamma: Array, eps: float = 1e-5) -> Array:
+    # f32 statistics.  (A bf16-square variant with f32 reduction dtype was
+    # tried to stop XLA hoisting the x→f32 convert out of the remat'd
+    # backward loop — it *increased* per-device HBM traffic 15–43% on the
+    # dry run, so the explicit cast stays; see EXPERIMENTS.md §Perf iter 1.)
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * gamma
+
+
+def rope_frequencies(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64)
+                            / head_dim)).astype(np.float32)
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., s, h, hd); positions: broadcastable (..., s)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(hd, theta))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., s, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnChunks:
+    q: int = 2048
+    kv: int = 2048
+
+
+def flash_attention(
+    q: Array,                # (b, sq, h, hd)
+    k: Array,                # (b, skv, kv, hd)
+    v: Array,
+    causal: bool = True,
+    chunks: AttnChunks = AttnChunks(),
+    q_offset: int = 0,
+) -> Array:
+    """Memory-bounded attention: outer scan over query chunks, inner scan
+    over KV chunks with running (max, sum, acc) — the standard online-softmax
+    recurrence.  GQA query heads are *grouped* against their KV head
+    (no materialized KV repeat).  Causal masking is applied per
+    (q-chunk, kv-chunk) pair; fully-masked pairs still lower (XLA cannot
+    skip data-dependent work in a scan) — the wasted half of causal FLOPs is
+    accounted for in the roofline's MODEL_FLOPS/HLO ratio.
+    """
+    b, sq, h, hd = q.shape
+    skv, g = k.shape[1], k.shape[2]
+    rep = h // g
+
+    cq = min(chunks.q, sq)
+    ckv = min(chunks.kv, skv)
+    nq, nkv = sq // cq, skv // ckv
+    assert sq % cq == 0 and skv % ckv == 0, (sq, cq, skv, ckv)
+
+    scale = 1.0 / np.sqrt(hd)
+    # (nq, b, g, rep, cq, hd) / (nkv, b, g, ckv, hd)
+    qc = q.reshape(b, nq, cq, g, rep, hd).transpose(1, 0, 3, 4, 2, 5)
+    kc = k.reshape(b, nkv, ckv, g, hd).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, nkv, ckv, g, hd).transpose(1, 0, 3, 2, 4)
+
+    q_pos_base = jnp.arange(cq)
+    k_pos_base = jnp.arange(ckv)
+
+    def q_body(_, qi_and_chunk):
+        qi, qck = qi_and_chunk
+        # NOTE (§Perf arctic iter 4, REVERTED): casting operands to bf16
+        # with preferred_element_type=f32 left arctic's f32 collectives
+        # untouched and cost prefill an extra score-sized bf16
+        # materialization of `p` per KV block (−15 % on every prefill
+        # cell).  f32 operands restored.
+        qck32 = qck.astype(jnp.float32) * scale
+
+        @functools.partial(jax.checkpoint,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+        def kv_body(carry, kv_in):
+            m, l, acc = carry
+            ki, kck, vck = kv_in
+            s = jnp.einsum("bgrqd,bgkd->bgrqk", qck32,
+                           kck.astype(jnp.float32))
+            if causal:
+                qpos = q_offset + qi * cq + q_pos_base
+                kpos = ki * ckv + k_pos_base
+                mask = qpos[:, None] >= kpos[None, :]
+                s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bgrqk,bgkd->bgrqd", p, vck.astype(jnp.float32))
+            return (m_new, l_new, acc_new), ()
+
+        init = (jnp.full((b, g, rep, cq), -1e30, jnp.float32),
+                jnp.zeros((b, g, rep, cq), jnp.float32),
+                jnp.zeros((b, g, rep, cq, hd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_body, init, (jnp.arange(nkv), kc, vc))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, out = jax.lax.scan(q_body, None, (jnp.arange(nq), qc))
+    # (nq, b, g, rep, cq, hd) -> (b, sq, h, hd)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, hd)
+    return out
+
+
+def decode_attention(
+    q: Array,                # (b, 1, h, hd)
+    k_cache: Array,          # (b, s, kv, hd)  — bf16 (already dequantized)
+    v_cache: Array,
+    length: Optional[Array] = None,
+) -> Array:
+    """Single-token attention over the full cache, GQA-grouped.  When the
+    cache's sequence axis is sharded over the 'model' mesh axis, GSPMD turns
+    the softmax max/sum reductions into all-reduces — the TPU-native
+    split-KV decode."""
+    out = decode_attention_segments(q, [(k_cache, v_cache, 0)],
+                                    length=length)
+    return out
+
+
+def decode_attention_segments(
+    q: Array,                      # (b, 1, h, hd)
+    segments: list,                # [(k, v, position_offset), ...]
+    length: Optional[Array] = None,
+) -> Array:
+    """Decode attention over disjoint cache segments with a score-level
+    merge: the mixed-precision cache's hi (64-token int8) and lo (int4)
+    regions are attended separately and their scores concatenated — K/V are
+    never concatenated along the GSPMD-sharded sequence axis (that concat
+    reshards the whole cache by a 64-token offset every layer; §Perf).
+    Matmuls keep bf16 operands with f32 accumulation (MXU-native)."""
+    b, _, h, hd = q.shape
+    g = segments[0][0].shape[2]
+    rep = h // g
+    scale = 1.0 / np.sqrt(hd)
+    qg = (q.reshape(b, g, rep, hd) * scale).astype(segments[0][0].dtype)
+
+    # per-segment online-softmax statistics, merged at the end — NO
+    # cross-segment concatenation (concatenating a replicated 64-token hi
+    # segment with a 16-way-sharded lo segment makes GSPMD replicate the
+    # whole thing, dragging the packed cache through an all-gather).
+    parts = []
+    for k_seg, v_seg, offset in segments:
+        s_seg = k_seg.shape[1]
+        sc = jnp.einsum("bgrd,bsgd->bgrs", qg, k_seg,
+                        preferred_element_type=jnp.float32)
+        if length is not None:
+            pos = offset + jnp.arange(s_seg)[None, None, None, :]
+            mask = pos < length[:, None, None, None]
+            sc = jnp.where(mask, sc, -1e30)
+        m = jnp.max(sc, axis=-1)                        # (b, g, rep)
+        p = jnp.exp(sc - m[..., None])
+        l = jnp.sum(p, axis=-1)
+        o = jnp.einsum("bgrs,bsgd->bgrd", p.astype(k_seg.dtype), v_seg,
+                       preferred_element_type=jnp.float32)
+        parts.append((m, l, o))
+    m_tot = parts[0][0]
+    for m, _, _ in parts[1:]:
+        m_tot = jnp.maximum(m_tot, m)
+    l_tot = jnp.zeros_like(m_tot)
+    o_tot = jnp.zeros_like(parts[0][2])
+    for m, l, o in parts:
+        corr = jnp.exp(m - m_tot)
+        l_tot = l_tot + l * corr
+        o_tot = o_tot + o * corr[..., None]
+    out = o_tot / jnp.maximum(l_tot, 1e-30)[..., None]
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# FFN / MoE
+# ---------------------------------------------------------------------------
+
+
+def swiglu_mlp(x: Array, wi_gate: Array, wi_up: Array, wo: Array) -> Array:
+    g = x @ wi_gate
+    u = x @ wi_up
+    return (jax.nn.silu(g) * u) @ wo
+
+
+def moe_ffn(
+    x: Array,                 # (b, s, d)
+    gate_w: Array,            # (d, E)
+    w_gate: Array,            # (E, d, f)
+    w_up: Array,              # (E, d, f)
+    w_down: Array,            # (E, f, d)
+    experts_per_token: int,
+    capacity_factor: float,
+    group_size: int = 1024,
+) -> Array:
+    """GShard/Switch-style capacity-based top-k MoE.
+
+    Tokens are routed in fixed groups of ``group_size`` (the batch axis is
+    folded with sequence sub-blocks), so the dispatch/combine tensors are
+    (G, g, E, C) with C = k·g/E·cf — total footprint linear in ``group_size``
+    and independent of sequence length.  Partitions over ('data' → G,
+    'model' → E) without ragged ops; the einsum forms lower to
+    all-to-all-like collectives under GSPMD.  Overflowing tokens are dropped
+    (standard capacity semantics).
+    """
+    bsz, seq, d = x.shape
+    gs = min(group_size, seq)
+    assert seq % gs == 0, (seq, gs)
+    x = x.reshape(bsz * (seq // gs), gs, d)
+    b, s, _ = x.shape
+    e = gate_w.shape[-1]
+    k = experts_per_token
+    cap = max(int(np.ceil(s * k / e * capacity_factor)), 1)
+
+    logits = (x.astype(jnp.float32) @ gate_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (b, s, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)              # (b, s, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)                # renormalize
+
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)    # (b, s, k, E)
+    # position of each (token, choice) within its expert queue, top-1 first
+    flat = onehot.transpose(0, 2, 1, 3).reshape(b, k * s, e)   # (b, k*s, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                      # (b, k*s, E)
+    pos = pos.reshape(b, k, s, e).transpose(0, 2, 1, 3)        # (b, s, k, E)
+    keep = (pos < cap) * onehot                                # drop overflow
+    pos_cap = jnp.einsum("bske,bske->bsk", pos, keep)          # position id
+    cap_onehot = jax.nn.one_hot(pos_cap, cap, dtype=jnp.float32)  # (b,s,k,C)
+    # (b, s, E, C) combine weights — cast to the compute dtype immediately:
+    # routing positions need exact f32 cumsums, but the big dispatch/combine
+    # einsums (and their cotangents, which GSPMD moves through expert
+    # all-to-alls) must stay bf16 (§Perf arctic iter 3).
+    combine = jnp.einsum("bsk,bske,bskc->bsec",
+                         gate_vals, keep, cap_onehot).astype(x.dtype)
+    dispatch = (combine > 0).astype(x.dtype)
+
+    xin = jnp.einsum("bsec,bsd->becd", dispatch, x)            # (b, E, C, d)
+    g = jnp.einsum("becd,edf->becf", xin, w_gate.astype(x.dtype))
+    u = jnp.einsum("becd,edf->becf", xin, w_up.astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    out = jnp.einsum("becf,efd->becd", h, w_down.astype(x.dtype))
+    y = jnp.einsum("bsec,becd->bsd", combine, out)
+    return y.reshape(bsz, seq, d)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 / SSD (chunked, state-passing scan)
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(
+    x: Array,        # (b, s, h, p)   — per-head inputs
+    dt: Array,       # (b, s, h)      — softplus'd step sizes
+    a_log: Array,    # (h,)           — per-head log decay (A = -exp(a_log))
+    b_mat: Array,    # (b, s, n)      — input projection B (single group)
+    c_mat: Array,    # (b, s, n)      — output projection C
+    chunk: int = 256,
+    init_state: Optional[Array] = None,   # (b, h, p, n)
+) -> tuple[Array, Array]:
+    """State Space Duality (Mamba2 §6) chunked algorithm.
+
+    Within a chunk the recurrence is computed in its quadratic 'attention'
+    dual form; across chunks a `lax.scan` carries the (b, h, p, n) state.
+    Returns (y, final_state).
+    """
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    a = -jnp.exp(a_log.astype(jnp.float32))                    # (h,)
+    dta = dt.astype(jnp.float32) * a[None, None, :]            # (b, s, h)
+
+    xc = x.reshape(bsz, nc, chunk, h, p).transpose(1, 0, 2, 3, 4)
+    dtac = dta.reshape(bsz, nc, chunk, h).transpose(1, 0, 2, 3)
+    dtc = dt.astype(jnp.float32).reshape(bsz, nc, chunk, h).transpose(1, 0, 2, 3)
+    bc = b_mat.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+    cc = c_mat.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def body(state, inp):
+        xk, dtak, dtk, bk, ck = inp        # leading dim = b
+        # cumulative decay within the chunk
+        cum = jnp.cumsum(dtak, axis=1)                      # (b, c, h)
+        # intra-chunk 'attention' matrix L_ij = exp(cum_i - cum_j) (i >= j)
+        seg = cum[:, :, None, :] - cum[:, None, :, :]       # (b, c, c, h)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        l = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0)
+        # scores: C_i · B_j weighted by decay and dt_j
+        cb = jnp.einsum("bin,bjn->bij", ck, bk)             # (b, c, c)
+        w = cb[..., None] * l * dtk[:, None, :, :]          # (b, c, c, h)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, xk)
+        # contribution of the incoming state
+        decay_in = jnp.exp(cum)                             # (b, c, h)
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp", ck, state, decay_in)
+        # chunk summary -> next state
+        decay_out = jnp.exp(cum[:, -1:, :] - cum)           # (b, c, h)
+        state_new = (state * jnp.exp(cum[:, -1])[:, :, None, None]
+                     + jnp.einsum("bjn,bjhp,bjh,bjh->bhpn",
+                                  bk, xk, decay_out, dtk))
+        return state_new, (y_intra + y_inter)
+
+    state, yc = jax.lax.scan(body, init_state, (xc, dtac, dtc, bc, cc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(bsz, s, h, p)
+    return y.astype(x.dtype), state
+
+
+def causal_conv1d(x: Array, w: Array, cache: Optional[Array] = None
+                  ) -> tuple[Array, Array]:
+    """Depthwise causal conv along seq.  x: (b, s, d); w: (width, d).
+    Returns (y, new_cache) where cache holds the last (width-1) inputs."""
+    width = w.shape[0]
+    if cache is None:
+        cache = jnp.zeros((x.shape[0], width - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([cache, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(width))
+    new_cache = xp[:, -(width - 1):] if width > 1 else cache
+    return jax.nn.silu(y), new_cache

@@ -1,0 +1,686 @@
+"""Unified LM: dense / MoE / hybrid / SSM / enc-dec, train + prefill + decode.
+
+Layer stacking follows the period plan from ``ModelConfig.layer_plan()``:
+periods are `lax.scan`'d (compact HLO at 512-way SPMD), layers inside a
+period are unrolled.  Parameters are stored f32 and cast to bf16 at use
+(classic mixed precision); serving paths optionally swap the large matmuls
+for packed-int4 weights (paper's W4) and always run the mixed-precision
+quantized KV cache + STaMP activation fake-quant when enabled.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.stamp import StampConfig, stamp_fake_quant
+from repro.core.quant import fake_quant
+from repro.models import layers as L
+from repro.models.config import LayerSpec, ModelConfig, ShapeConfig
+from repro.serving import kvcache as KV
+from repro.sharding import ShardingPolicy, constrain
+
+Array = jax.Array
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Inference-time quantization configuration (the paper's W4A4KV4)."""
+
+    stamp: Optional[StampConfig] = None          # activation STaMP at prefill
+    kv: KV.KVCacheConfig = KV.KVCacheConfig()
+    weight_bits: Optional[int] = None            # 4 => packed-int4 weights
+    cache_capacity: Optional[int] = None         # reserve room for decode
+    fused_cache_attention: bool = False          # Pallas kernel decode path
+    # (TPU deployment; on CPU runs in interpret mode — see
+    #  kernels/cache_attention.py for the traffic analysis)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, din, dout, dtype, std=None):
+    std = std if std is not None else (1.0 / np.sqrt(din))
+    return (jax.random.normal(key, (din, dout), jnp.float32) * std).astype(dtype)
+
+
+def init_layer_params(key, spec: LayerSpec, cfg: ModelConfig,
+                      dtype=jnp.float32) -> dict:
+    keys = iter(jax.random.split(key, 24))
+    d = cfg.d_model
+    p: dict = {}
+    if spec.mixer == "attn":
+        p["ln1"] = jnp.ones((d,), dtype)
+        p["wq"] = _dense_init(next(keys), d, cfg.q_dim, dtype)
+        p["wk"] = _dense_init(next(keys), d, cfg.kv_dim, dtype)
+        p["wv"] = _dense_init(next(keys), d, cfg.kv_dim, dtype)
+        p["wo"] = _dense_init(next(keys), cfg.q_dim, d, dtype)
+        if cfg.qkv_bias:
+            p["bq"] = jnp.zeros((cfg.q_dim,), dtype)
+            p["bk"] = jnp.zeros((cfg.kv_dim,), dtype)
+            p["bv"] = jnp.zeros((cfg.kv_dim,), dtype)
+        if cfg.encoder_layers:  # decoder layers carry cross-attention
+            p["lnx"] = jnp.ones((d,), dtype)
+            p["xwq"] = _dense_init(next(keys), d, cfg.q_dim, dtype)
+            p["xwk"] = _dense_init(next(keys), d, cfg.kv_dim, dtype)
+            p["xwv"] = _dense_init(next(keys), d, cfg.kv_dim, dtype)
+            p["xwo"] = _dense_init(next(keys), cfg.q_dim, d, dtype)
+    elif spec.mixer == "mamba":
+        di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+        conv_dim = di + 2 * n
+        p["ln1"] = jnp.ones((d,), dtype)
+        p["in_proj"] = _dense_init(next(keys), d, 2 * di + 2 * n + h, dtype)
+        p["conv_w"] = (jax.random.normal(next(keys), (cfg.conv_width, conv_dim),
+                                         jnp.float32) * 0.1).astype(dtype)
+        p["a_log"] = jnp.zeros((h,), jnp.float32)
+        p["dt_bias"] = jnp.full((h,), -2.0, jnp.float32)
+        p["d_skip"] = jnp.ones((h,), jnp.float32)
+        p["ssm_norm"] = jnp.ones((di,), dtype)
+        p["out_proj"] = _dense_init(next(keys), di, d, dtype)
+    if spec.ffn in ("mlp", "moe_dense"):
+        prefix = "d" if spec.ffn == "moe_dense" else ""
+        p["ln2"] = jnp.ones((d,), dtype)
+        p[f"{prefix}wi_gate"] = _dense_init(next(keys), d, cfg.d_ff, dtype)
+        p[f"{prefix}wi_up"] = _dense_init(next(keys), d, cfg.d_ff, dtype)
+        p[f"{prefix}wo_mlp"] = _dense_init(next(keys), cfg.d_ff, d, dtype)
+    if spec.ffn in ("moe", "moe_dense"):
+        e, f = cfg.num_experts, cfg.expert_d_ff
+        p["ln2"] = jnp.ones((d,), dtype)
+        p["gate_w"] = _dense_init(next(keys), d, e, dtype)
+        std = 1.0 / np.sqrt(d)
+        p["we_gate"] = (jax.random.normal(next(keys), (e, d, f), jnp.float32)
+                        * std).astype(dtype)
+        p["we_up"] = (jax.random.normal(next(keys), (e, d, f), jnp.float32)
+                      * std).astype(dtype)
+        p["we_down"] = (jax.random.normal(next(keys), (e, f, d), jnp.float32)
+                        * (1.0 / np.sqrt(f))).astype(dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    pro, period, nper = cfg.layer_plan()
+    k_embed, k_head, k_pro, k_per, k_enc = jax.random.split(key, 5)
+    params: dict = {
+        "embed": (jax.random.normal(k_embed, (cfg.padded_vocab, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = _dense_init(k_head, cfg.d_model, cfg.padded_vocab,
+                                     dtype)
+    if pro:
+        pro_keys = jax.random.split(k_pro, len(pro))
+        params["prologue"] = tuple(
+            init_layer_params(k, s, cfg, dtype) for k, s in zip(pro_keys, pro))
+    per_keys = jax.random.split(k_per, nper)
+    stacked = jax.vmap(
+        lambda k: tuple(init_layer_params(kk, s, cfg, dtype)
+                        for kk, s in zip(jax.random.split(k, len(period)), period))
+    )(per_keys)
+    params["period"] = stacked
+    if cfg.encoder_layers:
+        enc_spec = LayerSpec("attn", "mlp")
+        enc_cfg = dataclasses.replace(cfg, encoder_layers=0)  # no cross in enc
+        enc_keys = jax.random.split(k_enc, cfg.encoder_layers)
+        params["encoder"] = {
+            "period": jax.vmap(
+                lambda k: (init_layer_params(k, enc_spec, enc_cfg, dtype),)
+            )(enc_keys),
+            "final_norm": jnp.ones((cfg.d_model,), dtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# (possibly quantized) linears
+# ---------------------------------------------------------------------------
+
+
+def _linear(x: Array, w, b=None) -> Array:
+    """Matmul accepting a plain array or a packed-int4 dict
+    ``{"q": (din/2, dout) uint8, "scale": (1, dout), "zp": (1, dout)}``."""
+    if isinstance(w, dict):
+        wd = _dequant_packed(w, x.dtype)
+    else:
+        wd = w.astype(x.dtype)
+    y = x @ wd
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def _dequant_packed(w: dict, dtype) -> Array:
+    # arithmetic entirely in the target dtype: an f32 dequant intermediate
+    # becomes the tensor GSPMD all-gathers for FSDP-sharded weights (2×
+    # the bytes of bf16, 8× the packed bytes); zp ≤ 15 and int4 codes are
+    # exact in bf16 (§Perf decode iter 4).
+    q = KV.unpack_nibbles(jnp.swapaxes(w["q"], -1, -2)).astype(dtype)
+    q = jnp.swapaxes(q, -1, -2)                              # (din, dout)
+    return (q - w["zp"].astype(dtype)) * w["scale"].astype(dtype)
+
+
+def quantize_weights_for_serving(params: Pytree, bits: int = 4) -> Pytree:
+    """Pack the large matmul weights to int4 (nibbles along d_in).  Norms,
+    biases, embeddings and small SSM params stay bf16/f32."""
+    big = ("wq", "wk", "wv", "wo", "xwq", "xwk", "xwv", "xwo",
+           "wi_gate", "wi_up", "wo_mlp", "dwi_gate", "dwi_up", "dwo_mlp",
+           "we_gate", "we_up", "we_down", "in_proj", "out_proj")
+
+    def visit(tree):
+        if isinstance(tree, dict):
+            return {k: (pack_weight(v, bits) if k in big else visit(v))
+                    for k, v in tree.items()}
+        if isinstance(tree, tuple):
+            return tuple(visit(t) for t in tree)
+        return tree
+
+    return visit(params)
+
+
+def pack_weight(w: Array, bits: int = 4) -> dict:
+    """(…, din, dout) → packed dict; per-output-channel asymmetric scales."""
+    n = float(2**bits - 1)
+    wf = w.astype(jnp.float32)
+    mn = jnp.min(wf, axis=-2, keepdims=True)
+    mx = jnp.max(wf, axis=-2, keepdims=True)
+    scale = jnp.maximum((mx - mn) / n, 1e-8)
+    zp = jnp.round(-mn / scale)
+    q = jnp.clip(jnp.round(wf / scale) + zp, 0.0, n)
+    qt = jnp.swapaxes(q, -1, -2)                             # (dout, din)
+    packed = KV.pack_nibbles(qt)
+    return {"q": jnp.swapaxes(packed, -1, -2), "scale": scale, "zp": zp}
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+_FUSED_CACHE_ATTENTION = False
+
+
+def kw_fused(kv_cfg) -> bool:
+    return _FUSED_CACHE_ATTENTION
+
+
+def set_fused_cache_attention(enabled: bool) -> None:
+    """Route decode attention through the Pallas packed-cache kernel
+    (kernels/cache_attention.py).  Module-level switch so the functional
+    layer code stays signature-stable; the serving engine sets it from
+    ``ServeConfig.fused_cache_attention``."""
+    global _FUSED_CACHE_ATTENTION
+    _FUSED_CACHE_ATTENTION = enabled
+
+
+def _maybe_stamp(x: Array, stamp: Optional[StampConfig]) -> Array:
+    if stamp is None or not stamp.enabled:
+        return x
+    return stamp_fake_quant(x, stamp)
+
+
+def _split_heads(x: Array, nh: int, hd: int) -> Array:
+    return x.reshape(*x.shape[:-1], nh, hd)
+
+
+def _merge_heads(x: Array) -> Array:
+    return x.reshape(*x.shape[:-2], x.shape[-2] * x.shape[-1])
+
+
+def attn_block(
+    p: dict, x: Array, cfg: ModelConfig, *,
+    mode: str, positions: Array, policy: Optional[ShardingPolicy],
+    stamp: Optional[StampConfig], kv_cfg: KV.KVCacheConfig,
+    cache_entry: Optional[dict] = None, pos_scalar: Optional[Array] = None,
+    enc_out: Optional[Array] = None, causal: bool = True,
+    cache_capacity: Optional[int] = None,
+) -> tuple[Array, Optional[dict]]:
+    hd, nh, kvh = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
+    h = L.rms_norm(x, p["ln1"].astype(x.dtype), cfg.norm_eps)
+    h = _maybe_stamp(h, stamp)
+    q = _linear(h, p["wq"], p.get("bq"))
+    k = _linear(h, p["wk"], p.get("bk"))
+    v = _linear(h, p["wv"], p.get("bv"))
+    q = apply_rope_heads(q, positions, cfg, nh, hd)
+    k = apply_rope_heads(k, positions, cfg, kvh, hd)
+    v = _split_heads(v, kvh, hd)
+
+    new_entry: Optional[dict] = None
+    if mode == "decode":
+        assert cache_entry is not None
+        new_entry = KV.write_token(cache_entry, k, v, pos_scalar, kv_cfg)
+        length = pos_scalar[None] + 1
+        if kv_cfg.quantized and kw_fused(kv_cfg):
+            from repro.kernels.cache_attention import cache_decode_attention
+            attn = cache_decode_attention(new_entry, q, length)
+        elif kv_cfg.quantized:
+            (k_hi, v_hi), (k_lo, v_lo) = KV.dequantize_segments(
+                new_entry, kv_cfg, x.dtype)
+            if policy is not None:
+                spec = policy.decode_kv_spec(k_lo.shape[0])
+                k_lo = policy.constraint(k_lo, spec)
+                v_lo = policy.constraint(v_lo, spec)
+            hi_len = k_hi.shape[1]
+            attn = L.decode_attention_segments(
+                q, [(k_hi, v_hi, 0), (k_lo, v_lo, hi_len)], length=length)
+        else:
+            kf, vf = KV.dequantize_full(new_entry, kv_cfg, x.dtype)
+            if policy is not None:
+                spec = policy.decode_kv_spec(kf.shape[0])
+                kf = policy.constraint(kf, spec)
+                vf = policy.constraint(vf, spec)
+            attn = L.decode_attention(q, kf, vf, length=length)
+    else:
+        attn = L.flash_attention(q, k, v, causal=causal)
+        if mode == "prefill":
+            new_entry = KV.quantize_full(k, v, kv_cfg, capacity=cache_capacity)
+    out = _merge_heads(attn)
+    out = _maybe_stamp(out, stamp)
+    x = x + _linear(out, p["wo"])
+
+    if enc_out is not None and "xwq" in p:   # cross-attention (enc-dec)
+        hx = L.rms_norm(x, p["lnx"].astype(x.dtype), cfg.norm_eps)
+        qx = _split_heads(_linear(hx, p["xwq"]), nh, hd)
+        if mode == "decode" and cache_entry is not None and "xk" in cache_entry:
+            kx = cache_entry["xk"].astype(x.dtype)
+            vx = cache_entry["xv"].astype(x.dtype)
+            ax = L.decode_attention(qx, kx, vx)
+        else:
+            kx = _split_heads(_linear(enc_out, p["xwk"]), kvh, hd)
+            vx = _split_heads(_linear(enc_out, p["xwv"]), kvh, hd)
+            ax = L.flash_attention(qx, kx, vx, causal=False)
+            if mode == "prefill":
+                new_entry = dict(new_entry or {})
+                new_entry["xk"] = kx.astype(jnp.bfloat16)
+                new_entry["xv"] = vx.astype(jnp.bfloat16)
+        ox = _merge_heads(ax)
+        # paper Fig. 5 / Table 4: no sequence transform on cross-attn to_out
+        # (pooled conditioning breaks the Toeplitz structure) — per-token
+        # quant only.
+        if stamp is not None and stamp.enabled:
+            ox = fake_quant(ox, stamp.lo_bits, axis=-1)
+        x = x + _linear(ox, p["xwo"])
+        if mode == "decode" and cache_entry is not None and "xk" in cache_entry:
+            new_entry = dict(new_entry or {})
+            new_entry["xk"] = cache_entry["xk"]
+            new_entry["xv"] = cache_entry["xv"]
+    return x, new_entry
+
+
+def apply_rope_heads(flat: Array, positions: Array, cfg: ModelConfig,
+                     nh: int, hd: int) -> Array:
+    return L.apply_rope(_split_heads(flat, nh, hd), positions, cfg.rope_theta)
+
+
+def mamba_block(
+    p: dict, x: Array, cfg: ModelConfig, *,
+    mode: str, policy: Optional[ShardingPolicy],
+    stamp: Optional[StampConfig],
+    cache_entry: Optional[dict] = None,
+) -> tuple[Array, Optional[dict]]:
+    di, n, nh, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    h = L.rms_norm(x, p["ln1"].astype(x.dtype), cfg.norm_eps)
+    h = _maybe_stamp(h, stamp)
+    proj = _linear(h, p["in_proj"])
+    z, xbc, dt_raw = jnp.split(proj, [di, 2 * di + 2 * n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+
+    new_entry: Optional[dict] = None
+    if mode == "decode":
+        assert cache_entry is not None
+        conv_cache = cache_entry["conv"]
+        xp = jnp.concatenate([conv_cache.astype(x.dtype), xbc], axis=1)
+        w = p["conv_w"].astype(x.dtype)
+        y = sum(xp[:, i:i + 1] * w[i][None, None] for i in range(w.shape[0]))
+        xbc_c = jax.nn.silu(y)
+        new_conv = xp[:, 1:]
+        x_ssm, b_mat, c_mat = jnp.split(xbc_c, [di, di + n], axis=-1)
+        xh = x_ssm.reshape(*x_ssm.shape[:-1], nh, pd)
+        state = cache_entry["state"]
+        a = -jnp.exp(p["a_log"])
+        da = jnp.exp(dt[:, 0] * a[None])                      # (b, h)
+        upd = jnp.einsum("bhp,bn,bh->bhpn", xh[:, 0].astype(jnp.float32),
+                         b_mat[:, 0].astype(jnp.float32), dt[:, 0])
+        state = state * da[..., None, None] + upd
+        yh = jnp.einsum("bn,bhpn->bhp", c_mat[:, 0].astype(jnp.float32), state)
+        yh = yh[:, None] + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+        new_entry = {"state": state, "conv": new_conv.astype(conv_cache.dtype)}
+    else:
+        xbc_c, conv_tail = L.causal_conv1d(xbc, p["conv_w"].astype(x.dtype))
+        x_ssm, b_mat, c_mat = jnp.split(xbc_c, [di, di + n], axis=-1)
+        xh = x_ssm.reshape(*x_ssm.shape[:-1], nh, pd)
+        yh, state = L.ssd_chunked(xh, dt, p["a_log"], b_mat, c_mat)
+        yh = yh.astype(jnp.float32) + p["d_skip"][None, None, :, None] * \
+            xh.astype(jnp.float32)
+        if mode == "prefill":
+            new_entry = {"state": state, "conv": conv_tail.astype(jnp.bfloat16)}
+    y = yh.reshape(*yh.shape[:-2], di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = L.rms_norm(y, p["ssm_norm"].astype(x.dtype), cfg.norm_eps)
+    y = _maybe_stamp(y, stamp) if mode != "decode" else y
+    return x + _linear(y, p["out_proj"]), new_entry
+
+
+def ffn_block(p: dict, x: Array, spec: LayerSpec, cfg: ModelConfig, *,
+              stamp: Optional[StampConfig]) -> Array:
+    if spec.ffn == "none":
+        return x
+    h = L.rms_norm(x, p["ln2"].astype(x.dtype), cfg.norm_eps)
+    h = _maybe_stamp(h, stamp)
+    out = jnp.zeros_like(x)
+    if spec.ffn in ("moe", "moe_dense"):
+        gate_w = (p["gate_w"] if not isinstance(p["gate_w"], dict)
+                  else _dequant_packed(p["gate_w"], jnp.float32))
+        we_gate = _expert_w(p["we_gate"], x.dtype)
+        we_up = _expert_w(p["we_up"], x.dtype)
+        we_down = _expert_w(p["we_down"], x.dtype)
+        out = out + L.moe_ffn(h, gate_w, we_gate, we_up, we_down,
+                              cfg.experts_per_token, cfg.capacity_factor,
+                              group_size=cfg.moe_group_size)
+    if spec.ffn in ("mlp", "moe_dense"):
+        prefix = "d" if spec.ffn == "moe_dense" else ""
+        g = _maybe_stamp(
+            jax.nn.silu(_linear(h, p[f"{prefix}wi_gate"])) *
+            _linear(h, p[f"{prefix}wi_up"]), stamp)
+        out = out + _linear(g, p[f"{prefix}wo_mlp"])
+    return x + out
+
+
+def _expert_w(w, dtype):
+    if isinstance(w, dict):
+        return _dequant_packed(w, dtype)
+    return w.astype(dtype)
+
+
+def apply_block(spec: LayerSpec, p: dict, x: Array, cfg: ModelConfig, **kw
+                ) -> tuple[Array, Optional[dict]]:
+    stamp = kw.get("stamp")
+    if spec.mixer == "attn":
+        x, entry = attn_block(p, x, cfg, mode=kw["mode"],
+                              positions=kw["positions"], policy=kw.get("policy"),
+                              stamp=stamp, kv_cfg=kw["kv_cfg"],
+                              cache_entry=kw.get("cache_entry"),
+                              pos_scalar=kw.get("pos_scalar"),
+                              enc_out=kw.get("enc_out"),
+                              causal=kw.get("causal", True),
+                              cache_capacity=kw.get("cache_capacity"))
+    elif spec.mixer == "mamba":
+        x, entry = mamba_block(p, x, cfg, mode=kw["mode"],
+                               policy=kw.get("policy"), stamp=stamp,
+                               cache_entry=kw.get("cache_entry"))
+    else:
+        entry = None
+    x = ffn_block(p, x, spec, cfg, stamp=stamp)
+    return x, entry
+
+
+# ---------------------------------------------------------------------------
+# stacks
+# ---------------------------------------------------------------------------
+
+
+def run_stack(
+    params: dict, x: Array, cfg: ModelConfig, *,
+    mode: str, positions: Array, policy: Optional[ShardingPolicy],
+    stamp: Optional[StampConfig] = None,
+    kv_cfg: KV.KVCacheConfig = KV.KVCacheConfig(quantized=False),
+    cache: Optional[dict] = None, pos_scalar: Optional[Array] = None,
+    enc_out: Optional[Array] = None, causal: bool = True, remat: bool = True,
+    cache_capacity: Optional[int] = None,
+) -> tuple[Array, Optional[dict]]:
+    """Run prologue (unrolled) + periods (scanned).  Returns (x, cache)."""
+    pro, period, nper = cfg.layer_plan()
+    kw = dict(mode=mode, positions=positions, policy=policy, stamp=stamp,
+              kv_cfg=kv_cfg, pos_scalar=pos_scalar, enc_out=enc_out,
+              causal=causal, cache_capacity=cache_capacity)
+
+    new_pro_cache = {}
+    for i, spec in enumerate(pro):
+        entry = None if cache is None else cache.get(f"pro{i}")
+        x, ne = apply_block(spec, params["prologue"][i], x, cfg,
+                            cache_entry=entry, **kw)
+        if ne is not None:
+            new_pro_cache[f"pro{i}"] = ne
+
+    stateful = [j for j, s in enumerate(period) if s.mixer in ("attn", "mamba")]
+    cache_per = None
+    if cache is not None:
+        cache_per = {str(j): cache[str(j)] for j in stateful
+                     if str(j) in cache}
+
+    if mode == "decode" and cache_per is not None and False:
+        # DISABLED (§Perf decode iter 6): carrying the cache and updating at
+        # a dynamic layer index forces XLA to COPY the full stacked buffers
+        # every layer (read-before-write kills aliasing) — 4×0.67 GB/layer
+        # measured.  The xs/ys path below only moves per-layer slices, and
+        # with one-hot token writes it no longer triggers GSPMD gathers.
+        def body(carry, p_slice):
+            xc, cache_c, idx = carry
+            cache_next = dict(cache_c)
+            for j, spec in enumerate(period):
+                entry = None
+                if str(j) in cache_c:
+                    entry = jax.tree.map(
+                        lambda a: jax.lax.dynamic_index_in_dim(
+                            a, idx, 0, keepdims=False), cache_c[str(j)])
+                xc, ne = apply_block(spec, p_slice[j], xc, cfg,
+                                     cache_entry=entry, **kw)
+                if ne is not None:
+                    cache_next[str(j)] = jax.tree.map(
+                        lambda full, upd: jax.lax.dynamic_update_index_in_dim(
+                            full, upd, idx, 0), cache_next[str(j)], ne)
+            xc = constrain(xc, policy, lambda pol: pol.acts())
+            return (xc, cache_next, idx + 1), ()
+
+        (x, cache_out, _), _ = jax.lax.scan(
+            body, (x, cache_per, jnp.zeros((), jnp.int32)),
+            params["period"])
+        new_cache = dict(cache_out)
+        new_cache.update(new_pro_cache)
+        return x, new_cache
+
+    def body(xc, xs):
+        p_slice, c_slice = xs
+        new_entries = {}
+        for j, spec in enumerate(period):
+            entry = None if c_slice is None else c_slice.get(str(j))
+            xc, ne = apply_block(spec, p_slice[j], xc, cfg,
+                                 cache_entry=entry, **kw)
+            if ne is not None:
+                new_entries[str(j)] = ne
+        xc = constrain(xc, policy, lambda pol: pol.acts())
+        return xc, new_entries
+
+    if mode == "train" and remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    xs = (params["period"], cache_per)
+    x, period_cache = jax.lax.scan(body, x, xs)
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = dict(period_cache)
+        new_cache.update(new_pro_cache)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# losses / steps
+# ---------------------------------------------------------------------------
+
+
+def chunked_xent(x: Array, head, labels: Array, chunk: int = 512) -> Array:
+    """Cross-entropy without materializing (b, s, vocab): scan over sequence
+    chunks (each chunk's logits live only inside the scan body).  Labels < 0
+    are ignored (VLM patch positions)."""
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nch = s // chunk
+    xs = x.reshape(b, nch, chunk, d).swapaxes(0, 1)
+    ls = labels.reshape(b, nch, chunk).swapaxes(0, 1)
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def body(tot, inp):
+        xc, lc = inp
+        logits = _linear(xc, head).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        valid = (lc >= 0).astype(jnp.float32)
+        loss = jnp.sum((logz - gold) * valid)
+        return (tot[0] + loss, tot[1] + jnp.sum(valid)), ()
+
+    (loss, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xs, ls))
+    return loss / jnp.maximum(cnt, 1.0)
+
+
+def _embed(params, tokens: Array, dtype=jnp.bfloat16) -> Array:
+    return jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+
+
+def _head_weight(params):
+    if "head" in params:
+        return params["head"]
+    return params["embed"].T
+
+
+def _encoder_forward(params, frames: Array, cfg: ModelConfig,
+                     policy, mode: str) -> Array:
+    enc = params["encoder"]
+    enc_cfg = dataclasses.replace(cfg, encoder_layers=0)
+    pos = jnp.arange(frames.shape[1])[None, :]
+    x = frames
+
+    def body(xc, p_slice):
+        xc, _ = apply_block(LayerSpec("attn", "mlp"), p_slice[0], xc, enc_cfg,
+                            mode="train", positions=pos, policy=policy,
+                            stamp=None,
+                            kv_cfg=KV.KVCacheConfig(quantized=False),
+                            causal=False)
+        xc = constrain(xc, policy, lambda pol: pol.acts())
+        return xc, ()
+
+    if mode == "train":
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, enc["period"])
+    return L.rms_norm(x, enc["final_norm"].astype(x.dtype), cfg.norm_eps)
+
+
+def model_hidden(params, batch: dict, cfg: ModelConfig, *,
+                 mode: str, policy, stamp=None,
+                 kv_cfg=KV.KVCacheConfig(quantized=False),
+                 remat: bool = True,
+                 cache_capacity: Optional[int] = None
+                 ) -> tuple[Array, Optional[dict], Array]:
+    """Shared train/prefill forward.  Returns (hidden, cache, labels)."""
+    compute_dtype = jnp.bfloat16
+    labels = batch.get("labels")
+    enc_out = None
+    if cfg.frontend == "frames" or cfg.encoder_layers:
+        enc_out = _encoder_forward(params, batch["frames"].astype(compute_dtype),
+                                   cfg, policy, mode)
+        x = _embed(params, batch["tokens"], compute_dtype)
+    elif cfg.frontend == "patch":
+        tok = _embed(params, batch["tokens"], compute_dtype)
+        x = jnp.concatenate([batch["patches"].astype(compute_dtype), tok],
+                            axis=1)
+    else:
+        x = _embed(params, batch["tokens"], compute_dtype)
+    x = constrain(x, policy, lambda pol: pol.acts())
+    positions = jnp.arange(x.shape[1])[None, :]
+    x, cache = run_stack(params, x, cfg, mode=mode, positions=positions,
+                         policy=policy, stamp=stamp, kv_cfg=kv_cfg,
+                         enc_out=enc_out, remat=remat,
+                         cache_capacity=cache_capacity)
+    x = L.rms_norm(x, params["final_norm"].astype(x.dtype), cfg.norm_eps)
+    return x, cache, labels
+
+
+def train_loss(params, batch: dict, cfg: ModelConfig,
+               policy: Optional[ShardingPolicy] = None,
+               remat: bool = True) -> Array:
+    x, _, labels = model_hidden(params, batch, cfg, mode="train",
+                                policy=policy, remat=remat)
+    return chunked_xent(x, _head_weight(params), labels)
+
+
+def prefill(params, batch: dict, cfg: ModelConfig,
+            serve: ServeConfig, policy: Optional[ShardingPolicy] = None
+            ) -> tuple[Array, dict]:
+    """Full-sequence forward with STaMP activation quantization, producing
+    next-token logits and the mixed-precision quantized KV cache."""
+    x, cache, _ = model_hidden(params, batch, cfg, mode="prefill",
+                               policy=policy, stamp=serve.stamp,
+                               kv_cfg=serve.kv, remat=False,
+                               cache_capacity=serve.cache_capacity)
+    logits = _linear(x[:, -1:], _head_weight(params))[:, 0]
+    return logits.astype(jnp.float32), cache
+
+
+def decode_step(params, cache: dict, tokens: Array, pos: Array,
+                cfg: ModelConfig, serve: ServeConfig,
+                policy: Optional[ShardingPolicy] = None
+                ) -> tuple[Array, dict]:
+    """One-token decode against the quantized cache.  ``tokens``: (b,) int32;
+    ``pos``: scalar int32 current length."""
+    set_fused_cache_attention(serve.fused_cache_attention)
+    compute_dtype = jnp.bfloat16
+    x = _embed(params, tokens[:, None], compute_dtype)
+    positions = jnp.full((1, 1), pos, jnp.int32)
+    x, new_cache = run_stack(params, x, cfg, mode="decode",
+                             positions=positions, policy=policy,
+                             stamp=None, kv_cfg=serve.kv, cache=cache,
+                             pos_scalar=pos)
+    x = L.rms_norm(x, params["final_norm"].astype(x.dtype), cfg.norm_eps)
+    logits = _linear(x[:, 0], _head_weight(params))
+    return logits.astype(jnp.float32), new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int,
+               serve: ServeConfig) -> dict:
+    """Zero-initialized decode cache for every stateful layer position."""
+    pro, period, nper = cfg.layer_plan()
+    hd, kvh = cfg.resolved_head_dim, cfg.num_kv_heads
+    cache: dict = {}
+
+    def attn_entry(periods):
+        entry = KV.init_layer_cache(periods, batch, seq, kvh, hd, serve.kv)
+        if cfg.encoder_layers:
+            s_enc = max(seq // cfg.frame_ratio, 1)
+            entry["xk"] = jnp.zeros((periods, batch, s_enc, kvh, hd),
+                                    jnp.bfloat16)
+            entry["xv"] = jnp.zeros((periods, batch, s_enc, kvh, hd),
+                                    jnp.bfloat16)
+        return entry
+
+    def ssm_entry(periods):
+        di, n, nh, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+        return {
+            "state": jnp.zeros((periods, batch, nh, pd, n), jnp.float32),
+            "conv": jnp.zeros((periods, batch, cfg.conv_width - 1,
+                               di + 2 * n), jnp.bfloat16),
+        }
+
+    for j, spec in enumerate(period):
+        if spec.mixer == "attn":
+            cache[str(j)] = attn_entry(nper)
+        elif spec.mixer == "mamba":
+            cache[str(j)] = ssm_entry(nper)
+    for i, spec in enumerate(pro):
+        if spec.mixer == "attn":
+            cache[f"pro{i}"] = jax.tree.map(lambda a: a[0], attn_entry(1))
+        elif spec.mixer == "mamba":
+            cache[f"pro{i}"] = jax.tree.map(lambda a: a[0], ssm_entry(1))
+    return cache

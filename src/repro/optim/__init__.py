@@ -1,0 +1,7 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update  # noqa: F401
+from repro.optim.schedules import make_schedule  # noqa: F401
+from repro.optim.compression import (  # noqa: F401
+    compress_gradients,
+    decompress_gradients,
+    error_feedback_update,
+)

@@ -1,0 +1,47 @@
+"""Learning-rate schedules: cosine and WSD (warmup–stable–decay).
+
+MiniCPM (arXiv:2404.06395) trains with WSD — the assigned minicpm-2b config
+selects it via ``ModelConfig.schedule = 'wsd'``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1) -> Callable:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+def wsd_schedule(peak_lr: float, warmup: int, total: int,
+                 decay_frac: float = 0.1, min_ratio: float = 0.01) -> Callable:
+    """Warmup → stable plateau → sharp (exponential) decay over the final
+    ``decay_frac`` of training (MiniCPM §4)."""
+    decay_start = int(total * (1 - decay_frac))
+
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - decay_start) / max(total - decay_start, 1),
+                        0.0, 1.0)
+        decay = peak_lr * jnp.exp(jnp.log(min_ratio) * frac)
+        out = jnp.where(step < warmup, warm, peak_lr)
+        return jnp.where(step >= decay_start, decay, out)
+    return fn
+
+
+def make_schedule(kind: str, peak_lr: float, warmup: int, total: int) -> Callable:
+    if kind == "wsd":
+        return wsd_schedule(peak_lr, warmup, total)
+    return cosine_schedule(peak_lr, warmup, total)

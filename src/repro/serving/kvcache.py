@@ -1,0 +1,240 @@
+"""Mixed-precision quantized KV cache — STaMP's W4A4**KV4**(+64@8b) setting.
+
+Layout per attention stack (stacked over scan periods ``P``):
+
+* ``k_hi / v_hi``    — ``(P, b, num_hi, kv, hd)`` **int8** — the first
+  ``num_hi`` (=64) tokens, kept at 8 bits (§B.2: the attention-sink token and
+  its neighbours carry massive outliers).
+* ``k_lo / v_lo``    — ``(P, b, s−num_hi, kv, hd/2)`` **uint8**, two int4
+  nibbles packed along ``head_dim``.
+* ``*_scale, *_zp``  — ``(P, b, s, kv)`` float16 per-token/per-head dynamic
+  quantization params (§B.2: per token, sequence and head; f16 is exact for
+  zp ≤ 255 and halves metadata traffic — §Perf decode iter 7).
+
+Effective width: (64·8 + (s−64)·4)/s ≈ 4.008 bits at s=32k — the paper's
+4.125 at s=2k.  The sequence axis is sharded over the ``model`` mesh axis
+(context-parallel decode); all pack/unpack ops are token-local so the layout
+shards cleanly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_EPS = 1e-8
+
+
+@dataclasses.dataclass(frozen=True)
+class KVCacheConfig:
+    quantized: bool = True
+    num_hi: int = 64
+    hi_bits: int = 8
+    lo_bits: int = 4
+
+
+# ---------------------------------------------------------------------------
+# token-level quant/dequant + nibble packing
+# ---------------------------------------------------------------------------
+
+
+def quant_tokens(x: Array, bits: int) -> tuple[Array, Array, Array]:
+    """Per-(token, head) asymmetric min-max quant over head_dim.
+    x: (..., kv, hd) → (q float-valued ints, scale, zp) with scale/zp
+    reduced over hd."""
+    xf = x.astype(jnp.float32)
+    mn = jnp.min(xf, axis=-1)
+    mx = jnp.max(xf, axis=-1)
+    n = float(2**bits - 1)
+    scale = jnp.maximum((mx - mn) / n, _EPS)
+    zp = jnp.round(-mn / scale)
+    q = jnp.clip(jnp.round(xf / scale[..., None]) + zp[..., None], 0.0, n)
+    return q, scale, zp
+
+
+def to_signed8(q: Array, zp: Array) -> tuple[Array, Array]:
+    """Shift unsigned 8-bit codes (0..255) into int8 storage (−128..127);
+    shifting the zero point identically keeps ``(q − zp)·s`` unchanged."""
+    return (q - 128.0).astype(jnp.int8), zp - 128.0
+
+
+def pack_nibbles(q: Array) -> Array:
+    """(..., hd) int values in [0,15] → (..., hd/2) uint8."""
+    hi = q[..., 0::2].astype(jnp.uint8)
+    lo = q[..., 1::2].astype(jnp.uint8)
+    return (hi << 4) | lo
+
+
+def unpack_nibbles(p: Array) -> Array:
+    """(..., hd/2) uint8 → (..., hd) float ints in [0,15]."""
+    hi = (p >> 4).astype(jnp.float32)
+    lo = (p & 0xF).astype(jnp.float32)
+    out = jnp.stack([hi, lo], axis=-1)
+    return out.reshape(*p.shape[:-1], p.shape[-1] * 2)
+
+
+def dequant_tokens(q: Array, scale: Array, zp: Array, dtype=jnp.bfloat16) -> Array:
+    return ((q - zp[..., None]) * scale[..., None]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# cache init / bulk write (prefill) / single write (decode) / read
+# ---------------------------------------------------------------------------
+
+
+def init_layer_cache(
+    periods: int, batch: int, seq: int, kv_heads: int, head_dim: int,
+    cfg: KVCacheConfig,
+) -> dict:
+    """Zero cache for one attention position in the period pattern."""
+    if not cfg.quantized:
+        return {
+            "k": jnp.zeros((periods, batch, seq, kv_heads, head_dim), jnp.bfloat16),
+            "v": jnp.zeros((periods, batch, seq, kv_heads, head_dim), jnp.bfloat16),
+        }
+    hi = min(cfg.num_hi, seq)
+    lo = seq - hi
+    def mk(dtype, *shape):
+        return jnp.zeros(shape, dtype)
+    return {
+        "k_hi": mk(jnp.int8, periods, batch, hi, kv_heads, head_dim),
+        "v_hi": mk(jnp.int8, periods, batch, hi, kv_heads, head_dim),
+        "k_lo": mk(jnp.uint8, periods, batch, lo, kv_heads, head_dim // 2),
+        "v_lo": mk(jnp.uint8, periods, batch, lo, kv_heads, head_dim // 2),
+        # f16 scales/zero-points: zp ≤ 255 and minmax scales are exact
+        # enough in f16; halves the per-token metadata traffic (§Perf)
+        "k_scale": mk(jnp.float16, periods, batch, seq, kv_heads),
+        "k_zp": mk(jnp.float16, periods, batch, seq, kv_heads),
+        "v_scale": mk(jnp.float16, periods, batch, seq, kv_heads),
+        "v_zp": mk(jnp.float16, periods, batch, seq, kv_heads),
+    }
+
+
+def quantize_full(k: Array, v: Array, cfg: KVCacheConfig,
+                  capacity: Optional[int] = None) -> dict:
+    """Prefill path: quantize a complete (b, s, kv, hd) K/V pair into the
+    cache layout (without the periods axis — caller stacks).  ``capacity``
+    reserves room for subsequent decode tokens (zero-padded tail)."""
+    if not cfg.quantized:
+        kk = k.astype(jnp.bfloat16)
+        vv = v.astype(jnp.bfloat16)
+        if capacity and capacity > k.shape[1]:
+            pad = [(0, 0), (0, capacity - k.shape[1]), (0, 0), (0, 0)]
+            kk, vv = jnp.pad(kk, pad), jnp.pad(vv, pad)
+        return {"k": kk, "v": vv}
+    s = k.shape[1]
+    cap = max(capacity or s, s)
+    hi = min(cfg.num_hi, s)
+    hi_cap = min(cfg.num_hi, cap)
+    out = {}
+    for name, t in (("k", k), ("v", v)):
+        q_hi, sc_hi, zp_hi = quant_tokens(t[:, :hi], cfg.hi_bits)
+        q_lo, sc_lo, zp_lo = quant_tokens(t[:, hi:], cfg.lo_bits)
+        hi_buf, zp_hi = to_signed8(q_hi, zp_hi)
+        lo_buf = pack_nibbles(q_lo)
+        sc = jnp.concatenate([sc_hi, sc_lo], axis=1)
+        zp = jnp.concatenate([zp_hi, zp_lo], axis=1)
+        if cap > s:
+            hi_buf = jnp.pad(hi_buf, [(0, 0), (0, hi_cap - hi),
+                                      (0, 0), (0, 0)])
+            lo_buf = jnp.pad(lo_buf, [(0, 0), (0, (cap - hi_cap) -
+                                               lo_buf.shape[1]),
+                                      (0, 0), (0, 0)])
+            sc = jnp.pad(sc, [(0, 0), (0, cap - s), (0, 0)],
+                         constant_values=1.0)
+            zp = jnp.pad(zp, [(0, 0), (0, cap - s), (0, 0)])
+        out[f"{name}_hi"] = hi_buf
+        out[f"{name}_lo"] = lo_buf
+        out[f"{name}_scale"] = sc.astype(jnp.float16)
+        out[f"{name}_zp"] = zp.astype(jnp.float16)
+    return out
+
+
+def dequantize_full(entry: dict, cfg: KVCacheConfig,
+                    dtype=jnp.bfloat16) -> tuple[Array, Array]:
+    """Cache slice (no periods axis) → bf16 (b, s, kv, hd) K and V.
+
+    NOTE: concatenates the hi/lo regions along the (sharded) sequence axis —
+    under GSPMD this reshards the entire cache by a 64-token offset every
+    layer.  Decode should prefer :func:`dequantize_segments` + segment
+    attention (§Perf iter 3); this path remains for tests/tools.
+    """
+    if not cfg.quantized:
+        return entry["k"].astype(dtype), entry["v"].astype(dtype)
+    (k_hi, v_hi), (k_lo, v_lo) = dequantize_segments(entry, cfg, dtype)
+    k = jnp.concatenate([k_hi, k_lo], axis=1)
+    v = jnp.concatenate([v_hi, v_lo], axis=1)
+    return k, v
+
+
+def dequantize_segments(entry: dict, cfg: KVCacheConfig, dtype=jnp.bfloat16):
+    """((k_hi, v_hi), (k_lo, v_lo)) — no concatenation across the sharded
+    sequence axis; the hi region (64 tokens) stays replicated/tiny."""
+    outs = []
+    for name in ("k", "v"):
+        hi_len = entry[f"{name}_hi"].shape[1]
+        sc, zp = entry[f"{name}_scale"], entry[f"{name}_zp"]
+        hi = dequant_tokens(entry[f"{name}_hi"].astype(jnp.float32),
+                            sc[:, :hi_len], zp[:, :hi_len], dtype)
+        lo_q = unpack_nibbles(entry[f"{name}_lo"])
+        lo = dequant_tokens(lo_q, sc[:, hi_len:], zp[:, hi_len:], dtype)
+        outs.append((hi, lo))
+    (k_hi, k_lo), (v_hi, v_lo) = outs
+    return (k_hi, v_hi), (k_lo, v_lo)
+
+
+def write_token(entry: dict, k_new: Array, v_new: Array, pos: Array,
+                cfg: KVCacheConfig) -> dict:
+    """Decode path: write one (b, 1, kv, hd) K/V at position ``pos``.
+
+    Both the hi (int8) and lo (packed int4) regions are updated at a clamped
+    index and the correct one selected on ``pos < num_hi`` — branch-free, so
+    it lowers to two dynamic-update-slices under jit.
+    """
+    if not cfg.quantized:
+        out = dict(entry)
+        for name, t in (("k", k_new), ("v", v_new)):
+            out[name] = jax.lax.dynamic_update_slice_in_dim(
+                entry[name], t.astype(entry[name].dtype), pos, axis=1)
+        return out
+
+    out = dict(entry)
+    hi_len = entry["k_hi"].shape[1]
+    in_hi = pos < hi_len
+    pos_lo = pos - hi_len
+
+    def onehot_write(buf, token, write_pos, enabled):
+        """Scatter one token along the (possibly GSPMD-sharded) sequence
+        axis via a broadcast compare + select.  A dynamic-update-slice at a
+        traced position on a sharded axis makes GSPMD all-gather the whole
+        buffer (it cannot prove which shard is written); the one-hot form
+        partitions perfectly — each shard touches only its local tile
+        (§Perf decode iter 5)."""
+        s = buf.shape[1]
+        iota = jax.lax.broadcasted_iota(jnp.int32, (1, s) + (1,) * (buf.ndim - 2), 1)
+        hit = (iota == write_pos) & enabled
+        return jnp.where(hit, token.astype(buf.dtype), buf)
+
+    for name, t in (("k", k_new), ("v", v_new)):
+        q8, sc8, zp8 = quant_tokens(t, cfg.hi_bits)
+        q8, zp8 = to_signed8(q8, zp8)
+        q4, sc4, zp4 = quant_tokens(t, cfg.lo_bits)
+        out[f"{name}_hi"] = onehot_write(entry[f"{name}_hi"], q8, pos, in_hi)
+        out[f"{name}_lo"] = onehot_write(entry[f"{name}_lo"],
+                                         pack_nibbles(q4), pos_lo, ~in_hi)
+        sc = jnp.where(in_hi, sc8, sc4)
+        zp = jnp.where(in_hi, zp8, zp4)
+        out[f"{name}_scale"] = onehot_write(entry[f"{name}_scale"], sc, pos,
+                                            jnp.asarray(True))
+        out[f"{name}_zp"] = onehot_write(entry[f"{name}_zp"], zp, pos,
+                                         jnp.asarray(True))
+    return out
+
+
+def cache_bytes(entry: dict) -> int:
+    return sum(int(v.size) * v.dtype.itemsize for v in jax.tree.leaves(entry))

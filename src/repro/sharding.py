@@ -1,0 +1,180 @@
+"""Logical-axis sharding rules (MaxText-style) for the production meshes.
+
+Physical meshes (see ``repro.launch.mesh``):
+
+* single-pod: ``(16, 16)`` over ``("data", "model")``
+* multi-pod:  ``(2, 16, 16)`` over ``("pod", "data", "model")``
+
+Policy:
+
+* **FSDP** — parameters, gradients and optimizer moments are sharded over the
+  data axes on the dimension *not* used for tensor parallelism (ZeRO-3 via
+  GSPMD: the all-gather happens at use).
+* **TP** — the flattened head / ffn / expert dimension is sharded over
+  ``model``.  We deliberately shard the *flat* projections (e.g.
+  ``n_heads·head_dim``) rather than the head axis so meshes larger than the
+  head count (MiniCPM: 36 heads, Arctic: 56) still divide.
+* **Sequence/context parallelism** — activations between blocks are either
+  replicated over ``model`` (baseline) or sequence-sharded (``seq_sharded
+  =True``, the Megatron-SP analogue — a hillclimb lever).  Decode KV caches
+  are always context-parallel: sequence axis over ``model``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    mesh: Mesh
+    multi_pod: bool = False
+    seq_sharded: bool = False          # Megatron-SP-style residual sharding
+    fsdp_over_pod: bool = True         # include 'pod' in the FSDP axes
+    serve_replicated_weights: bool = False   # inference: drop the FSDP axis
+    # (int4 weights fit replicated over 'data'; kills the per-layer
+    #  all-gather that FSDP pays on every decode step)
+
+    @property
+    def batch_axes(self):
+        return ("pod", "data") if self.multi_pod else ("data",)
+
+    @property
+    def fsdp_axes(self):
+        if self.serve_replicated_weights:
+            return ()
+        if self.multi_pod and self.fsdp_over_pod:
+            return ("pod", "data")
+        return ("data",)
+
+    # -- parameter rules ---------------------------------------------------
+
+    def param_spec(self, path: str, ndim: int) -> P:
+        """Rule table keyed on parameter-tree path substrings.  Stacked
+        (scanned) parameters carry a leading period axis mapped to None.
+        Packed-int4 serving weights ("…/wq/q", "…/wq/scale") inherit the
+        parent weight's rule (scale/zp have a broadcast leading dim)."""
+        fsdp, tp = self.fsdp_axes, "model"
+        packed_leaf = None
+        for suffix in ("/q", "/scale", "/zp"):
+            if path.endswith(suffix):
+                packed_leaf = suffix[1:]
+                path = path[: -len(suffix)]
+                break
+        rules = [
+            # embeddings / lm head
+            (r"embed$", P(tp, fsdp)),
+            (r"head$", P(fsdp, tp)),
+            # attention projections (flat head dims)
+            (r"(wq|wk|wv|xwq|xwk|xwv)$", P(fsdp, tp)),
+            (r"(wo|xwo)$", P(tp, fsdp)),
+            (r"(bq|bk|bv)$", P(tp)),
+            # dense mlp
+            (r"(wi_gate|wi_up|dwi_gate|dwi_up)$", P(fsdp, tp)),
+            (r"(wo_mlp|dwo)$", P(tp, fsdp)),
+            # moe
+            (r"gate_w$", P(fsdp, None)),
+            (r"(we_gate|we_up)$", P(tp, fsdp, None)),
+            (r"we_down$", P(tp, None, fsdp)),
+            # mamba
+            (r"in_proj$", P(fsdp, tp)),
+            (r"out_proj$", P(tp, fsdp)),
+            (r"(conv_w|a_log|d_skip|dt_bias|ssm_norm)$", P()),
+            # norms / scalars
+            (r"(ln1|ln2|lnx|final_norm|enc_final_norm)$", P()),
+        ]
+        spec = None
+        for pat, s in rules:
+            if re.search(pat, path):
+                spec = s
+                break
+        if spec is None:
+            spec = P()
+        if packed_leaf in ("scale", "zp") and len(spec) >= 2:
+            # (…, 1, dout): keep only the output-dim sharding
+            spec = P(*spec[:-2], None, spec[-1])
+        # stacked-layer leading axis
+        extra = ndim - len(spec)
+        if extra > 0:
+            spec = P(*([None] * extra), *spec)
+        return spec
+
+    def params_shardings(self, params_shapes: Pytree) -> Pytree:
+        paths_and_leaves = jax.tree_util.tree_flatten_with_path(params_shapes)
+        flat, treedef = paths_and_leaves
+        out = []
+        for path, leaf in flat:
+            parts = []
+            for k in path:
+                if hasattr(k, "key"):
+                    parts.append(str(k.key))
+                elif hasattr(k, "idx"):
+                    parts.append(str(k.idx))
+                else:
+                    parts.append(str(k))
+            name = "/".join(parts)
+            out.append(self.named(self.param_spec(name, len(leaf.shape))))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    # -- activation / data rules -------------------------------------------
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    def tokens(self) -> P:
+        return P(self.batch_axes, None)
+
+    def acts(self) -> P:
+        """Residual-stream constraint between blocks."""
+        if self.seq_sharded:
+            return P(self.batch_axes, "model", None)
+        return P(self.batch_axes, None, None)
+
+    def frontend_embeds(self) -> P:
+        return P(self.batch_axes, None, None)
+
+    def kv_cache(self) -> P:
+        """(periods, b, s, kv, hd)-style caches: batch over data, sequence
+        over model (context-parallel decode)."""
+        return P(None, self.batch_axes, "model", None, None)
+
+    def kv_cache_packed(self) -> P:
+        return self.kv_cache()
+
+    def kv_scale(self) -> P:
+        return P(None, self.batch_axes, "model", None)
+
+    def decode_kv_spec(self, global_batch: int) -> P:
+        """(b, s, kv, hd) dequantized cache slice during decode: keep the
+        sequence axis context-parallel so softmax reduces in place instead of
+        GSPMD replicating the cache."""
+        data = 1
+        for ax in self.batch_axes:
+            data *= self.mesh.shape[ax]
+        if global_batch >= data:
+            return P(self.batch_axes, "model", None, None)
+        return P(None, tuple(self.batch_axes) + ("model",), None, None)
+
+    def ssm_state(self) -> P:
+        # (periods, [pos,] b, h, p, n): batch over data, heads over model
+        return P(None, self.batch_axes, "model", None, None)
+
+    def conv_cache(self) -> P:
+        return P(None, self.batch_axes, None, "model")
+
+    def constraint(self, x: jax.Array, spec: P) -> jax.Array:
+        return jax.lax.with_sharding_constraint(x, self.named(spec))
+
+
+def constrain(x, policy: Optional[ShardingPolicy], spec_fn):
+    """No-op when no policy is supplied (single-device tests)."""
+    if policy is None:
+        return x
+    return policy.constraint(x, spec_fn(policy))

@@ -1,0 +1,110 @@
+"""Unit + property tests for the quantizer (paper §2.1, Eq. 1–3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant as Q
+from repro.core import error_bounds as EB
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed=0, scale=3.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * scale)
+
+
+class TestFakeQuant:
+    def test_roundtrip_error_bounded_by_half_scale(self):
+        x = rand((4, 32, 64))
+        for bits in (2, 4, 8):
+            scale, _ = Q.minmax_scale_offset(x, bits, axis=-1)
+            q = Q.fake_quant(x, bits, axis=-1)
+            assert float(jnp.max(jnp.abs(q - x) - scale / 2)) <= 1e-5
+
+    def test_no_clipping_minmax(self):
+        """Min-max scales guarantee zero clipping error (§2.1)."""
+        x = rand((2, 16, 32), seed=1)
+        scale, zp = Q.minmax_scale_offset(x, 4, axis=-1)
+        q = Q.quantize(x, scale, zp, 4)
+        # extreme values representable exactly (up to rounding)
+        deq = Q.dequantize(q, scale, zp)
+        assert float(jnp.max(jnp.abs(jnp.max(deq, -1) - jnp.max(x, -1)))) < \
+            float(jnp.max(scale))
+
+    def test_idempotent_on_grid(self):
+        x = rand((2, 8, 16), seed=2)
+        q1 = Q.fake_quant(x, 4, axis=-1)
+        q2 = Q.fake_quant(q1, 4, axis=-1)
+        np.testing.assert_allclose(np.asarray(q1), np.asarray(q2),
+                                   rtol=0, atol=1e-5)
+
+    def test_mixed_precision_bits_vector(self):
+        bits = Q.mixed_precision_bits(2048, 64)
+        assert float(bits[0]) == 8 and float(bits[64]) == 4
+        assert abs(Q.average_bits(bits) - 4.125) < 1e-6
+
+    def test_mixed_precision_quant_runs_per_token(self):
+        x = rand((2, 128, 32), seed=3)
+        bits = Q.mixed_precision_bits(128, 16)
+        q = Q.fake_quant(x, bits, axis=-1)
+        # first 16 tokens quantized at 8 bits → smaller error than the tail
+        err_hi = float(jnp.mean((q - x)[:, :16] ** 2))
+        err_lo = float(jnp.mean((q - x)[:, 16:] ** 2))
+        assert err_hi < err_lo
+
+    def test_per_block(self):
+        x = rand((2, 16, 64), seed=4)
+        qb = Q.fake_quant_per_block(x, 4, block_size=16)
+        qt = Q.fake_quant(x, 4, axis=-1)
+        errb = float(jnp.sum((qb - x) ** 2))
+        errt = float(jnp.sum((qt - x) ** 2))
+        assert errb <= errt + 1e-6   # finer granularity never hurts
+
+    def test_ste_gradient(self):
+        x = rand((2, 8, 16), seed=5)
+        g = jax.grad(lambda t: jnp.sum(Q.fake_quant(t, 4, axis=-1)))(x)
+        assert np.isfinite(np.asarray(g)).all()
+        assert float(jnp.abs(g).sum()) > 0
+
+
+class TestWeightQuant:
+    def test_rtn_range_search_beats_plain_minmax(self):
+        rng = np.random.default_rng(0)
+        w = rng.normal(size=(128, 64)).astype(np.float32)
+        w[0, 0] = 20.0   # outlier: range search should clip it
+        plain = Q.rtn_quantize_weight(jnp.asarray(w), bits=4, axis=0,
+                                      num_candidates=1, min_shrink=1.0)
+        searched = Q.rtn_quantize_weight(jnp.asarray(w), bits=4, axis=0)
+        err_p = float(jnp.sum((plain.dequant(jnp.float32) - w) ** 2))
+        err_s = float(jnp.sum((searched.dequant(jnp.float32) - w) ** 2))
+        assert err_s <= err_p
+
+    def test_int_storage(self):
+        w = rand((32, 16), seed=7)
+        qw = Q.rtn_quantize_weight(w, bits=4, axis=0)
+        assert qw.q.dtype == jnp.int8
+        assert int(jnp.max(qw.q)) <= 15 and int(jnp.min(qw.q)) >= 0
+
+
+class TestBounds:
+    def test_eq3_bound_holds(self):
+        x = rand((2, 32, 64), seed=8)
+        for bits in (3, 4, 6):
+            measured = float(EB.measured_error(x, bits))
+            bound = float(EB.eq3_bound(x, bits))
+            assert measured <= bound * (1 + 1e-5)
+
+    @settings(deadline=None, max_examples=20)
+    @given(bits=st.integers(2, 8), seed=st.integers(0, 100))
+    def test_eq3_property(self, bits, seed):
+        x = rand((1, 16, 32), seed=seed)
+        assert float(EB.measured_error(x, bits)) <= \
+            float(EB.eq3_bound(x, bits)) * (1 + 1e-5)
+
+    def test_sqnr_infinite_for_exact(self):
+        x = rand((2, 4, 8), seed=9)
+        assert float(Q.sqnr_db(x, x)) > 80

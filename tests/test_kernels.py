@@ -1,0 +1,161 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, dtype=jnp.float32, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32)).astype(dtype)
+
+
+TOL = {jnp.float32: 1e-5, jnp.bfloat16: 2e-2}
+
+
+class TestHaarDWT:
+    @pytest.mark.parametrize("shape", [(1, 64, 128), (2, 128, 256),
+                                       (3, 256, 128)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("levels", [1, 3])
+    def test_forward(self, shape, dtype, levels):
+        x = rand(shape, dtype)
+        y = ops.haar_dwt_seq(x, levels=levels, interpret=True)
+        yr = ref.haar_dwt_ref(x.astype(jnp.float32), levels=levels)
+        np.testing.assert_allclose(
+            np.asarray(y, np.float32), np.asarray(yr, np.float32),
+            atol=TOL[dtype], rtol=TOL[dtype])
+
+    @pytest.mark.parametrize("levels", [1, 2, 4])
+    def test_inverse_roundtrip(self, levels):
+        x = rand((2, 128, 128), seed=1)
+        y = ops.haar_dwt_seq(x, levels=levels, interpret=True)
+        back = ops.haar_dwt_seq(y, levels=levels, inverse=True,
+                                interpret=True)
+        np.testing.assert_allclose(np.asarray(back), np.asarray(x),
+                                   atol=1e-5)
+
+    def test_vmem_block_autoshrink(self):
+        # long sequence → block_d shrinks to keep the tile inside VMEM
+        x = rand((1, 16384, 16), seed=2)
+        y = ops.haar_dwt_seq(x, levels=3, interpret=True)
+        yr = ref.haar_dwt_ref(x, levels=3)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-5)
+
+
+class TestWHT:
+    @pytest.mark.parametrize("axis", [-2, -1])
+    @pytest.mark.parametrize("shape", [(2, 128, 256), (1, 64, 128)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, axis, shape, dtype):
+        x = rand(shape, dtype, seed=3)
+        y = ops.walsh_hadamard(x, axis=axis, interpret=True)
+        yr = ref.wht_ref(x.astype(jnp.float32), axis=axis)
+        np.testing.assert_allclose(
+            np.asarray(y, np.float32), np.asarray(yr, np.float32),
+            atol=TOL[dtype], rtol=TOL[dtype])
+
+    def test_involution(self):
+        x = rand((2, 128, 128), seed=4)
+        y = ops.walsh_hadamard(ops.walsh_hadamard(x, interpret=True),
+                               interpret=True)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-4)
+
+
+class TestQuantPack:
+    @pytest.mark.parametrize("bits", [4, 8])
+    @pytest.mark.parametrize("shape", [(2, 256, 128), (1, 512, 64)])
+    def test_matches_ref(self, bits, shape):
+        x = rand(shape, seed=5)
+        p, s, z = ops.quantize_pack(x, bits=bits, interpret=True)
+        pr, sr, zr = ref.quant_pack_ref(x, bits=bits)
+        np.testing.assert_array_equal(np.asarray(p, np.int32),
+                                      np.asarray(pr, np.int32))
+        np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+
+    def test_dequant_error_within_half_step(self):
+        x = rand((1, 128, 64), seed=6)
+        p, s, z = ops.quantize_pack(x, bits=4, interpret=True)
+        deq = ref.unpack_dequant_ref(p, s, z, bits=4)
+        assert float(jnp.max(jnp.abs(deq - x))) <= float(jnp.max(s)) / 2 + 1e-6
+
+
+class TestInt8Matmul:
+    @pytest.mark.parametrize("mnk", [(128, 128, 128), (256, 128, 384),
+                                     (128, 256, 512)])
+    def test_matches_ref(self, mnk):
+        m, n, k = mnk
+        rng = np.random.default_rng(7)
+        qx = jnp.asarray(rng.integers(0, 16, (m, k)), jnp.int8)
+        qw = jnp.asarray(rng.integers(0, 16, (k, n)), jnp.int8)
+        sx = jnp.asarray(rng.uniform(0.01, 0.1, (m, 1)).astype(np.float32))
+        zx = jnp.asarray(rng.integers(0, 16, (m, 1)).astype(np.float32))
+        sw = jnp.asarray(rng.uniform(0.01, 0.1, (1, n)).astype(np.float32))
+        zw = jnp.asarray(rng.integers(0, 16, (1, n)).astype(np.float32))
+        y = ops.int8_matmul(qx, qw, sx, zx, sw, zw, out_dtype=jnp.float32,
+                            interpret=True)
+        yr = ref.int8_matmul_ref(qx, qw, sx, zx, sw, zw)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_quantize_then_matmul_approximates_float(self):
+        """The full W4A8 path ≈ the float matmul it replaces."""
+        rng = np.random.default_rng(8)
+        x = jnp.asarray(rng.normal(size=(1, 128, 256)).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=(256, 128)).astype(np.float32) * 0.05)
+        qx, sx, zx = ops.quantize_pack(x, bits=8, interpret=True)
+        # weight: per-column 4-bit
+        n = 15.0
+        mn, mx = w.min(0, keepdims=True), w.max(0, keepdims=True)
+        swt = jnp.maximum((mx - mn) / n, 1e-8)
+        zwt = jnp.round(-mn / swt)
+        qw = jnp.clip(jnp.round(w / swt) + zwt, 0, n).astype(jnp.int8)
+        y = ops.int8_matmul(qx[0], qw, sx[0], zx[0], swt, zwt,
+                            out_dtype=jnp.float32, interpret=True)
+        ref_y = x[0] @ w
+        rel = float(jnp.linalg.norm(y - ref_y) / jnp.linalg.norm(ref_y))
+        assert rel < 0.15   # W4 weight noise dominates (step/2 ≈ 9% rel)
+        # W8A8 must be near-exact
+        n8 = 255.0
+        sw8 = jnp.maximum((mx - mn) / n8, 1e-8)
+        zw8 = jnp.round(-mn / sw8)
+        qw8 = (jnp.clip(jnp.round(w / sw8) + zw8, 0, n8) - 128).astype(jnp.int8)
+        y8 = ops.int8_matmul(qx[0], qw8, sx[0], zx[0], sw8, zw8 - 128,
+                             out_dtype=jnp.float32, interpret=True)
+        rel8 = float(jnp.linalg.norm(y8 - ref_y) / jnp.linalg.norm(ref_y))
+        assert rel8 < 0.02
+
+
+class TestCacheAttention:
+    """Fused decode attention over the packed mixed-precision cache vs the
+    dequantize-then-attend oracle."""
+
+    @pytest.mark.parametrize("shape", [
+        # (b, s, g, hd, h, num_hi, block_s)
+        (2, 288, 2, 64, 8, 32, 64),
+        (1, 576, 4, 128, 8, 64, 128),
+        (2, 160, 2, 64, 4, 32, 128),
+    ])
+    def test_matches_dequant_oracle(self, shape):
+        from repro.serving import kvcache as KV
+        from repro.kernels.cache_attention import cache_decode_attention
+        from repro.models.layers import decode_attention
+        b, s, g, hd, h, num_hi, bs = shape
+        rng = np.random.default_rng(42)
+        cfg = KV.KVCacheConfig(quantized=True, num_hi=num_hi)
+        k = jnp.asarray(rng.normal(size=(b, s, g, hd)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(b, s, g, hd)).astype(np.float32))
+        entry = KV.quantize_full(k, v, cfg)
+        q = jnp.asarray(rng.normal(size=(b, 1, h, hd)).astype(np.float32))
+        length = jnp.asarray([s - 17], jnp.int32)
+        out = cache_decode_attention(entry, q, length, block_s=bs,
+                                     interpret=True)
+        kf, vf = KV.dequantize_full(entry, cfg, jnp.float32)
+        ref_out = decode_attention(q, kf, vf, length=length)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                                   atol=2e-2, rtol=2e-2)

@@ -1,0 +1,164 @@
+"""Per-architecture smoke tests (reduced configs) + serving equivalence.
+
+Every assigned arch instantiates a REDUCED same-family config and runs one
+forward/train step on CPU asserting output shapes and finiteness; serving
+paths check prefill+decode against the full forward.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_reduced
+from repro.models import lm
+from repro.models.config import SHAPES, shape_applicable
+from repro.core.stamp import StampConfig
+from repro.serving.kvcache import KVCacheConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+SMOKE_ARCHS = [a for a in ARCHS if a != "pixart_sigma"]
+
+
+def make_batch(cfg, b=2, s=64, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)),
+                                   jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)),
+                                   jnp.int32)}
+    if cfg.frontend == "patch":
+        s_txt = s - cfg.num_patches
+        batch["tokens"] = batch["tokens"][:, :s_txt]
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(b, cfg.num_patches, cfg.d_model)), jnp.bfloat16)
+        labels = np.asarray(batch["labels"]).copy()
+        labels[:, :cfg.num_patches] = -1
+        batch["labels"] = jnp.asarray(labels)
+    if cfg.frontend == "frames" or cfg.encoder_layers:
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(b, s // cfg.frame_ratio, cfg.d_model)),
+            jnp.bfloat16)
+    return batch
+
+
+@pytest.fixture(scope="module")
+def arch_setup():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = get_reduced(arch)
+            params = lm.init_params(jax.random.PRNGKey(0), cfg)
+            cache[arch] = (cfg, params)
+        return cache[arch]
+    return get
+
+
+@pytest.mark.parametrize("arch", SMOKE_ARCHS)
+class TestArchSmoke:
+    def test_forward_and_train_step(self, arch, arch_setup):
+        cfg, params = arch_setup(arch)
+        batch = make_batch(cfg)
+        loss = lm.train_loss(params, batch, cfg)
+        assert np.isfinite(float(loss)), f"{arch}: loss not finite"
+        grads = jax.grad(lambda p: lm.train_loss(p, batch, cfg))(params)
+        leaves = jax.tree.leaves(grads)
+        assert all(np.isfinite(np.asarray(l, np.float32)).all()
+                   for l in leaves), f"{arch}: non-finite grads"
+
+    def test_hidden_shape(self, arch, arch_setup):
+        cfg, params = arch_setup(arch)
+        batch = make_batch(cfg)
+        x, _, _ = lm.model_hidden(params, batch, cfg, mode="train",
+                                  policy=None, remat=False)
+        assert x.shape[0] == 2 and x.shape[-1] == cfg.d_model
+        assert np.isfinite(np.asarray(x, np.float32)).all()
+
+    def test_prefill_decode(self, arch, arch_setup):
+        cfg, params = arch_setup(arch)
+        batch = make_batch(cfg)
+        serve = lm.ServeConfig(stamp=StampConfig(num_hi_tokens=8),
+                               kv=KVCacheConfig(num_hi=8))
+        logits, cache = lm.prefill(params, batch, cfg, serve)
+        assert logits.shape == (2, cfg.padded_vocab)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        logits2, cache2 = lm.decode_step(params, cache, tok, jnp.int32(64),
+                                         cfg, serve)
+        assert np.isfinite(np.asarray(logits2)).all()
+
+
+class TestShapeMatrix:
+    def test_40_cells_defined(self):
+        cells = [(a, s) for a in SMOKE_ARCHS[:10] for s in SHAPES]
+        assert len(cells) == 40
+
+    def test_long_500k_rules(self):
+        skipped = []
+        for arch in SMOKE_ARCHS[:10]:
+            cfg = get_reduced(arch)
+            ok, why = shape_applicable(cfg, SHAPES["long_500k"])
+            if not ok:
+                skipped.append(arch)
+        assert len(skipped) == 8   # all but jamba + mamba2
+        assert "jamba_1_5_large_398b" not in skipped
+        assert "mamba2_1_3b" not in skipped
+
+
+class TestServingEquivalence:
+    def test_unquantized_decode_matches_full_forward(self):
+        """prefill(s tokens) + decode(token s) ≡ forward(s+1 tokens)."""
+        cfg = get_reduced("llama3_8b")
+        params = lm.init_params(jax.random.PRNGKey(1), cfg)
+        rng = np.random.default_rng(0)
+        toks = rng.integers(0, cfg.vocab_size, (1, 65)).astype(np.int32)
+        serve = lm.ServeConfig(stamp=None, kv=KVCacheConfig(quantized=False),
+                               weight_bits=None, cache_capacity=80)
+        _, cache = lm.prefill(params, {"tokens": jnp.asarray(toks[:, :64])},
+                              cfg, serve)
+        logits_dec, _ = lm.decode_step(params, cache,
+                                       jnp.asarray(toks[:, 64]),
+                                       jnp.int32(64), cfg, serve)
+        x, _, _ = lm.model_hidden(params, {"tokens": jnp.asarray(toks)},
+                                  cfg, mode="train", policy=None, remat=False)
+        from repro.models.layers import rms_norm
+        logits_full = (x[:, -1] @ lm._head_weight(params).astype(x.dtype)
+                       ).astype(jnp.float32)
+        # model_hidden applies final_norm already
+        np.testing.assert_allclose(np.asarray(logits_dec),
+                                   np.asarray(logits_full),
+                                   rtol=0.1, atol=0.15)
+
+    def test_quantized_cache_close_to_bf16_cache(self):
+        cfg = get_reduced("llama3_8b")
+        params = lm.init_params(jax.random.PRNGKey(2), cfg)
+        rng = np.random.default_rng(1)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 64)),
+                           jnp.int32)
+        ref_serve = lm.ServeConfig(stamp=None,
+                                   kv=KVCacheConfig(quantized=False),
+                                   weight_bits=None, cache_capacity=80)
+        q_serve = lm.ServeConfig(stamp=None,
+                                 kv=KVCacheConfig(quantized=True, num_hi=16),
+                                 weight_bits=None, cache_capacity=80)
+        _, c_ref = lm.prefill(params, {"tokens": toks}, cfg, ref_serve)
+        _, c_q = lm.prefill(params, {"tokens": toks}, cfg, q_serve)
+        tok = jnp.zeros((2,), jnp.int32)
+        l_ref, _ = lm.decode_step(params, c_ref, tok, jnp.int32(64), cfg,
+                                  ref_serve)
+        l_q, _ = lm.decode_step(params, c_q, tok, jnp.int32(64), cfg,
+                                q_serve)
+        ref_n = np.asarray(l_ref)
+        rel = np.abs(np.asarray(l_q) - ref_n).max() / \
+            (np.abs(ref_n).max() + 1e-9)
+        assert rel < 0.25, f"quantized cache diverges: {rel}"
+
+    def test_weight_pack_roundtrip(self):
+        w = jnp.asarray(np.random.default_rng(3).normal(size=(64, 32)),
+                        jnp.float32)
+        packed = lm.pack_weight(w, bits=4)
+        deq = lm._dequant_packed(packed, jnp.float32)
+        rel = float(jnp.linalg.norm(deq - w) / jnp.linalg.norm(w))
+        assert rel < 0.12

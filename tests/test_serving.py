@@ -1,0 +1,180 @@
+"""Serving-layer tests: quantized KV-cache properties (hypothesis),
+prefill/decode write equivalence, segment-attention equivalence, engine
+scheduling, and elastic checkpoint restore onto a different mesh."""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_platform_name", "cpu")
+
+from repro.serving import kvcache as KV
+from repro.models.layers import decode_attention, decode_attention_segments
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def rand_kv(b, s, g, hd, seed=0):
+    rng = np.random.default_rng(seed)
+    k = jnp.asarray(rng.normal(size=(b, s, g, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s, g, hd)).astype(np.float32))
+    return k, v
+
+
+class TestKVCacheProperties:
+    @settings(deadline=None, max_examples=20)
+    @given(seed=st.integers(0, 1000), num_hi=st.sampled_from([0, 8, 32]),
+           s=st.sampled_from([32, 64, 96]))
+    def test_roundtrip_error_bounded(self, seed, num_hi, s):
+        """Dequant(quant(K)) error ≤ half a quantization step per region."""
+        cfg = KV.KVCacheConfig(quantized=True, num_hi=num_hi)
+        k, v = rand_kv(1, s, 2, 16, seed)
+        entry = KV.quantize_full(k, v, cfg)
+        kd, vd = KV.dequantize_full(entry, cfg, jnp.float32)
+        hi = min(num_hi, s)
+        for orig, deq in ((k, kd), (v, vd)):
+            step_hi = (orig[:, :hi].max(-1) - orig[:, :hi].min(-1)) / 255.0
+            step_lo = (orig[:, hi:].max(-1) - orig[:, hi:].min(-1)) / 15.0
+            if hi:
+                assert float((jnp.abs(deq - orig)[:, :hi].max(-1) -
+                              step_hi).max()) < 1e-2
+            if s > hi:
+                assert float((jnp.abs(deq - orig)[:, hi:].max(-1) -
+                              step_lo).max()) < 1e-2
+
+    def test_hi_region_is_8bit_accurate(self):
+        cfg = KV.KVCacheConfig(quantized=True, num_hi=16)
+        k, v = rand_kv(2, 64, 2, 32, 1)
+        entry = KV.quantize_full(k, v, cfg)
+        kd, _ = KV.dequantize_full(entry, cfg, jnp.float32)
+        err_hi = float(jnp.abs(kd[:, :16] - k[:, :16]).mean())
+        err_lo = float(jnp.abs(kd[:, 16:] - k[:, 16:]).mean())
+        assert err_hi < err_lo / 4   # 8-bit ≈ 16× finer than 4-bit
+
+    @settings(deadline=None, max_examples=15)
+    @given(pos=st.integers(0, 63))
+    def test_write_token_matches_bulk_quantization(self, pos):
+        """Writing token `pos` incrementally == quantizing it in bulk."""
+        cfg = KV.KVCacheConfig(quantized=True, num_hi=16)
+        k, v = rand_kv(1, 64, 2, 16, 2)
+        bulk = KV.quantize_full(k, v, cfg)
+        # start from bulk, overwrite position `pos` with the same values
+        rewritten = KV.write_token(bulk, k[:, pos:pos + 1], v[:, pos:pos + 1],
+                                   jnp.int32(pos), cfg)
+        for key in bulk:
+            np.testing.assert_array_equal(
+                np.asarray(bulk[key]), np.asarray(rewritten[key]),
+                err_msg=f"{key} changed when rewriting identical token")
+
+    def test_write_token_only_touches_position(self):
+        cfg = KV.KVCacheConfig(quantized=True, num_hi=16)
+        k, v = rand_kv(1, 64, 2, 16, 3)
+        entry = KV.quantize_full(k, v, cfg)
+        k2, v2 = rand_kv(1, 1, 2, 16, 4)
+        new = KV.write_token(entry, k2, v2, jnp.int32(40), cfg)
+        kd_old, _ = KV.dequantize_full(entry, cfg, jnp.float32)
+        kd_new, _ = KV.dequantize_full(new, cfg, jnp.float32)
+        diff = np.abs(np.asarray(kd_old) - np.asarray(kd_new)).sum(axis=(0, 2, 3))
+        assert diff[40] > 0
+        assert (diff[:40] == 0).all() and (diff[41:] == 0).all()
+
+    def test_effective_bits(self):
+        """64×8b + rest×4b ≈ 4.008 bits at 32k (paper: 4.125 at 2k)."""
+        cfg = KV.KVCacheConfig(quantized=True, num_hi=64)
+        s = 32768
+        bits = (64 * 8 + (s - 64) * 4) / s
+        assert abs(bits - 4.0078) < 1e-3
+        s2 = 2048
+        bits2 = (64 * 8 + (s2 - 64) * 4) / s2
+        assert abs(bits2 - 4.125) < 1e-3
+
+    def test_capacity_padding_roundtrip(self):
+        cfg = KV.KVCacheConfig(quantized=True, num_hi=16)
+        k, v = rand_kv(1, 48, 2, 16, 5)
+        entry = KV.quantize_full(k, v, cfg, capacity=80)
+        assert entry["k_scale"].shape[1] == 80
+        kd, _ = KV.dequantize_full(entry, cfg, jnp.float32)
+        assert kd.shape[1] == 80
+        np.testing.assert_allclose(np.asarray(kd[:, :48]), np.asarray(k),
+                                   atol=0.5)
+
+
+class TestSegmentAttention:
+    def test_segments_equal_monolithic(self):
+        """Score-merge over (hi, lo) segments == attention over the concat."""
+        rng = np.random.default_rng(6)
+        b, s, g, hd, h = 2, 96, 2, 32, 8
+        k = jnp.asarray(rng.normal(size=(b, s, g, hd)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(b, s, g, hd)).astype(np.float32))
+        q = jnp.asarray(rng.normal(size=(b, 1, h, hd)).astype(np.float32))
+        length = jnp.asarray([80], jnp.int32)
+        whole = decode_attention(q, k, v, length=length)
+        split = decode_attention_segments(
+            q, [(k[:, :32], v[:, :32], 0), (k[:, 32:], v[:, 32:], 32)],
+            length=length)
+        np.testing.assert_allclose(np.asarray(split), np.asarray(whole),
+                                   atol=2e-2, rtol=2e-2)
+
+
+class TestElasticRestore:
+    @pytest.mark.slow
+    def test_restore_on_different_mesh(self, tmp_path):
+        """Train on a 1-device mesh, restart on a forced 4-device mesh —
+        parameters re-shard at load (elastic scaling)."""
+        env = dict(os.environ, PYTHONPATH=str(ROOT / "src"))
+        base = [sys.executable, "-m", "repro.launch.train",
+                "--arch", "minicpm-2b", "--reduced", "--steps", "8",
+                "--global-batch", "4", "--seq", "64", "--ckpt-every", "4",
+                "--ckpt-dir", str(tmp_path)]
+        p = subprocess.run(base[:6] + ["--steps", "4"] + base[8:], env=env,
+                           capture_output=True, text=True, timeout=600)
+        assert p.returncode == 0, p.stderr[-500:]
+        env4 = dict(env, XLA_FLAGS="--xla_force_host_platform_device_count=4")
+        p2 = subprocess.run(base + ["--model-parallel", "2"], env=env4,
+                            capture_output=True, text=True, timeout=600)
+        assert p2.returncode == 0, p2.stderr[-800:]
+        assert "[restore] resumed from step 4" in p2.stdout
+
+
+class TestFusedKernelIntegration:
+    def test_fused_decode_matches_xla_path(self):
+        """ServeConfig.fused_cache_attention routes decode through the
+        Pallas packed-cache kernel; logits match the XLA segment path."""
+        from repro.configs import get_reduced
+        from repro.models import lm
+        cfg = get_reduced("llama3_8b")
+        params = lm.init_params(jax.random.PRNGKey(0), cfg)
+        rng = np.random.default_rng(0)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 64)),
+                           jnp.int32)
+        base = lm.ServeConfig(stamp=None,
+                              kv=KV.KVCacheConfig(quantized=True, num_hi=16),
+                              weight_bits=None, cache_capacity=96)
+        fused = lm.ServeConfig(stamp=None,
+                               kv=KV.KVCacheConfig(quantized=True, num_hi=16),
+                               weight_bits=None, cache_capacity=96,
+                               fused_cache_attention=True)
+        _, cache = lm.prefill(params, {"tokens": toks}, cfg, base)
+        tok = jnp.zeros((2,), jnp.int32)
+        l1, _ = lm.decode_step(params, cache, tok, jnp.int32(64), cfg, base)
+        with jax.disable_jit():   # interpret-mode pallas inside scan
+            l2, _ = lm.decode_step(params, cache, tok, jnp.int32(64), cfg,
+                                   fused)
+        lm.set_fused_cache_attention(False)
+        rel = np.abs(np.asarray(l1) - np.asarray(l2)).max() / \
+            (np.abs(np.asarray(l1)).max() + 1e-9)
+        assert rel < 2e-2, rel
+
+    def test_scales_are_f16(self):
+        cfg = KV.KVCacheConfig(quantized=True, num_hi=8)
+        k, v = rand_kv(1, 32, 2, 16, 9)
+        entry = KV.quantize_full(k, v, cfg)
+        assert entry["k_scale"].dtype == jnp.float16
+        assert entry["v_zp"].dtype == jnp.float16
