@@ -37,7 +37,59 @@ def run() -> list[dict]:
                                           interpret=True), reps=2)
     rows.append({"name": "kernels/int8_matmul_256", "us_per_call": us,
                  "derived": f"tpu_int_macs={2 * m * n * k}"})
+    rows.extend(_stamp_linear_rows(rng))
     return rows
+
+
+def _stamp_linear_rows(rng) -> list[dict]:
+    """Fused vs reference STaMP linear (prefill hot path).
+
+    Derived HBM traffic per linear for a (s, din) activation and (din, dout)
+    weight, f32 accounting:
+
+    * reference — four activation round trips: transform out+in, fake-quant
+      out+in, matmul out+in, inverse write, plus the bf16 weight
+      re-materialized from int codes every call;
+    * fused — exactly one: read X once, write Y once, stream the int8 weight.
+    """
+    import dataclasses
+
+    from repro.core.quant import rtn_quantize_weight
+    from repro.core.stamp import StampConfig, prepare_linear, stamp_linear
+
+    s, din, dout = 1024, 256, 256
+    x = jnp.asarray(rng.normal(size=(1, s, din)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(din, dout)).astype(np.float32) * 0.05)
+    cfg_ref = StampConfig(num_hi_tokens=64)
+    cfg_fused = dataclasses.replace(cfg_ref, execution="fused")
+    # both rows deploy the same int8 weight codes: the reference path
+    # dequantizes them to a dense weight every call, the fused path streams
+    # them into the kernel directly
+    wq = rtn_quantize_weight(w, bits=8, axis=0)
+    prep = prepare_linear(w_quant=wq)
+
+    us_ref, _ = timed(
+        lambda: stamp_linear(x, w, None, cfg_ref, w_quant=wq), reps=2)
+    us_fused, _ = timed(
+        lambda: stamp_linear(x, None, None, cfg_fused, prepared=prep), reps=2)
+
+    act, out = s * din * 4, s * dout * 4
+    wbytes = din * dout                 # int8 codes read
+    ref_bytes = (2 * act            # L·X written + read back
+                 + 2 * act          # Q(T) written + read back
+                 + 2 * out          # matmul out written + read by inverse
+                 + out              # inverse write
+                 + act              # original X read
+                 + wbytes           # int8 codes read
+                 + 2 * din * dout * 2)  # bf16 weight re-materialized:
+                                        # dequant write + matmul read
+    fused_bytes = act + out + wbytes    # one round trip + int8 weight
+    return [
+        {"name": "kernels/stamp_linear_reference_1k", "us_per_call": us_ref,
+         "derived": f"tpu_hbm_bytes={ref_bytes},act_roundtrips=4"},
+        {"name": "kernels/stamp_linear_fused_1k", "us_per_call": us_fused,
+         "derived": f"tpu_hbm_bytes={fused_bytes},act_roundtrips=1"},
+    ]
 
 
 if __name__ == "__main__":

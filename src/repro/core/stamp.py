@@ -17,6 +17,7 @@ The algorithm for ``y = act_quant(X) @ W + β`` under STaMP:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 import jax
@@ -49,6 +50,8 @@ class StampConfig:
     block_size: int = 64
     hw: Optional[tuple[int, int]] = None   # (H, W) grid for dwt2d
     enabled: bool = True
+    execution: str = "reference"     # reference | fused (Pallas integer path)
+    fused_weight_bits: int = 8       # weight codes for on-the-fly prepare
 
     def bits_vector(self, seq_len: int) -> Array:
         return Q.mixed_precision_bits(seq_len, self.num_hi_tokens,
@@ -92,14 +95,19 @@ def stamp_fake_quant(x: Array, cfg: StampConfig, axis: int = -2,
     values feeding non-linear attention math)."""
     if not cfg.enabled:
         return x
-    tx = apply_seq_transform(x, cfg, axis=axis, basis=basis)
+    # f32 transform + quant statistics: bf16 butterflies perturb the min/max
+    # scales enough to flip 4-bit codes, which would make the reference and
+    # fused paths (kernel computes in f32) diverge beyond quant tolerance.
+    tx = apply_seq_transform(x.astype(jnp.float32), cfg, axis=axis,
+                             basis=basis)
     bits = cfg.bits_vector(tx.shape[axis])
     if cfg.granularity == "block":
         # per-(token, block) scales — bits stays per-token
         tq = _blockwise_mixed(tx, bits, cfg.block_size)
     else:
         tq = Q.fake_quant(tx, bits, axis=-1)
-    return invert_seq_transform(tq, cfg, axis=axis, basis=basis)
+    return invert_seq_transform(tq, cfg, axis=axis,
+                                basis=basis).astype(x.dtype)
 
 
 def _blockwise_mixed(tx: Array, bits: Array, block_size: int) -> Array:
@@ -118,15 +126,101 @@ def _blockwise_mixed(tx: Array, bits: Array, block_size: int) -> Array:
     return deq.reshape(*lead, s, d)
 
 
+# ---------------------------------------------------------------------------
+# fused (integer) execution path
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=("qw", "sw", "zw", "bias"), meta_fields=())
+@dataclasses.dataclass(frozen=True)
+class PreparedLinear:
+    """Deployment weight buffers for the fused path: signed-int8 codes plus
+    per-output-channel affine params, quantized **once** at preparation time
+    instead of re-materializing bf16 weights on every call."""
+
+    qw: Array               # (din, dout) int8, codes shifted by -2^(b-1)
+    sw: Array               # (1, dout) f32 scale
+    zw: Array               # (1, dout) f32 zero point (same shift applied)
+    bias: Optional[Array]   # (dout,) or None
+
+    def dequant(self, dtype=jnp.bfloat16) -> Array:
+        return ((self.qw.astype(jnp.float32) - self.zw) * self.sw).astype(dtype)
+
+
+def prepare_linear(
+    w: Optional[Array] = None,
+    b: Optional[Array] = None,
+    w_quant: Optional[Q.QuantizedWeight] = None,
+    bits: int = 8,
+) -> PreparedLinear:
+    """Build the fused path's cached weight buffers.
+
+    From ``w_quant`` the existing integer codes are reused bit-exactly
+    (shifted into signed storage, zero point shifted identically); from a
+    raw ``w`` a per-output-channel asymmetric min-max quantization at
+    ``bits`` is applied.  ``axis=-2`` reduction, so stacked ``(layers, din,
+    dout)`` weights prepare in one call.
+    """
+    if w_quant is not None:
+        assert w_quant.bits <= 8, "fused path stores weight codes in int8"
+        shift = 1 << (w_quant.bits - 1)
+        qw = (w_quant.q.astype(jnp.int32) - shift).astype(jnp.int8)
+        return PreparedLinear(qw=qw, sw=w_quant.scale.astype(jnp.float32),
+                              zw=(w_quant.zero_point - shift).astype(jnp.float32),
+                              bias=b)
+    assert bits <= 8, "fused path stores weight codes in int8"
+    n = float(2**bits - 1)
+    shift = float(1 << (bits - 1))
+    wf = w.astype(jnp.float32)
+    # anchor the range at zero: guarantees zp ∈ [0, n], so the signed-shifted
+    # zero point stays a bf16-exact small integer (the decode-path dequant in
+    # models/lm.py relies on this; an unanchored one-sided channel would
+    # push zp to ±range/step and round in bf16)
+    mn = jnp.minimum(jnp.min(wf, axis=-2, keepdims=True), 0.0)
+    mx = jnp.maximum(jnp.max(wf, axis=-2, keepdims=True), 0.0)
+    sw = jnp.maximum((mx - mn) / n, 1e-8)
+    zp = jnp.round(-mn / sw)
+    qw = (jnp.clip(jnp.round(wf / sw) + zp, 0.0, n) - shift).astype(jnp.int8)
+    return PreparedLinear(qw=qw, sw=sw, zw=zp - shift, bias=b)
+
+
+def fused_eligible(cfg: StampConfig, feature_rot: Optional[Array] = None
+                   ) -> bool:
+    """Whether this config can run the fused Pallas kernel; anything else
+    (dense bases, per-block scales, activation rotations, bit widths beyond
+    int8 storage) stays on the reference path."""
+    from repro.kernels.stamp_matmul import FUSABLE_TRANSFORMS
+    return (cfg.enabled and cfg.execution == "fused"
+            and cfg.granularity == "token"
+            and cfg.seq_transform in FUSABLE_TRANSFORMS
+            # activation AND weight codes live in int8 storage
+            and max(cfg.hi_bits, cfg.lo_bits, cfg.fused_weight_bits) <= 8
+            and feature_rot is None)
+
+
+def _fused_linear(x: Array, prep: PreparedLinear, cfg: StampConfig) -> Array:
+    from repro.kernels import ops as kops
+    *lead, s, d = x.shape
+    x3 = x.reshape(-1, s, d)
+    y = kops.stamp_quant_matmul(
+        x3, prep.qw, prep.sw, prep.zw, prep.bias,
+        transform=cfg.seq_transform, levels=cfg.resolved_levels(s),
+        skip_first=cfg.skip_first_token, num_hi=cfg.num_hi_tokens,
+        hi_bits=cfg.hi_bits, lo_bits=cfg.lo_bits, out_dtype=x.dtype)
+    return y.reshape(*lead, s, y.shape[-1])
+
+
 def stamp_linear(
     x: Array,
-    w: Array,
+    w: Optional[Array],
     b: Optional[Array],
     cfg: StampConfig,
     *,
     w_quant: Optional[Q.QuantizedWeight] = None,
     basis: Optional[Array] = None,
     feature_rot: Optional[Array] = None,
+    prepared: Optional[PreparedLinear] = None,
 ) -> Array:
     """STaMP linear layer (Fig. 2a).
 
@@ -135,13 +229,36 @@ def stamp_linear(
     ``w_quant`` replaces ``w`` with its dequantized int approximation
     (W4 path).  The bias is added *after* the inverse sequence transform,
     which is exact per Eq. 7.
+
+    With ``cfg.execution == "fused"`` (and a fusable transform/granularity)
+    the whole chain runs in one Pallas kernel on integer weights: pass
+    ``prepared`` (see :func:`prepare_linear`) to reuse cached int8 buffers
+    across calls; otherwise they are prepared on the fly from ``w_quant``'s
+    codes or ``w``.
     """
+    if fused_eligible(cfg, feature_rot) and \
+            (w_quant is None or w_quant.bits <= 8):
+        prep = prepared
+        if prep is None:
+            prep = prepare_linear(w, b, w_quant=w_quant,
+                                  bits=cfg.fused_weight_bits)
+        elif b is not None:
+            # explicit bias wins over the prepared one (matches the
+            # reference fallback below)
+            prep = dataclasses.replace(prep, bias=b)
+        return _fused_linear(x, prep, cfg)
+
+    if w is None and w_quant is None and prepared is not None:
+        # reference fallback for a caller that only holds prepared buffers
+        w = prepared.dequant(x.dtype)
+        b = prepared.bias if b is None else b
+
     if not cfg.enabled:
         wmat = w_quant.dequant(x.dtype) if w_quant is not None else w
         y = x @ wmat
         return y + b if b is not None else y
 
-    tx = apply_seq_transform(x, cfg, basis=basis)
+    tx = apply_seq_transform(x.astype(jnp.float32), cfg, basis=basis)
     if feature_rot is not None:
         tx = tx @ feature_rot.astype(tx.dtype)
     bits = cfg.bits_vector(tx.shape[-2])
@@ -150,7 +267,7 @@ def stamp_linear(
     else:
         tq = Q.fake_quant(tx, bits, axis=-1)
     wmat = w_quant.dequant(x.dtype) if w_quant is not None else w
-    y = tq @ wmat
+    y = tq.astype(x.dtype) @ wmat
     y = invert_seq_transform(y, cfg, basis=basis)
     if b is not None:
         y = y + b

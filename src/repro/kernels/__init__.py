@@ -2,12 +2,34 @@
 
 `<name>.py` holds the ``pl.pallas_call`` + BlockSpec tiling, `ops.py` the
 jit'd wrappers (interpret-mode on CPU), `ref.py` the pure-jnp oracles.
+
+Reference vs. fused execution
+-----------------------------
+STaMP linears run in one of two modes, selected by
+``repro.core.stamp.StampConfig.execution``:
+
+* ``"reference"`` (default) — the pure-jnp path: ``L·X``, the fake-quantized
+  activation, the bf16 matmul output and ``L⁻¹(·)`` each materialize as a
+  separate XLA tensor (four HBM round trips of the activation per linear).
+  This is the numerics oracle and the only path for dense-basis transforms
+  (dct/klt/dwt2d), per-block granularity and activation feature rotations.
+* ``"fused"`` — `stamp_matmul.stamp_quant_matmul` runs transform →
+  mixed-precision quantize (first ``num_hi`` tokens at ``hi_bits``, rest at
+  ``lo_bits``) → int8×int8 GEMM with per-row/per-column scale correction →
+  inverse transform → bias in a single VMEM residency: one HBM read of X and
+  one write of Y.  Weights are pre-quantized once into signed-int8 buffers
+  (`repro.core.stamp.prepare_linear` /
+  `repro.models.lm.prepare_fused_weights`) instead of being dequantized to
+  bf16 on every call.  Supports dwt/wht/none transforms, per-token
+  granularity; ineligible configs silently fall back to the reference path
+  with identical semantics.
 """
 
 from repro.kernels.ops import (  # noqa: F401
     haar_dwt_seq,
     int8_matmul,
     quantize_pack,
+    stamp_quant_matmul,
     walsh_hadamard,
 )
 from repro.kernels.cache_attention import cache_decode_attention  # noqa: F401

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.kernels.haar_dwt import haar_dwt_pallas
 from repro.kernels.int8_matmul import int8_matmul_pallas
 from repro.kernels.quant_pack import quant_pack_pallas
+from repro.kernels.stamp_matmul import stamp_quant_matmul_pallas
 from repro.kernels.wht import wht_pallas
 
 
@@ -64,3 +65,27 @@ def int8_matmul(qx, qw, sx, zx, sw, zw, out_dtype=jnp.bfloat16,
         interpret = _interpret_default()
     return int8_matmul_pallas(qx, qw, sx, zx, sw, zw, out_dtype=out_dtype,
                               interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "transform", "levels", "skip_first", "num_hi", "hi_bits", "lo_bits",
+    "out_dtype", "interpret"))
+def stamp_quant_matmul(x, qw, sw, zw, bias=None, *, transform: str = "dwt",
+                       levels: int = 3, skip_first: bool = True,
+                       num_hi: int = 64, hi_bits: int = 8, lo_bits: int = 4,
+                       out_dtype=None, interpret: bool | None = None):
+    """Fused STaMP deployment linear (see `stamp_matmul.py`).
+
+    x: (b, s, K) float; qw: (K, N) signed int8 codes; sw/zw: (1, N) f32.
+    ``bias=None`` lowers a zero bias block (the add is free inside the
+    epilogue's VMEM residency).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    if bias is None:
+        bias = jnp.zeros((1, qw.shape[1]), jnp.float32)
+    return stamp_quant_matmul_pallas(
+        x, qw, sw, zw, bias.reshape(1, -1).astype(jnp.float32),
+        transform=transform, levels=levels, skip_first=skip_first,
+        num_hi=num_hi, hi_bits=hi_bits, lo_bits=lo_bits,
+        out_dtype=out_dtype, interpret=interpret)

@@ -53,3 +53,25 @@ def int8_matmul_ref(qx, qw, sx, zx, sw, zw, out_dtype=jnp.float32):
     x = (qx.astype(jnp.float32) - zx) * sx
     w = (qw.astype(jnp.float32) - zw) * sw
     return (x @ w).astype(out_dtype)
+
+
+def stamp_quant_matmul_ref(x, qw, sw, zw, bias=None, *, transform="dwt",
+                           levels=3, skip_first=True, num_hi=64, hi_bits=8,
+                           lo_bits=4, out_dtype=jnp.float32):
+    """Unfused oracle for `stamp_quant_matmul`: transform → mixed-precision
+    fake quant → dequantized matmul → inverse transform → bias, each step a
+    separate jnp materialization (exactly the reference execution path)."""
+    from repro.core import quant as Q
+
+    xf = x.astype(jnp.float32)
+    tx = T.sequence_transform(xf, transform, axis=-2, levels=levels,
+                              skip_first=skip_first)
+    bits = Q.mixed_precision_bits(tx.shape[-2], num_hi, hi_bits, lo_bits)
+    tq = Q.fake_quant(tx, bits, axis=-1)
+    wd = (qw.astype(jnp.float32) - zw) * sw
+    y = tq @ wd
+    y = T.inverse_sequence_transform(y, transform, axis=-2, levels=levels,
+                                     skip_first=skip_first)
+    if bias is not None:
+        y = y + bias.reshape(1, -1).astype(jnp.float32)
+    return y.astype(out_dtype)

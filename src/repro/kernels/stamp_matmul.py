@@ -1,0 +1,174 @@
+"""Pallas TPU kernel: the fused STaMP deployment linear (Fig. 2a, one pass).
+
+The reference path (`repro.core.stamp.stamp_linear` with
+``execution="reference"``) materializes four HBM-sized intermediates per
+linear: the sequence-transformed activation ``T = L·X``, the fake-quantized
+``Tq``, the matmul output ``Tq·W`` and the inverse-transformed ``L⁻¹(Tq·W)``.
+This kernel runs the whole chain in one VMEM residency:
+
+    1. ``T = L · X``          — multi-level Haar DWT / WHT butterflies on the
+                                in-VMEM tile (sequence axis fully resident);
+    2. ``Q(T)``               — per-token asymmetric min-max quantize, first
+                                ``num_hi`` rows at ``hi_bits`` and the rest at
+                                ``lo_bits`` (the paper's mixed precision,
+                                §3.3), codes shifted into signed int8;
+    3. ``Q(T) · Wq``          — int8 × int8 MXU GEMM, int32 accumulation,
+                                with the same per-row/per-column zero-point
+                                correction epilogue as `int8_matmul.py`:
+                                ``(Σ qx·qw − zx·Σqw − zw·Σqx + K·zx·zw)·sx·sw``;
+    4. ``L⁻¹ · (…) + 1βᵀ``    — inverse transform then bias (exact per Eq. 7).
+
+The activation therefore makes exactly **one** HBM round trip (read ``X``,
+write ``Y``) per output-block program instead of four full materializations.
+Weights arrive pre-quantized (signed int8 codes + per-output-channel
+scale/zero-point) — see `repro.core.stamp.prepare_linear` — so no bf16
+re-materialization of ``W`` happens per call either.
+
+Grid: ``(batch, N / block_n)``.  Each program holds the full ``(s, K)``
+activation tile plus a ``(K, block_n)`` weight block in VMEM; at s = 4k,
+K = 4k f32 that is 64 MiB + 2 MiB — within v5p VMEM budgets for serving
+shapes; shrink ``block_n`` (weight block) for larger K.  The transform +
+quantize run **once per batch row** (on the first output-block grid step)
+into VMEM scratch; subsequent output blocks reuse the int8 codes and
+per-token scales, so widening N (e.g. a concatenated QKV weight) adds only
+GEMM + epilogue work.  The activation block index is constant across the N
+grid axis, so the pipeline fetches X from HBM once per row (Mosaic skips
+re-copying revisited blocks).  The transform butterflies reuse the pure-jnp
+orthonormal helpers from `repro.core.transforms` — static shapes, so they
+trace into sublane shuffles the same way `haar_dwt.py` / `wht.py` do,
+including the identity-tail handling for non-power-of-two sequence lengths
+and the first-token (attention sink) exception.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.core import transforms as T
+
+# transforms the fused kernel can run in-VMEM; dct/klt/dwt2d fall back to
+# the reference path (dense O(s²) bases / latent-grid reads don't tile).
+FUSABLE_TRANSFORMS = ("none", "dwt", "wht")
+
+
+def _seq_fwd(x, kind: str, levels: int, skip_first: bool):
+    if kind == "none":
+        return x
+    if kind == "dwt":
+        return T.haar_dwt(x, levels=levels, axis=-2, skip_first=skip_first)
+    if kind == "wht":
+        return T.wht(x, axis=-2, skip_first=skip_first)
+    raise ValueError(f"transform {kind!r} not fusable")
+
+
+def _seq_inv(y, kind: str, levels: int, skip_first: bool):
+    if kind == "none":
+        return y
+    if kind == "dwt":
+        return T.haar_idwt(y, levels=levels, axis=-2, skip_first=skip_first)
+    if kind == "wht":
+        return T.iwht(y, axis=-2, skip_first=skip_first)
+    raise ValueError(f"transform {kind!r} not fusable")
+
+
+def _stamp_kernel(x_ref, qw_ref, sw_ref, zw_ref, b_ref, o_ref,
+                  qx_ref, sx_ref, zx_ref, *,
+                  transform: str, levels: int, skip_first: bool,
+                  num_hi: int, hi_bits: int, lo_bits: int, k_total: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _transform_and_quantize():
+        # runs once per batch row; later output blocks reuse the scratch
+        x = x_ref[0].astype(jnp.float32)               # (s, K)
+        tx = _seq_fwd(x, transform, levels, skip_first)
+        s = tx.shape[0]
+        # mixed-precision per-token min-max quantize (Eq. 1 with b_ij = b_i)
+        row = jax.lax.broadcasted_iota(jnp.int32, (s, 1), 0)
+        n_lev = jnp.where(row < num_hi, 2.0 ** hi_bits - 1.0,
+                          2.0 ** lo_bits - 1.0)
+        mn = jnp.min(tx, axis=-1, keepdims=True)
+        mx = jnp.max(tx, axis=-1, keepdims=True)
+        sx = jnp.maximum((mx - mn) / n_lev, 1e-8)
+        zx = jnp.round(-mn / sx)
+        q = jnp.clip(jnp.round(tx / sx) + zx, 0.0, n_lev)
+        qx_ref[...] = (q - 128.0).astype(jnp.int8)  # unsigned → signed codes
+        sx_ref[...] = sx
+        zx_ref[...] = zx - 128.0           # shift zp identically (exact)
+
+    qx = qx_ref[...]                                   # (s, K) int8
+    sx = sx_ref[...]
+    zxs = zx_ref[...]
+
+    # integer GEMM with on-the-fly correction sums (reads each operand once)
+    qw = qw_ref[...]                                   # (K, bn) int8
+    acc = jnp.dot(qx, qw, preferred_element_type=jnp.int32).astype(jnp.float32)
+    qw_sum = jnp.sum(qw.astype(jnp.int32), axis=0,
+                     keepdims=True).astype(jnp.float32)
+    qx_sum = jnp.sum(qx.astype(jnp.int32), axis=1,
+                     keepdims=True).astype(jnp.float32)
+    sw = sw_ref[...].astype(jnp.float32)               # (1, bn)
+    zw = zw_ref[...].astype(jnp.float32)
+    corr = acc - zxs * qw_sum - zw * qx_sum + float(k_total) * zxs * zw
+    y = corr * sx * sw                                 # (s, bn) f32
+
+    # inverse transform commutes with the right-multiplication by W, so it
+    # applies per output block; bias afterwards is exact (Eq. 7).
+    y = _seq_inv(y, transform, levels, skip_first)
+    o_ref[0] = (y + b_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def stamp_quant_matmul_pallas(
+    x: jax.Array,            # (b, s, K) float
+    qw: jax.Array,           # (K, N) int8 signed codes
+    sw: jax.Array,           # (1, N) f32 per-output-channel scale
+    zw: jax.Array,           # (1, N) f32 signed-shifted zero point
+    bias: jax.Array,         # (1, N) f32 (zeros when the layer has no bias)
+    *,
+    transform: str = "dwt",
+    levels: int = 3,
+    skip_first: bool = True,
+    num_hi: int = 64,
+    hi_bits: int = 8,
+    lo_bits: int = 4,
+    block_n: int = 256,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused STaMP linear: ``L⁻¹(Q(L·x) · Wq_deq) + bias`` in one kernel."""
+    assert transform in FUSABLE_TRANSFORMS, transform
+    b, s, k = x.shape
+    k2, n = qw.shape
+    assert k == k2, (k, k2)
+    # halve until the block divides N — never fall back to a full-width
+    # block (a concatenated QKV width like 3200 would otherwise force the
+    # whole (K, N) weight + (s, N) f32 output into one VMEM residency)
+    bn = min(block_n, n)
+    while n % bn:
+        bn //= 2
+    kernel = functools.partial(
+        _stamp_kernel, transform=transform, levels=levels,
+        skip_first=skip_first, num_hi=num_hi, hi_bits=hi_bits,
+        lo_bits=lo_bits, k_total=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, n // bn),
+        in_specs=[
+            pl.BlockSpec((1, s, k), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, s, bn), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, s, n), out_dtype or x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((s, k), jnp.int8),      # quantized activation codes
+            pltpu.VMEM((s, 1), jnp.float32),   # per-token scale
+            pltpu.VMEM((s, 1), jnp.float32),   # per-token (shifted) zp
+        ],
+        interpret=interpret,
+    )(x, qw, sw, zw, bias)

@@ -28,6 +28,10 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=96)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--no-stamp", action="store_true")
+    ap.add_argument("--execution", choices=("reference", "fused"),
+                    default="reference",
+                    help="STaMP linear path: pure-jnp reference or the "
+                         "fused Pallas integer kernel (interpret on CPU)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -44,6 +48,11 @@ def main():
     if args.no_stamp:
         serve = lm.ServeConfig(stamp=None, kv=serve.kv,
                                weight_bits=serve.weight_bits)
+    elif serve.stamp is not None:
+        import dataclasses
+        serve = dataclasses.replace(
+            serve, stamp=dataclasses.replace(serve.stamp,
+                                             execution=args.execution))
 
     engine = ServingEngine(sparams, cfg, serve,
                            EngineConfig(max_batch=8, bucket=128,

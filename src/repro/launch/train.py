@@ -119,8 +119,13 @@ def train(cfg: ModelConfig, tc: TrainConfig,
     step_times = []
     for step in range(start_step, tc.steps):
         if step == tc.fail_at_step:
+            if mgr is not None:
+                # the async writer is a separate failure domain: a compute
+                # crash must not retroactively lose an already-initiated
+                # checkpoint write (otherwise resume is timing-dependent)
+                mgr.wait()
             print(f"[fault] injected failure at step {step}", flush=True)
-            os._exit(17)        # hard crash: no atexit, no checkpoint flush
+            os._exit(17)        # hard crash: no atexit, no new checkpoint
         t0 = time.time()
         batch = {k: jnp.asarray(v) for k, v in next(data).items()}
         params, opt_state, err_state, metrics = step_fn(

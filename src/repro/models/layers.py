@@ -59,6 +59,27 @@ def apply_rope(x: Array, positions: Array, theta: float) -> Array:
 
 
 # ---------------------------------------------------------------------------
+# fused STaMP linear (integer deployment path)
+# ---------------------------------------------------------------------------
+
+
+def stamp_fused_linear(x: Array, w: dict, b: Optional[Array],
+                       stamp_cfg) -> Array:
+    """Run one STaMP linear through the fused Pallas integer kernel.
+
+    ``w`` is a prepared-weight dict ``{"iq": (din, dout) int8, "isw": (1,
+    dout), "izw": (1, dout)}`` built by `repro.models.lm.prepare_fused_weights`
+    — the int8 buffers are reused across calls (no per-call dequant).  The
+    kernel applies the sequence transform, mixed-precision quantization,
+    integer GEMM and inverse transform in one VMEM residency, so the
+    activation never materializes an intermediate in HBM.
+    """
+    from repro.core.stamp import PreparedLinear, stamp_linear
+    prep = PreparedLinear(qw=w["iq"], sw=w["isw"], zw=w["izw"], bias=b)
+    return stamp_linear(x, None, None, stamp_cfg, prepared=prep)
+
+
+# ---------------------------------------------------------------------------
 # attention
 # ---------------------------------------------------------------------------
 

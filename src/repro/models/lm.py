@@ -145,9 +145,19 @@ def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
 
 
 def _linear(x: Array, w, b=None) -> Array:
-    """Matmul accepting a plain array or a packed-int4 dict
-    ``{"q": (din/2, dout) uint8, "scale": (1, dout), "zp": (1, dout)}``."""
-    if isinstance(w, dict):
+    """Matmul accepting a plain array, a packed-int4 dict
+    ``{"q": (din/2, dout) uint8, "scale": (1, dout), "zp": (1, dout)}`` or a
+    fused-path prepared dict ``{"iq", "isw", "izw"}`` (signed int8 codes —
+    used directly by decode/no-STaMP call sites that share the serving
+    params)."""
+    if isinstance(w, dict) and "iq" in w:
+        # target-dtype arithmetic for the same reason as _dequant_packed:
+        # the dequant intermediate is what FSDP all-gathers, and the signed
+        # codes / zero points are integers in [-128, 127] — exact in bf16
+        # (prepare_linear anchors the quant range at zero to guarantee it)
+        wd = ((w["iq"].astype(x.dtype) - w["izw"].astype(x.dtype)) *
+              w["isw"].astype(x.dtype))
+    elif isinstance(w, dict):
         wd = _dequant_packed(w, x.dtype)
     else:
         wd = w.astype(x.dtype)
@@ -155,6 +165,15 @@ def _linear(x: Array, w, b=None) -> Array:
     if b is not None:
         y = y + b.astype(x.dtype)
     return y
+
+
+def _use_fused(stamp: Optional[StampConfig], w) -> bool:
+    """Dispatch to the fused integer kernel only when the serving params hold
+    prepared int8 buffers for this site *and* STaMP is active in fused mode
+    (prefill; decode passes stamp=None and takes the dequant `_linear`)."""
+    return (stamp is not None and stamp.enabled
+            and stamp.execution == "fused"
+            and isinstance(w, dict) and "iq" in w)
 
 
 def _dequant_packed(w: dict, dtype) -> Array:
@@ -178,6 +197,67 @@ def quantize_weights_for_serving(params: Pytree, bits: int = 4) -> Pytree:
         if isinstance(tree, dict):
             return {k: (pack_weight(v, bits) if k in big else visit(v))
                     for k, v in tree.items()}
+        if isinstance(tree, tuple):
+            return tuple(visit(t) for t in tree)
+        return tree
+
+    return visit(params)
+
+
+# sites wired to the fused integer kernel: the attention QKV projections
+# (merged into one concatenated "wqkv" buffer so prefill issues a single
+# kernel call and decode a single dequant matmul) and the MLP down
+# projection (their inputs are exactly the STaMP'd activations).  Attention
+# out-proj and the MLP gate/up pair stay on the reference path — see
+# ROADMAP "Open items".
+FUSED_SITES = ("wo_mlp", "dwo_mlp")
+_QKV = ("wq", "wk", "wv")
+
+
+def prepare_fused_weights(params: Pytree, stamp: StampConfig) -> Pytree:
+    """Hoist the fused sites' weights into cached int8 buffers
+    ``{"iq", "isw", "izw"}`` (per-output-channel scales, signed codes);
+    self-attention wq/wk/wv merge into one ``"wqkv"`` entry (concatenated
+    **once here**, not per forward call).
+
+    Runs once at engine/benchmark setup; stacked ``(nper, din, dout)`` period
+    weights prepare in one shot and slice cleanly under `lax.scan`.  Packed
+    int4 dicts from :func:`quantize_weights_for_serving` are dequantized
+    first and re-coded at ``stamp.fused_weight_bits``.  No-op when the config
+    cannot run the fused kernel.
+    """
+    from repro.core.stamp import fused_eligible, prepare_linear
+    if not fused_eligible(stamp):
+        return params
+
+    def prep(w):
+        if isinstance(w, dict):
+            w = _dequant_packed(w, jnp.float32)
+        p = prepare_linear(w, bits=stamp.fused_weight_bits)
+        return {"iq": p.qw, "isw": p.sw, "izw": p.zw}
+
+    def visit(tree):
+        if isinstance(tree, dict):
+            items = dict(tree)
+            out = {}
+            if all(k in items for k in _QKV) and "wqkv" not in items:
+                # per-output-channel scales make prepare(concat) identical
+                # to concat(prepare): quantize the merged buffer directly
+                raws = [items.pop(k) for k in _QKV]
+                raws = [_dequant_packed(r, jnp.float32) if isinstance(r, dict)
+                        else r.astype(jnp.float32) for r in raws]
+                out["wqkv"] = prep(jnp.concatenate(raws, axis=-1))
+            for k, v in items.items():
+                if k == "encoder":
+                    # the encoder never runs STaMP (stamp=None in
+                    # _encoder_forward): quantizing it is pure precision loss
+                    out[k] = v
+                elif k in FUSED_SITES and \
+                        not (isinstance(v, dict) and "iq" in v):
+                    out[k] = prep(v)
+                else:
+                    out[k] = visit(v)
+            return out
         if isinstance(tree, tuple):
             return tuple(visit(t) for t in tree)
         return tree
@@ -244,10 +324,27 @@ def attn_block(
 ) -> tuple[Array, Optional[dict]]:
     hd, nh, kvh = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
     h = L.rms_norm(x, p["ln1"].astype(x.dtype), cfg.norm_eps)
-    h = _maybe_stamp(h, stamp)
-    q = _linear(h, p["wq"], p.get("bq"))
-    k = _linear(h, p["wk"], p.get("bk"))
-    v = _linear(h, p["wv"], p.get("bv"))
+    if "wqkv" in p:
+        # merged prepared int8 QKV (prepare_fused_weights): biases stay
+        # per-site leaves — concatenating three (dim,) vectors is free,
+        # unlike the weight concat which happened once at prepare time
+        bqkv = None
+        if p.get("bq") is not None:
+            bqkv = jnp.concatenate([p["bq"], p["bk"], p["bv"]], axis=-1)
+        if _use_fused(stamp, p["wqkv"]):
+            # ONE kernel call: the sequence transform + quantize of h runs
+            # once (kernel scratch), amortized over the full QKV width
+            qkv = L.stamp_fused_linear(h, p["wqkv"], bqkv, stamp)
+        else:
+            # decode / reference execution against the same int8 buffers
+            qkv = _linear(_maybe_stamp(h, stamp), p["wqkv"], bqkv)
+        q, k, v = jnp.split(
+            qkv, [cfg.q_dim, cfg.q_dim + cfg.kv_dim], axis=-1)
+    else:
+        h = _maybe_stamp(h, stamp)
+        q = _linear(h, p["wq"], p.get("bq"))
+        k = _linear(h, p["wk"], p.get("bk"))
+        v = _linear(h, p["wv"], p.get("bv"))
     q = apply_rope_heads(q, positions, cfg, nh, hd)
     k = apply_rope_heads(k, positions, cfg, kvh, hd)
     v = _split_heads(v, kvh, hd)
@@ -386,10 +483,14 @@ def ffn_block(p: dict, x: Array, spec: LayerSpec, cfg: ModelConfig, *,
                               group_size=cfg.moe_group_size)
     if spec.ffn in ("mlp", "moe_dense"):
         prefix = "d" if spec.ffn == "moe_dense" else ""
-        g = _maybe_stamp(
-            jax.nn.silu(_linear(h, p[f"{prefix}wi_gate"])) *
-            _linear(h, p[f"{prefix}wi_up"]), stamp)
-        out = out + _linear(g, p[f"{prefix}wo_mlp"])
+        g = jax.nn.silu(_linear(h, p[f"{prefix}wi_gate"])) * \
+            _linear(h, p[f"{prefix}wi_up"])
+        if _use_fused(stamp, p[f"{prefix}wo_mlp"]):
+            out = out + L.stamp_fused_linear(g, p[f"{prefix}wo_mlp"], None,
+                                             stamp)
+        else:
+            out = out + _linear(_maybe_stamp(g, stamp),
+                                p[f"{prefix}wo_mlp"])
     return x + out
 
 

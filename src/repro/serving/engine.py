@@ -45,6 +45,13 @@ class EngineConfig:
 class ServingEngine:
     def __init__(self, params, cfg: ModelConfig, serve: lm.ServeConfig,
                  ecfg: EngineConfig = EngineConfig()):
+        if serve.stamp is not None and serve.stamp.enabled and \
+                serve.stamp.execution == "fused":
+            # hoist the fused sites' weights into cached int8 buffers once;
+            # prefill then runs the integer kernel per STaMP linear and
+            # decode dequantizes the same buffers (no bf16 weight copies
+            # re-materialized per call).
+            params = lm.prepare_fused_weights(params, serve.stamp)
         self.params = params
         self.cfg = cfg
         self.serve = serve

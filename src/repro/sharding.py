@@ -52,18 +52,22 @@ class ShardingPolicy:
             return ()
         if self.multi_pod and self.fsdp_over_pod:
             return ("pod", "data")
-        return ("data",)
+        # bare string, not ("data",): identical GSPMD semantics, but older
+        # jax PartitionSpec __eq__ does not normalize 1-tuples to strings
+        return "data"
 
     # -- parameter rules ---------------------------------------------------
 
     def param_spec(self, path: str, ndim: int) -> P:
         """Rule table keyed on parameter-tree path substrings.  Stacked
         (scanned) parameters carry a leading period axis mapped to None.
-        Packed-int4 serving weights ("…/wq/q", "…/wq/scale") inherit the
-        parent weight's rule (scale/zp have a broadcast leading dim)."""
+        Packed-int4 serving weights ("…/wq/q", "…/wq/scale") and fused-path
+        prepared weights ("…/wq/iq", "…/wq/isw", "…/wq/izw") inherit the
+        parent weight's rule (scale/zp/isw/izw have a broadcast leading
+        dim)."""
         fsdp, tp = self.fsdp_axes, "model"
         packed_leaf = None
-        for suffix in ("/q", "/scale", "/zp"):
+        for suffix in ("/q", "/scale", "/zp", "/iq", "/isw", "/izw"):
             if path.endswith(suffix):
                 packed_leaf = suffix[1:]
                 path = path[: -len(suffix)]
@@ -72,8 +76,9 @@ class ShardingPolicy:
             # embeddings / lm head
             (r"embed$", P(tp, fsdp)),
             (r"head$", P(fsdp, tp)),
-            # attention projections (flat head dims)
-            (r"(wq|wk|wv|xwq|xwk|xwv)$", P(fsdp, tp)),
+            # attention projections (flat head dims; wqkv = fused-path
+            # concatenated self-attention weights, same layout)
+            (r"(wq|wk|wv|wqkv|xwq|xwk|xwv)$", P(fsdp, tp)),
             (r"(wo|xwo)$", P(tp, fsdp)),
             (r"(bq|bk|bv)$", P(tp)),
             # dense mlp
@@ -97,7 +102,7 @@ class ShardingPolicy:
                 break
         if spec is None:
             spec = P()
-        if packed_leaf in ("scale", "zp") and len(spec) >= 2:
+        if packed_leaf in ("scale", "zp", "isw", "izw") and len(spec) >= 2:
             # (…, 1, dout): keep only the output-dim sharding
             spec = P(*spec[:-2], None, spec[-1])
         # stacked-layer leading axis

@@ -46,6 +46,19 @@ class TestShardingRules:
             P(None, "data", "model")
         assert policy.param_spec("period/0/wq/scale", 3) == \
             P(None, None, "model")
+        # fused-path prepared int8 leaves inherit it too
+        assert policy.param_spec("period/0/wq/iq", 3) == \
+            P(None, "data", "model")
+        assert policy.param_spec("period/0/wqkv/iq", 3) == \
+            P(None, "data", "model")
+        assert policy.param_spec("period/0/wqkv/isw", 3) == \
+            P(None, None, "model")
+        assert policy.param_spec("period/0/wo_mlp/iq", 3) == \
+            P(None, "model", "data")
+        assert policy.param_spec("period/0/wq/isw", 3) == \
+            P(None, None, "model")
+        assert policy.param_spec("period/0/wq/izw", 3) == \
+            P(None, None, "model")
 
     def test_seq_sharded_acts(self):
         from repro.launch.mesh import make_local_mesh
@@ -261,7 +274,7 @@ import jax
 import repro.launch.mesh as M
 def small(*, multi_pod=False):
     return jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+                         **M._axis_type_kwargs(2))
 M.make_production_mesh = small
 import repro.launch.dryrun as D
 import dataclasses, repro.configs as C

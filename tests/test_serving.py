@@ -164,9 +164,10 @@ class TestFusedKernelIntegration:
         _, cache = lm.prefill(params, {"tokens": toks}, cfg, base)
         tok = jnp.zeros((2,), jnp.int32)
         l1, _ = lm.decode_step(params, cache, tok, jnp.int32(64), cfg, base)
-        with jax.disable_jit():   # interpret-mode pallas inside scan
-            l2, _ = lm.decode_step(params, cache, tok, jnp.int32(64), cfg,
-                                   fused)
+        # interpret-mode pallas runs fine under jit; jax.disable_jit() must
+        # NOT be used here — pallas_call's interpret impl jits internally and
+        # recurses without bound when jit is disabled.
+        l2, _ = lm.decode_step(params, cache, tok, jnp.int32(64), cfg, fused)
         lm.set_fused_cache_attention(False)
         rel = np.abs(np.asarray(l1) - np.asarray(l2)).max() / \
             (np.abs(np.asarray(l1)).max() + 1e-9)

@@ -1,0 +1,339 @@
+"""Fused integer execution path: `stamp_quant_matmul` kernel vs the unfused
+oracle, `stamp_linear(execution="fused")` vs `execution="reference"` parity
+across transforms/shapes/edge cases, cached-weight reuse (no per-call
+dequant), and the end-to-end prefill/serving wiring."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_platform_name", "cpu")
+
+from repro.core import quant as Q
+from repro.core.stamp import (StampConfig, PreparedLinear, fused_eligible,
+                              prepare_linear, stamp_linear)
+from repro.kernels import ops, ref
+
+
+def rand(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * scale)
+
+
+def rel_err(a, b):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    return float(np.linalg.norm(a - b) / np.linalg.norm(b))
+
+
+def make_int8_weight(din, dout, seed=0, bits=8):
+    """Signed int8 codes + (1, dout) scale / shifted zero point."""
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(din, dout)).astype(np.float32) * 0.05
+    n = float(2**bits - 1)
+    shift = float(1 << (bits - 1))
+    mn, mx = w.min(0, keepdims=True), w.max(0, keepdims=True)
+    sw = np.maximum((mx - mn) / n, 1e-8).astype(np.float32)
+    zp = np.round(-mn / sw)
+    qw = (np.clip(np.round(w / sw) + zp, 0, n) - shift).astype(np.int8)
+    return jnp.asarray(qw), jnp.asarray(sw), jnp.asarray(zp - shift), \
+        jnp.asarray(w)
+
+
+class TestStampQuantMatmulKernel:
+    """Pallas kernel (interpret mode) vs the pure-jnp unfused oracle."""
+
+    @pytest.mark.parametrize("transform", ["none", "dwt", "wht"])
+    @pytest.mark.parametrize("shape", [(2, 128, 64, 96), (1, 100, 48, 40),
+                                       (1, 60, 32, 64)])
+    def test_matches_ref(self, transform, shape):
+        b, s, k, n = shape
+        x = rand((b, s, k), seed=1)
+        qw, sw, zw, _ = make_int8_weight(k, n, seed=2)
+        bias = rand((n,), seed=3)
+        kw = dict(transform=transform, levels=3, skip_first=True, num_hi=16)
+        y = ops.stamp_quant_matmul(x, qw, sw, zw, bias,
+                                   out_dtype=jnp.float32, interpret=True,
+                                   **kw)
+        yr = ref.stamp_quant_matmul_ref(x, qw, sw, zw, bias, **kw)
+        assert rel_err(y, yr) < 1e-5
+
+    @pytest.mark.parametrize("transform", ["dwt", "wht"])
+    def test_multiple_output_blocks_reuse_scratch(self, transform):
+        """N > block_n: blocks after the first reuse the scratch-resident
+        quantized activation — results must match the oracle on every
+        output column."""
+        b, s, k, n = 1, 128, 64, 512   # default block_n=256 → 2 blocks
+        x = rand((b, s, k), seed=30)
+        qw, sw, zw, _ = make_int8_weight(k, n, seed=31)
+        kw = dict(transform=transform, levels=3, skip_first=True, num_hi=16)
+        y = ops.stamp_quant_matmul(x, qw, sw, zw, None,
+                                   out_dtype=jnp.float32, interpret=True,
+                                   **kw)
+        yr = ref.stamp_quant_matmul_ref(x, qw, sw, zw, None, **kw)
+        assert rel_err(y, yr) < 1e-5
+        assert rel_err(y[..., 256:], yr[..., 256:]) < 1e-5
+
+    def test_num_hi_exceeds_seq(self):
+        """num_hi ≥ seq_len: every token quantizes at hi_bits."""
+        x = rand((1, 32, 32), seed=4)
+        qw, sw, zw, _ = make_int8_weight(32, 32, seed=5)
+        kw = dict(transform="dwt", levels=2, skip_first=True, num_hi=512)
+        y = ops.stamp_quant_matmul(x, qw, sw, zw, None,
+                                   out_dtype=jnp.float32, interpret=True,
+                                   **kw)
+        yr = ref.stamp_quant_matmul_ref(x, qw, sw, zw, None, **kw)
+        assert rel_err(y, yr) < 1e-5
+
+    def test_mixed_precision_hi_rows_more_accurate(self):
+        """The first num_hi (transformed) tokens carry 8-bit codes: against
+        an unquantized-activation matmul their rows are strictly closer."""
+        s, k, n = 128, 64, 64
+        x = rand((1, s, k), seed=6)
+        qw, sw, zw, w = make_int8_weight(k, n, seed=7)
+        y = ops.stamp_quant_matmul(x, qw, sw, zw, None, transform="none",
+                                   num_hi=32, out_dtype=jnp.float32,
+                                   interpret=True)
+        exact = x @ jnp.asarray((np.asarray(qw, np.float32) -
+                                 np.asarray(zw)) * np.asarray(sw))
+        err = np.abs(np.asarray(y - exact))
+        assert err[:, :32].mean() < err[:, 32:].mean()
+
+
+class TestStampLinearParity:
+    """stamp_linear(execution='fused') vs execution='reference'."""
+
+    CASES = [
+        # transform, s, din, dout, num_hi
+        ("dwt", 128, 64, 96, 32),
+        ("dwt", 100, 48, 64, 16),     # odd (non-pow2) sequence length
+        ("wht", 128, 64, 64, 32),
+        ("wht", 60, 32, 48, 8),       # identity-tail WHT
+        ("none", 64, 32, 32, 16),
+        ("dwt", 48, 32, 64, 128),     # num_hi ≥ seq_len
+    ]
+
+    @pytest.mark.parametrize("transform,s,din,dout,num_hi", CASES)
+    def test_fused_matches_reference(self, transform, s, din, dout, num_hi):
+        x = rand((2, s, din), seed=8)
+        w = rand((din, dout), seed=9, scale=0.05)
+        b = rand((dout,), seed=10)
+        cfg = StampConfig(seq_transform=transform, num_hi_tokens=num_hi)
+        cfg_f = dataclasses.replace(cfg, execution="fused")
+        y_ref = stamp_linear(x, w, b, cfg)
+        y_fused = stamp_linear(x, w, b, cfg_f)
+        # 8-bit on-the-fly weight codes: parity within quant tolerance
+        assert rel_err(y_fused, y_ref) < 1e-2
+
+    @pytest.mark.parametrize("transform", ["dwt", "wht"])
+    def test_shared_wquant_near_exact(self, transform):
+        """With the same integer weight codes the two paths are the same
+        computation up to float association — far inside 1e-2."""
+        x = rand((1, 128, 64), seed=11)
+        w = rand((64, 96), seed=12, scale=0.05)
+        wq = Q.rtn_quantize_weight(w, bits=4, axis=0)
+        cfg = StampConfig(seq_transform=transform, num_hi_tokens=16)
+        cfg_f = dataclasses.replace(cfg, execution="fused")
+        y_ref = stamp_linear(x, w, None, cfg, w_quant=wq)
+        y_fused = stamp_linear(x, w, None, cfg_f, w_quant=wq)
+        assert rel_err(y_fused, y_ref) < 1e-4
+
+    def test_ineligible_config_falls_back(self):
+        """dct / block granularity / feature_rot can't fuse — the reference
+        path runs with identical semantics (bit-identical here)."""
+        x = rand((1, 64, 32), seed=13)
+        w = rand((32, 32), seed=14, scale=0.05)
+        for cfg in (StampConfig(seq_transform="dct", execution="fused"),
+                    StampConfig(granularity="block", execution="fused")):
+            assert not fused_eligible(cfg)
+            y_f = stamp_linear(x, w, None, cfg)
+            y_r = stamp_linear(x, w, None,
+                               dataclasses.replace(cfg,
+                                                   execution="reference"))
+            np.testing.assert_array_equal(np.asarray(y_f), np.asarray(y_r))
+        rot = jnp.eye(32)
+        cfg = StampConfig(execution="fused")
+        assert not fused_eligible(cfg, feature_rot=rot)
+
+    def test_wide_bits_fall_back(self):
+        """hi/lo bits beyond int8 storage can't fuse (codes would wrap at
+        the signed shift) — must take the reference path, not corrupt."""
+        x = rand((1, 64, 32), seed=24)
+        w = rand((32, 32), seed=25, scale=0.05)
+        cfg = StampConfig(hi_bits=16, execution="fused")
+        assert not fused_eligible(cfg)
+        y_f = stamp_linear(x, w, None, cfg)
+        y_r = stamp_linear(x, w, None,
+                           dataclasses.replace(cfg, execution="reference"))
+        np.testing.assert_array_equal(np.asarray(y_f), np.asarray(y_r))
+
+    def test_explicit_bias_wins_over_prepared(self):
+        """Same precedence on the fused path as on the reference fallback:
+        a bias passed to stamp_linear overrides PreparedLinear.bias."""
+        x = rand((1, 64, 32), seed=26)
+        w = rand((32, 48), seed=27, scale=0.05)
+        b_prep = jnp.ones((48,))
+        b_call = jnp.full((48,), 5.0)
+        cfg = StampConfig(execution="fused", num_hi_tokens=8)
+        prep = prepare_linear(w, b_prep)
+        y_with_call_bias = stamp_linear(x, None, b_call, cfg, prepared=prep)
+        y_manual = stamp_linear(
+            x, None, None, cfg,
+            prepared=dataclasses.replace(prep, bias=b_call))
+        np.testing.assert_allclose(np.asarray(y_with_call_bias),
+                                   np.asarray(y_manual), atol=1e-5)
+
+    def test_disabled_config_plain_matmul(self):
+        x = rand((1, 16, 8), seed=15)
+        w = rand((8, 8), seed=16)
+        cfg = StampConfig(enabled=False, execution="fused")
+        np.testing.assert_allclose(np.asarray(stamp_linear(x, w, None, cfg)),
+                                   np.asarray(x @ w), rtol=1e-6)
+
+
+class TestPreparedWeightReuse:
+    def test_prepared_buffers_skip_dequant(self, monkeypatch):
+        """With a PreparedLinear the fused path must never re-materialize
+        bf16 weights: QuantizedWeight.dequant and prepare_linear may not run
+        per call."""
+        x = rand((1, 64, 32), seed=17)
+        w = rand((32, 48), seed=18, scale=0.05)
+        cfg = StampConfig(execution="fused", num_hi_tokens=8)
+        prep = prepare_linear(w)
+
+        def boom(*a, **k):
+            raise AssertionError("per-call weight re-materialization")
+
+        monkeypatch.setattr(Q.QuantizedWeight, "dequant", boom)
+        monkeypatch.setattr("repro.core.stamp.prepare_linear", boom)
+        y = stamp_linear(x, None, None, cfg, prepared=prep)
+        assert y.shape == (1, 64, 48)
+
+    def test_prepare_from_wquant_reuses_codes(self):
+        w = rand((32, 32), seed=19, scale=0.05)
+        wq = Q.rtn_quantize_weight(w, bits=4, axis=0)
+        prep = prepare_linear(w_quant=wq)
+        # signed shift by 2^(bits-1); dequant identical to the rtn dequant
+        np.testing.assert_array_equal(
+            np.asarray(prep.qw, np.int32) + 8, np.asarray(wq.q, np.int32))
+        np.testing.assert_allclose(np.asarray(prep.dequant(jnp.float32)),
+                                   np.asarray(wq.dequant(jnp.float32)),
+                                   rtol=1e-6)
+
+    def test_one_sided_channel_zero_point_bounded(self):
+        """Zero-anchored range: even an all-positive weight channel keeps
+        the signed zero point inside bf16-exact integer range, so the
+        decode-path bf16 dequant stays faithful."""
+        rng = np.random.default_rng(32)
+        w = jnp.asarray(rng.uniform(4.99, 5.01, (64, 16)).astype(np.float32))
+        prep = prepare_linear(w)
+        zw = np.asarray(prep.zw)
+        assert zw.min() >= -128 and zw.max() <= 127
+        deq16 = ((prep.qw.astype(jnp.bfloat16) -
+                  prep.zw.astype(jnp.bfloat16)) *
+                 prep.sw.astype(jnp.bfloat16)).astype(jnp.float32)
+        # bf16 dequant tracks the f32 dequant to bf16 epsilon, not a
+        # systematic zero-point shift
+        np.testing.assert_allclose(np.asarray(deq16),
+                                   np.asarray(prep.dequant(jnp.float32)),
+                                   rtol=2e-2, atol=1e-2)
+
+    def test_prepared_linear_is_pytree(self):
+        prep = prepare_linear(rand((8, 8), seed=20))
+        leaves = jax.tree.leaves(prep)
+        assert len(leaves) == 3      # qw, sw, zw (bias None)
+        out = jax.jit(lambda p, x: x @ p.dequant(jnp.float32))(
+            prep, rand((4, 8), seed=21))
+        assert out.shape == (4, 8)
+
+
+class TestModelWiring:
+    """prefill/serving runs the integer path end-to-end."""
+
+    def _setup(self):
+        from repro.models import lm
+        from repro.models.config import ModelConfig
+        from repro.serving import kvcache as KV
+        cfg = ModelConfig(name="fused-test", family="dense", num_layers=2,
+                          d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                          vocab_size=128)
+        params = lm.init_params(jax.random.PRNGKey(0), cfg)
+        toks = jnp.asarray(np.random.default_rng(0).integers(0, 128, (2, 64)),
+                           jnp.int32)
+        return lm, KV, cfg, params, {"tokens": toks}
+
+    def test_prepare_fused_weights_converts_sites(self):
+        lm, KV, cfg, params, _ = self._setup()
+        st = StampConfig(num_hi_tokens=8, execution="fused")
+        pf = lm.prepare_fused_weights(params, st)
+        layer0 = jax.tree.map(lambda a: a, pf["period"][0])
+        # self-attention QKV merged into ONE prepared buffer at prepare time
+        assert all(k not in layer0 for k in ("wq", "wk", "wv"))
+        for site in ("wqkv", "wo_mlp"):
+            assert isinstance(layer0[site], dict) and "iq" in layer0[site]
+            assert layer0[site]["iq"].dtype == jnp.int8
+        d = 64
+        assert layer0["wqkv"]["iq"].shape[-1] == d + 2 * (d // 2)  # q+2kv
+        # non-fused sites untouched
+        assert not isinstance(layer0["wi_gate"], dict)
+        # reference-only config: no-op
+        assert lm.prepare_fused_weights(
+            params, StampConfig(execution="reference")) is params
+
+    def test_prefill_fused_tracks_bf16_like_reference(self):
+        """Chaotic 4-bit code flips keep untrained-model logits from matching
+        token-for-token, but the fused path must track the unquantized bf16
+        forward at least as well as the reference quantized path does."""
+        lm, KV, cfg, params, batch = self._setup()
+        st = StampConfig(num_hi_tokens=8)
+        stf = dataclasses.replace(st, execution="fused")
+        kv = KV.KVCacheConfig(quantized=True, num_hi=16)
+        l_bf16, _ = lm.prefill(params, batch, cfg, lm.ServeConfig(
+            stamp=None, kv=KV.KVCacheConfig(quantized=False),
+            cache_capacity=96))
+        l_ref, _ = lm.prefill(params, batch, cfg, lm.ServeConfig(
+            stamp=st, kv=kv, cache_capacity=96))
+        pf = lm.prepare_fused_weights(params, stf)
+        l_fused, cache = lm.prefill(pf, batch, cfg, lm.ServeConfig(
+            stamp=stf, kv=kv, cache_capacity=96))
+        dev_ref = rel_err(l_ref, l_bf16)
+        dev_fused = rel_err(l_fused, l_bf16)
+        assert dev_fused < max(1.5 * dev_ref, 0.05)
+        # decode shares the prepared int8 buffers (dequant `_linear` branch)
+        tok = jnp.argmax(l_fused, -1).astype(jnp.int32)
+        serve = lm.ServeConfig(stamp=stf, kv=kv, cache_capacity=96)
+        logits, _ = lm.decode_step(pf, cache, tok, jnp.int32(64), cfg, serve)
+        assert logits.shape == (2, cfg.padded_vocab)
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_single_layer_parity_tight(self):
+        """One linear inside the model dtype regime (bf16): fused vs
+        reference with shared int8 codes stays inside quant tolerance."""
+        x = rand((2, 64, 64), seed=22).astype(jnp.bfloat16)
+        w = rand((64, 96), seed=23, scale=0.05)
+        cfg = StampConfig(num_hi_tokens=8)
+        cfg_f = dataclasses.replace(cfg, execution="fused")
+        prep = prepare_linear(w)
+        y_f = stamp_linear(x, None, None, cfg_f, prepared=prep)
+        y_r = stamp_linear(x, prep.dequant(jnp.float32), None, cfg)
+        assert rel_err(y_f, y_r) < 1e-2
+
+    def test_engine_runs_fused(self):
+        lm, KV, cfg, params, _ = self._setup()
+        from repro.serving.engine import EngineConfig, ServingEngine
+        serve = lm.ServeConfig(
+            stamp=StampConfig(num_hi_tokens=8, execution="fused"),
+            kv=KV.KVCacheConfig(quantized=True, num_hi=16))
+        eng = ServingEngine(params, cfg, serve,
+                            EngineConfig(max_batch=2, bucket=64, max_seq=96))
+        # weights were prepared (and QKV-merged) once at construction
+        assert "iq" in eng.params["period"][0]["wqkv"]
+        eng.submit(np.arange(10) % 128, max_new_tokens=4)
+        eng.submit(np.arange(20) % 128, max_new_tokens=4)
+        done = eng.run()
+        assert len(done) == 2
+        for r in done:
+            assert r.out_tokens.shape == (4,)
