@@ -23,13 +23,50 @@ STaMP linears run in one of two modes, selected by
   bf16 on every call.  Supports dwt/wht/none transforms, per-token
   granularity; ineligible configs silently fall back to the reference path
   with identical semantics.
+
+Decode-shaped execution
+-----------------------
+Decode has no sequence axis, so its two kernels drop the transform and keep
+only the mixed-precision memory layout:
+
+* `decode_matmul.stamp_decode_matmul` — one token per slot against the same
+  cached int8 weight buffers the prefill kernel uses (8-bit per-token
+  activation quantize + integer GEMM; no per-step bf16 weight
+  re-materialization).  Enabled via ``ServeConfig.fused_decode_matmul``.
+* `cache_attention.cache_decode_attention` — fused attention over the
+  *contiguous* packed mixed-precision KV cache (per-slot dense layout).
+
+Paged-attention block layout
+----------------------------
+`paged_attention.paged_decode_attention` serves the continuous-batching
+engine (`serving/scheduler.py` + `serving/paged_kvcache.py`).  The cache is
+two shared page pools instead of per-slot dense buffers:
+
+* **hi pool** ``(NH, bs, kv, hd)`` int8 — pages holding the first
+  ``num_hi`` logical tokens of each sequence (the attention-sink region)
+  at 8 bits; ``num_hi % bs == 0`` so pages are single-precision.
+* **lo pool** ``(NL, bs, kv, hd/2)`` uint8 — int4 nibble pairs packed along
+  head_dim: one page holds ``bs`` tokens in half the bytes, and per-token
+  f16 scale/zp pages ride alongside so a page is self-describing (swap /
+  preemption moves one contiguous unit).
+
+Each slot maps logical block ``k`` to a physical page through a
+scalar-prefetched block table; the BlockSpec index map does the lookup, so
+Mosaic pipelines page fetches exactly like dense block fetches.  Grid is
+``(slots, kv_heads, NH_seq + NL_seq)`` with the online-softmax (m, l, acc)
+accumulated across the logical-block axis in the revisited output ref.
+Unmapped blocks clamp to page 0 (the null page) and mask out via the
+per-slot length; HBM traffic per step is proportional to *allocated* pages,
+not the engine-wide ``max_seq`` reservation.
 """
 
 from repro.kernels.ops import (  # noqa: F401
     haar_dwt_seq,
     int8_matmul,
     quantize_pack,
+    stamp_decode_matmul,
     stamp_quant_matmul,
     walsh_hadamard,
 )
 from repro.kernels.cache_attention import cache_decode_attention  # noqa: F401
+from repro.kernels.paged_attention import paged_decode_attention  # noqa: F401

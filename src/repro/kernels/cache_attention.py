@@ -31,7 +31,7 @@ def _kernel(q_ref, khi_ref, klo_ref, kshi_ref, kzhi_ref, kslo_ref, kzlo_ref,
     blk = pl.program_id(2)
     q = q_ref[0, 0].astype(jnp.float32) * scale            # (rep, hd)
     hd = q.shape[-1]
-    length = len_ref[0]
+    length = len_ref[0]          # this batch row's length (per-slot block)
 
     def dequant_hi(qref, sref, zref):
         codes = qref[0, :, 0].astype(jnp.float32)          # (hi, hd)
@@ -95,11 +95,12 @@ def cache_decode_attention(entry: dict, q: jax.Array, length: jax.Array,
 
     ``entry``: kvcache layer dict (no periods axis) — k_hi (b, hi, g, hd)
     int8, k_lo (b, S−hi, g, hd/2) uint8, *_scale/zp (b, S, g) f32;
-    ``q``: (b, 1, h, hd); ``length``: (1,) int32.
+    ``q``: (b, 1, h, hd); ``length``: (1,) int32 shared or (b,) per-slot.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     b, _, h, hd = q.shape
+    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
     hi_len = entry["k_hi"].shape[1]
     g = entry["k_hi"].shape[2]
     rep = h // g
@@ -135,7 +136,7 @@ def cache_decode_attention(entry: dict, q: jax.Array, length: jax.Array,
             pl.BlockSpec((1, 1, rep, hd), lambda i, j, k: (i, j, 0, 0)),
             hi_spec, lo_spec, shi_spec, shi_spec, slo_spec, slo_spec,
             hi_spec, lo_spec, shi_spec, shi_spec, slo_spec, slo_spec,
-            pl.BlockSpec((1,), lambda i, j, k: (0,)),
+            pl.BlockSpec((1,), lambda i, j, k: (i,)),
         ],
         out_specs=pl.BlockSpec((1, 1, rep, hd + 2),
                                lambda i, j, k: (i, j, 0, 0)),

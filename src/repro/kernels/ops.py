@@ -13,6 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.decode_matmul import stamp_decode_matmul_pallas
 from repro.kernels.haar_dwt import haar_dwt_pallas
 from repro.kernels.int8_matmul import int8_matmul_pallas
 from repro.kernels.quant_pack import quant_pack_pallas
@@ -88,4 +89,23 @@ def stamp_quant_matmul(x, qw, sw, zw, bias=None, *, transform: str = "dwt",
         x, qw, sw, zw, bias.reshape(1, -1).astype(jnp.float32),
         transform=transform, levels=levels, skip_first=skip_first,
         num_hi=num_hi, hi_bits=hi_bits, lo_bits=lo_bits,
+        out_dtype=out_dtype, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "interpret"))
+def stamp_decode_matmul(x, qw, sw, zw, bias=None, *, out_dtype=None,
+                        interpret: bool | None = None):
+    """Fused single-token decode linear (see `decode_matmul.py`).
+
+    x: (B, K) float — one token per slot; qw: (K, N) signed int8 codes from
+    `prepare_linear`; sw/zw: (1, N) f32.  No sequence transform: a lone
+    decode token is its own (trivially Toeplitz) sequence, so STaMP reduces
+    to the 8-bit per-token quantize + integer GEMM.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    if bias is None:
+        bias = jnp.zeros((1, qw.shape[1]), jnp.float32)
+    return stamp_decode_matmul_pallas(
+        x, qw, sw, zw, bias.reshape(1, -1).astype(jnp.float32),
         out_dtype=out_dtype, interpret=interpret)

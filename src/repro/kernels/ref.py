@@ -55,6 +55,51 @@ def int8_matmul_ref(qx, qw, sx, zx, sw, zw, out_dtype=jnp.float32):
     return (x @ w).astype(out_dtype)
 
 
+def stamp_decode_matmul_ref(x, qw, sw, zw, bias=None,
+                            out_dtype=jnp.float32):
+    """Unfused oracle for `stamp_decode_matmul`: per-row 8-bit fake quant of
+    the token batch, then a dequantized-weight matmul."""
+    xf = x.astype(jnp.float32)
+    mn = jnp.min(xf, axis=-1, keepdims=True)
+    mx = jnp.max(xf, axis=-1, keepdims=True)
+    sc = jnp.maximum((mx - mn) / 255.0, 1e-8)
+    zp = jnp.round(-mn / sc)
+    q = jnp.clip(jnp.round(xf / sc) + zp, 0.0, 255.0)
+    xq = (q - zp) * sc
+    wd = (qw.astype(jnp.float32) - zw) * sw
+    y = xq @ wd
+    if bias is not None:
+        y = y + bias.reshape(1, -1).astype(jnp.float32)
+    return y.astype(out_dtype)
+
+
+def paged_attention_ref(entry, q, lengths, hi_table, lo_table, block_size,
+                        num_hi):
+    """Gather-based oracle for `paged_decode_attention`: densify the mapped
+    pages per slot and run the segment-merged decode attention."""
+    from repro.models.layers import decode_attention_segments
+    from repro.serving import kvcache as KV
+
+    def dense(codes, table):
+        g = codes[table]
+        return g.reshape(g.shape[0], g.shape[1] * g.shape[2], *g.shape[3:])
+
+    segs = []
+    for region, table, offset in (("hi", hi_table, 0),
+                                  ("lo", lo_table, num_hi)):
+        pair = []
+        for name in ("k", "v"):
+            codes = dense(entry[f"{name}_{region}"], table)
+            sc = dense(entry[f"{name}_{region}_scale"], table)
+            zp = dense(entry[f"{name}_{region}_zp"], table)
+            vals = codes.astype(jnp.float32) if region == "hi" \
+                else KV.unpack_nibbles(codes)
+            pair.append(KV.dequant_tokens(vals, sc, zp, jnp.float32))
+        segs.append((pair[0], pair[1], offset))
+    return decode_attention_segments(q.astype(jnp.float32), segs,
+                                     length=lengths)
+
+
 def stamp_quant_matmul_ref(x, qw, sw, zw, bias=None, *, transform="dwt",
                            levels=3, skip_first=True, num_hi=64, hi_bits=8,
                            lo_bits=4, out_dtype=jnp.float32):

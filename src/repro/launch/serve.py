@@ -1,13 +1,19 @@
 """Serving driver: PTQ a (small, trained or random-init) model and serve
-batched requests through the STaMP-quantized engine.
+batched requests through a STaMP-quantized engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --reduced \
-        --requests 16 --prompt-len 96 --max-new 16 [--no-stamp]
+        --requests 16 --prompt-len 96 --max-new 16 \
+        [--engine paged|bucketed] [--no-stamp] [--execution fused]
+
+``--engine bucketed`` is the lockstep slot-batching engine; ``--engine
+paged`` (default) is the continuous-batching engine over the block-paged
+mixed-precision cache — see `repro/serving/engine.py` for when to pick each.
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -17,7 +23,8 @@ from repro.configs import get_config, get_reduced
 from repro.core.ptq import calibrate_and_quantize
 from repro.data.pipeline import DataConfig, calibration_batches
 from repro.models import lm
-from repro.serving.engine import EngineConfig, Request, ServingEngine
+from repro.serving.engine import (BucketedEngine, EngineConfig,
+                                  PagedEngineConfig, PagedServingEngine)
 
 
 def main():
@@ -28,10 +35,22 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=96)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--no-stamp", action="store_true")
+    ap.add_argument("--engine", choices=("paged", "bucketed"),
+                    default="paged",
+                    help="paged = continuous batching over the block-paged "
+                         "cache; bucketed = lockstep slot batching "
+                         "(required for mamba/enc-dec stacks)")
     ap.add_argument("--execution", choices=("reference", "fused"),
                     default="reference",
                     help="STaMP linear path: pure-jnp reference or the "
                          "fused Pallas integer kernel (interpret on CPU)")
+    ap.add_argument("--fused-cache-attention", action="store_true",
+                    help="decode attention through the Pallas packed-cache "
+                         "kernel (paged or contiguous layout)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per cache page (paged engine)")
+    ap.add_argument("--prefill-chunk", type=int, default=128,
+                    help="prompt tokens prefilled per engine step (paged)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -49,14 +68,27 @@ def main():
         serve = lm.ServeConfig(stamp=None, kv=serve.kv,
                                weight_bits=serve.weight_bits)
     elif serve.stamp is not None:
-        import dataclasses
         serve = dataclasses.replace(
             serve, stamp=dataclasses.replace(serve.stamp,
                                              execution=args.execution))
+    if args.fused_cache_attention:
+        serve = dataclasses.replace(serve, fused_cache_attention=True)
 
-    engine = ServingEngine(sparams, cfg, serve,
-                           EngineConfig(max_batch=8, bucket=128,
-                                        max_seq=128 + args.max_new))
+    max_seq = 128 + args.max_new
+    if args.engine == "paged":
+        num_hi = serve.kv.num_hi if serve.kv.quantized else 0
+        bs = args.block_size
+        if num_hi % bs:
+            bs = num_hi      # pages must be single-precision (num_hi % bs == 0)
+            print(f"[serve] block_size adjusted to {bs} (num_hi={num_hi})")
+        engine = PagedServingEngine(
+            sparams, cfg, serve,
+            PagedEngineConfig(max_slots=8, prefill_chunk=args.prefill_chunk,
+                              max_seq=max_seq, block_size=bs))
+    else:
+        engine = BucketedEngine(sparams, cfg, serve,
+                                EngineConfig(max_batch=8, bucket=128,
+                                             max_seq=max_seq))
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
         engine.submit(rng.integers(0, cfg.vocab_size, args.prompt_len),
@@ -65,8 +97,14 @@ def main():
     done = engine.run()
     dt = time.time() - t0
     total_new = sum(len(r.out_tokens) for r in done)
-    print(f"[serve] {len(done)} requests, {total_new} tokens in {dt:.2f}s "
-          f"({total_new / dt:.1f} tok/s on CPU)")
+    ttfts = sorted(r.ttft_s for r in done)
+    print(f"[serve:{args.engine}] {len(done)} requests, {total_new} tokens "
+          f"in {dt:.2f}s ({total_new / dt:.1f} tok/s on CPU), "
+          f"ttft p50={ttfts[len(ttfts) // 2]:.2f}s")
+    if args.engine == "paged":
+        print(f"[serve:paged] steps={engine.stats['steps']} "
+              f"prefill_chunks={engine.stats['prefill_chunks']} "
+              f"preemptions={engine.stats['preemptions']}")
     for r in done[:3]:
         print(f"  req {r.uid}: {r.out_tokens[:10]}")
 

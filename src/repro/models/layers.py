@@ -231,6 +231,61 @@ def decode_attention_segments(
     return out.reshape(b, 1, h, hd).astype(q.dtype)
 
 
+def chunked_prefill_attention(
+    q: Array,                      # (b, c, h, hd) — chunk queries
+    segments: list,                # [(k, v, position_offset), ...] cached
+    k_self: Array,                 # (b, c, kv, hd) — this chunk's raw K
+    v_self: Array,
+    start: Array,                  # scalar int32: tokens already cached
+) -> Array:
+    """Attention for one continuous-batching prefill chunk: queries at
+    global positions ``start + i`` attend to the **cached prefix** (the
+    dequantized paged segments, strictly ``kpos < start`` — the chunk's own
+    freshly written tokens are excluded so they aren't double-counted) and
+    **causally to the raw chunk itself**.  Same per-segment online-softmax
+    merge as `decode_attention_segments`, generalized to multiple query
+    rows; a fully-masked segment's ``m = −1e30`` correction underflows to
+    exactly zero."""
+    b, c, h, hd = q.shape
+    g = k_self.shape[2]
+    rep = h // g
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(b, c, g, rep, hd).astype(jnp.float32) * scale
+    qpos = start + jnp.arange(c)
+
+    parts = []
+
+    def score_part(k_seg, v_seg, mask):          # mask: (c, s_seg) bool
+        sc = jnp.einsum("bcgrd,bsgd->bgrcs", qg,
+                        k_seg.astype(jnp.float32))
+        sc = jnp.where(mask[None, None, None], sc, -1e30)
+        m = jnp.max(sc, axis=-1)                 # (b, g, rep, c)
+        p = jnp.exp(sc - m[..., None])
+        l = jnp.sum(p, axis=-1)
+        o = jnp.einsum("bgrcs,bsgd->bgrcd", p, v_seg.astype(jnp.float32))
+        parts.append((m, l, o))
+
+    for k_seg, v_seg, offset in segments:
+        kpos = offset + jnp.arange(k_seg.shape[1])
+        score_part(k_seg, v_seg,
+                   jnp.broadcast_to((kpos < start)[None, :],
+                                    (c, k_seg.shape[1])))
+    kpos_self = start + jnp.arange(k_self.shape[1])
+    score_part(k_self, v_self, kpos_self[None, :] <= qpos[:, None])
+
+    m_tot = parts[0][0]
+    for m, _, _ in parts[1:]:
+        m_tot = jnp.maximum(m_tot, m)
+    l_tot = jnp.zeros_like(m_tot)
+    o_tot = jnp.zeros_like(parts[0][2])
+    for m, l, o in parts:
+        corr = jnp.exp(m - m_tot)
+        l_tot = l_tot + l * corr
+        o_tot = o_tot + o * corr[..., None]
+    out = o_tot / jnp.maximum(l_tot, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, c, h, hd).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # FFN / MoE
 # ---------------------------------------------------------------------------

@@ -23,6 +23,7 @@ from repro.core.quant import fake_quant
 from repro.models import layers as L
 from repro.models.config import LayerSpec, ModelConfig, ShapeConfig
 from repro.serving import kvcache as KV
+from repro.serving import paged_kvcache as PKV
 from repro.sharding import ShardingPolicy, constrain
 
 Array = jax.Array
@@ -40,6 +41,11 @@ class ServeConfig:
     fused_cache_attention: bool = False          # Pallas kernel decode path
     # (TPU deployment; on CPU runs in interpret mode — see
     #  kernels/cache_attention.py for the traffic analysis)
+    fused_decode_matmul: bool = False            # single-token int8 kernel
+    # against prepared weights (kernels/decode_matmul.py) instead of the
+    # per-step bf16 dequant of the same buffers
+    paged: Optional["PKV.PagedCacheConfig"] = None   # block-paged cache
+    # (continuous-batching engine; None = contiguous per-slot cache)
 
 
 # ---------------------------------------------------------------------------
@@ -151,6 +157,16 @@ def _linear(x: Array, w, b=None) -> Array:
     used directly by decode/no-STaMP call sites that share the serving
     params)."""
     if isinstance(w, dict) and "iq" in w:
+        if _FUSED_DECODE_MATMUL and x.ndim >= 2 and x.shape[-2] == 1:
+            # decode-shaped call (one token per slot): consume the cached
+            # int8 codes directly in the fused kernel instead of
+            # re-materializing the bf16 weight every step
+            from repro.kernels import ops as kops
+            lead = x.shape[:-1]
+            y = kops.stamp_decode_matmul(
+                x.reshape(-1, x.shape[-1]), w["iq"], w["isw"], w["izw"],
+                b, out_dtype=x.dtype)
+            return y.reshape(*lead, y.shape[-1])
         # target-dtype arithmetic for the same reason as _dequant_packed:
         # the dequant intermediate is what FSDP all-gathers, and the signed
         # codes / zero points are integers in [-128, 127] — exact in bf16
@@ -285,6 +301,7 @@ def pack_weight(w: Array, bits: int = 4) -> dict:
 
 
 _FUSED_CACHE_ATTENTION = False
+_FUSED_DECODE_MATMUL = False
 
 
 def kw_fused(kv_cfg) -> bool:
@@ -293,11 +310,21 @@ def kw_fused(kv_cfg) -> bool:
 
 def set_fused_cache_attention(enabled: bool) -> None:
     """Route decode attention through the Pallas packed-cache kernel
-    (kernels/cache_attention.py).  Module-level switch so the functional
-    layer code stays signature-stable; the serving engine sets it from
-    ``ServeConfig.fused_cache_attention``."""
+    (kernels/cache_attention.py for the contiguous layout,
+    kernels/paged_attention.py for the paged one).  Module-level switch so
+    the functional layer code stays signature-stable; the serving engine
+    sets it from ``ServeConfig.fused_cache_attention``."""
     global _FUSED_CACHE_ATTENTION
     _FUSED_CACHE_ATTENTION = enabled
+
+
+def set_fused_decode_matmul(enabled: bool) -> None:
+    """Route decode-shaped linears over prepared int8 weights through
+    `kernels/decode_matmul.stamp_decode_matmul` (no per-step bf16 weight
+    re-materialization).  Set from ``ServeConfig.fused_decode_matmul`` at
+    each decode entry point."""
+    global _FUSED_DECODE_MATMUL
+    _FUSED_DECODE_MATMUL = enabled
 
 
 def _maybe_stamp(x: Array, stamp: Optional[StampConfig]) -> Array:
@@ -320,7 +347,7 @@ def attn_block(
     stamp: Optional[StampConfig], kv_cfg: KV.KVCacheConfig,
     cache_entry: Optional[dict] = None, pos_scalar: Optional[Array] = None,
     enc_out: Optional[Array] = None, causal: bool = True,
-    cache_capacity: Optional[int] = None,
+    cache_capacity: Optional[int] = None, paged: Optional[dict] = None,
 ) -> tuple[Array, Optional[dict]]:
     hd, nh, kvh = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
     h = L.rms_norm(x, p["ln1"].astype(x.dtype), cfg.norm_eps)
@@ -350,10 +377,28 @@ def attn_block(
     v = _split_heads(v, kvh, hd)
 
     new_entry: Optional[dict] = None
-    if mode == "decode":
+    if mode == "decode" and paged is not None:
+        # continuous batching: per-slot write through the block tables,
+        # attention over the mapped pages only
+        assert cache_entry is not None
+        pcfg = paged["cfg"]
+        new_entry = PKV.write_tokens(cache_entry, k, v, paged["pages"],
+                                     paged["offsets"], paged["is_hi"], pcfg)
+        length = paged["lengths"]
+        if pcfg.quant.quantized and kw_fused(kv_cfg):
+            from repro.kernels.paged_attention import paged_decode_attention
+            attn = paged_decode_attention(new_entry, q, length,
+                                          paged["hi_table"],
+                                          paged["lo_table"],
+                                          pcfg.block_size)
+        else:
+            segs = PKV.gather_segments(new_entry, paged["hi_table"],
+                                       paged["lo_table"], pcfg, x.dtype)
+            attn = L.decode_attention_segments(q, segs, length=length)
+    elif mode == "decode":
         assert cache_entry is not None
         new_entry = KV.write_token(cache_entry, k, v, pos_scalar, kv_cfg)
-        length = pos_scalar[None] + 1
+        length = jnp.asarray(pos_scalar).reshape(-1) + 1
         if kv_cfg.quantized and kw_fused(kv_cfg):
             from repro.kernels.cache_attention import cache_decode_attention
             attn = cache_decode_attention(new_entry, q, length)
@@ -374,6 +419,22 @@ def attn_block(
                 kf = policy.constraint(kf, spec)
                 vf = policy.constraint(vf, spec)
             attn = L.decode_attention(q, kf, vf, length=length)
+    elif mode == "prefill" and paged is not None:
+        # chunked prefill into the paged cache: write this chunk's K/V
+        # through the block table, attend to the cached prefix + the raw
+        # chunk.  The first chunk has no prefix and takes the exact
+        # flash-attention path the bucketed prefill uses (numerical parity).
+        assert cache_entry is not None
+        pcfg = paged["cfg"]
+        new_entry = PKV.write_chunk(cache_entry, k, v, paged["pages"],
+                                    paged["offsets"], paged["is_hi"], pcfg)
+        if paged["first"]:
+            attn = L.flash_attention(q, k, v, causal=True)
+        else:
+            segs = PKV.gather_segments(new_entry, paged["hi_table"],
+                                       paged["lo_table"], pcfg, x.dtype)
+            attn = L.chunked_prefill_attention(q, segs, k, v,
+                                               paged["start"])
     else:
         attn = L.flash_attention(q, k, v, causal=causal)
         if mode == "prefill":
@@ -511,7 +572,8 @@ def apply_block(spec: LayerSpec, p: dict, x: Array, cfg: ModelConfig, **kw
                               pos_scalar=kw.get("pos_scalar"),
                               enc_out=kw.get("enc_out"),
                               causal=kw.get("causal", True),
-                              cache_capacity=kw.get("cache_capacity"))
+                              cache_capacity=kw.get("cache_capacity"),
+                              paged=kw.get("paged"))
     elif spec.mixer == "mamba":
         x, entry = mamba_block(p, x, cfg, mode=kw["mode"],
                                policy=kw.get("policy"), stamp=stamp,
@@ -534,13 +596,13 @@ def run_stack(
     kv_cfg: KV.KVCacheConfig = KV.KVCacheConfig(quantized=False),
     cache: Optional[dict] = None, pos_scalar: Optional[Array] = None,
     enc_out: Optional[Array] = None, causal: bool = True, remat: bool = True,
-    cache_capacity: Optional[int] = None,
+    cache_capacity: Optional[int] = None, paged: Optional[dict] = None,
 ) -> tuple[Array, Optional[dict]]:
     """Run prologue (unrolled) + periods (scanned).  Returns (x, cache)."""
     pro, period, nper = cfg.layer_plan()
     kw = dict(mode=mode, positions=positions, policy=policy, stamp=stamp,
               kv_cfg=kv_cfg, pos_scalar=pos_scalar, enc_out=enc_out,
-              causal=causal, cache_capacity=cache_capacity)
+              causal=causal, cache_capacity=cache_capacity, paged=paged)
 
     new_pro_cache = {}
     for i, spec in enumerate(pro):
@@ -718,15 +780,24 @@ def train_loss(params, batch: dict, cfg: ModelConfig,
 
 
 def prefill(params, batch: dict, cfg: ModelConfig,
-            serve: ServeConfig, policy: Optional[ShardingPolicy] = None
-            ) -> tuple[Array, dict]:
+            serve: ServeConfig, policy: Optional[ShardingPolicy] = None,
+            last_pos: Optional[Array] = None) -> tuple[Array, dict]:
     """Full-sequence forward with STaMP activation quantization, producing
-    next-token logits and the mixed-precision quantized KV cache."""
+    next-token logits and the mixed-precision quantized KV cache.
+
+    ``last_pos`` (b,) selects each row's logit position — right-padded
+    batches read the logits at their true last prompt token instead of the
+    final (pad) column.  Default: the last position for every row.
+    """
     x, cache, _ = model_hidden(params, batch, cfg, mode="prefill",
                                policy=policy, stamp=serve.stamp,
                                kv_cfg=serve.kv, remat=False,
                                cache_capacity=serve.cache_capacity)
-    logits = _linear(x[:, -1:], _head_weight(params))[:, 0]
+    if last_pos is None:
+        x_last = x[:, -1:]
+    else:
+        x_last = jnp.take_along_axis(x, last_pos[:, None, None], axis=1)
+    logits = _linear(x_last, _head_weight(params))[:, 0]
     return logits.astype(jnp.float32), cache
 
 
@@ -735,11 +806,15 @@ def decode_step(params, cache: dict, tokens: Array, pos: Array,
                 policy: Optional[ShardingPolicy] = None
                 ) -> tuple[Array, dict]:
     """One-token decode against the quantized cache.  ``tokens``: (b,) int32;
-    ``pos``: scalar int32 current length."""
+    ``pos``: scalar int32 current length (lockstep batch) or (b,) int32
+    per-slot lengths (continuous batching / right-padded prompts)."""
     set_fused_cache_attention(serve.fused_cache_attention)
+    set_fused_decode_matmul(serve.fused_decode_matmul)
     compute_dtype = jnp.bfloat16
     x = _embed(params, tokens[:, None], compute_dtype)
-    positions = jnp.full((1, 1), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = pos[:, None] if pos.ndim == 1 else \
+        jnp.full((1, 1), pos, jnp.int32)
     x, new_cache = run_stack(params, x, cfg, mode="decode",
                              positions=positions, policy=policy,
                              stamp=None, kv_cfg=serve.kv, cache=cache,
@@ -785,3 +860,103 @@ def init_cache(cfg: ModelConfig, batch: int, seq: int,
         elif spec.mixer == "mamba":
             cache[f"pro{i}"] = jax.tree.map(lambda a: a[0], ssm_entry(1))
     return cache
+
+
+# ---------------------------------------------------------------------------
+# continuous batching (paged cache) entry points
+# ---------------------------------------------------------------------------
+
+
+def init_paged_cache(cfg: ModelConfig, pcfg: "PKV.PagedCacheConfig") -> dict:
+    """Zero page pools for every attention position.  Block ids are shared
+    across layer positions (one allocation covers the whole stack), so each
+    position gets its own pool arrays but the same geometry."""
+    pro, period, nper = cfg.layer_plan()
+    hd, kvh = cfg.resolved_head_dim, cfg.num_kv_heads
+    for spec in list(period) + list(pro):
+        if spec.mixer == "mamba" or cfg.encoder_layers:
+            raise NotImplementedError(
+                "paged serving covers attention-only decoder stacks; "
+                "mamba/enc-dec states are slot-dense (use the bucketed "
+                "engine)")
+    cache: dict = {}
+    for j, spec in enumerate(period):
+        if spec.mixer == "attn":
+            cache[str(j)] = PKV.init_pools(nper, kvh, hd, pcfg)
+    for i, spec in enumerate(pro):
+        if spec.mixer == "attn":
+            cache[f"pro{i}"] = jax.tree.map(
+                lambda a: a[0], PKV.init_pools(1, kvh, hd, pcfg))
+    return cache
+
+
+def paged_prefill_chunk(params, pools: dict, tokens: Array, start: Array,
+                        hi_table: Array, lo_table: Array, pages: Array,
+                        offsets: Array, is_hi: Array, last_index: Array,
+                        cfg: ModelConfig, serve: ServeConfig,
+                        first: bool,
+                        policy: Optional[ShardingPolicy] = None
+                        ) -> tuple[Array, dict]:
+    """One prefill chunk of one request into the paged cache.
+
+    ``tokens``: (1, C) right-padded chunk; ``start``: scalar int32 tokens
+    already cached; ``pages/offsets/is_hi``: (C,) host-computed write
+    targets (pad tokens routed to the null page); ``last_index``: scalar
+    chunk-local index of the prompt's final token (its logits are the
+    request's first-token distribution — only meaningful on the last
+    chunk); ``first``: static — the no-prefix chunk takes the same
+    flash-attention path as the bucketed prefill.
+
+    STaMP's sequence transform is applied per chunk (the transform window
+    is the chunk, not the whole prompt): identical to the bucketed engine
+    when the prompt fits one chunk, a documented approximation beyond that.
+    """
+    set_fused_cache_attention(serve.fused_cache_attention)
+    set_fused_decode_matmul(serve.fused_decode_matmul)
+    compute_dtype = jnp.bfloat16
+    x = _embed(params, tokens, compute_dtype)
+    x = constrain(x, policy, lambda pol: pol.acts())
+    c = tokens.shape[1]
+    positions = (start + jnp.arange(c))[None, :]
+    paged = {"cfg": serve.paged, "hi_table": hi_table, "lo_table": lo_table,
+             "pages": pages, "offsets": offsets, "is_hi": is_hi,
+             "start": start, "first": first}
+    x, new_pools = run_stack(params, x, cfg, mode="prefill",
+                             positions=positions, policy=policy,
+                             stamp=serve.stamp, kv_cfg=serve.kv,
+                             cache=pools, paged=paged, remat=False)
+    x = L.rms_norm(x, params["final_norm"].astype(x.dtype), cfg.norm_eps)
+    x_last = jnp.take_along_axis(x, last_index[None, None, None], axis=1)
+    logits = _linear(x_last, _head_weight(params))[:, 0]
+    return logits.astype(jnp.float32), new_pools
+
+
+def paged_decode_step(params, pools: dict, tokens: Array, positions: Array,
+                      hi_table: Array, lo_table: Array, pages: Array,
+                      offsets: Array, is_hi: Array,
+                      cfg: ModelConfig, serve: ServeConfig,
+                      policy: Optional[ShardingPolicy] = None
+                      ) -> tuple[Array, dict]:
+    """One decode step for the whole slot array against the paged cache.
+
+    ``tokens``: (S,) int32 last token per slot; ``positions``: (S,) int32
+    per-slot lengths (the incoming token's position); ``pages/offsets/
+    is_hi``: (S,) write targets (inactive slots routed to the null page).
+    Requests join and leave the slot array between steps — shapes stay
+    static, inactivity is expressed entirely through the host-built index
+    arrays and the per-slot lengths.
+    """
+    set_fused_cache_attention(serve.fused_cache_attention)
+    set_fused_decode_matmul(serve.fused_decode_matmul)
+    compute_dtype = jnp.bfloat16
+    x = _embed(params, tokens[:, None], compute_dtype)
+    paged = {"cfg": serve.paged, "hi_table": hi_table, "lo_table": lo_table,
+             "pages": pages, "offsets": offsets, "is_hi": is_hi,
+             "lengths": positions + 1}
+    x, new_pools = run_stack(params, x, cfg, mode="decode",
+                             positions=positions[:, None], policy=policy,
+                             stamp=None, kv_cfg=serve.kv, cache=pools,
+                             pos_scalar=positions, paged=paged)
+    x = L.rms_norm(x, params["final_norm"].astype(x.dtype), cfg.norm_eps)
+    logits = _linear(x[:, 0], _head_weight(params))
+    return logits.astype(jnp.float32), new_pools

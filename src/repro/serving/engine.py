@@ -1,21 +1,33 @@
-"""Batched serving engine with STaMP quantization.
+"""Serving engines with STaMP quantization: lockstep bucketed batching and
+continuous batching over the block-paged mixed-precision cache.
 
-Request lifecycle: submit → length-bucketed admission → batched prefill
-(STaMP activation quantization + mixed-precision KV cache write) → lockstep
-batched decode → detach on EOS/max-tokens.  The engine keeps one cache per
-active bucket; admission pads prompts to the bucket length so prefill stays
-a single jit'd call (no shape churn).
+Two engines share one request API (`submit` → `run` → completed
+`Request`s with tokens + latency/TTFT):
 
-This is the slot-batching design (vLLM-style continuous batching without
-paging): honest for a single-host deployment and exactly what the decode
-dry-run cells lower.
+* :class:`BucketedEngine` (alias ``ServingEngine``) — the slot-batching
+  design: requests are grouped into fixed-size batches, prompts right-padded
+  to the bucket length, prefill is one jit'd call and decode runs lockstep
+  with **per-slot positions** (each request decodes at its own length, so
+  padding never leaks into the math and the whole batch waits only on the
+  longest *generation*, not on padded prompt positions).
+* :class:`PagedServingEngine` — continuous batching: a
+  `serving/scheduler.py` state machine admits/evicts requests every step
+  against the block-paged cache (`serving/paged_kvcache.py`).  Prompts
+  prefill in fixed-size chunks interleaved with the running decode batch
+  (no bucket padding), requests join/leave the decode slot array at step
+  granularity, and block exhaustion preempts the latest arrival by swapping
+  its pages to host memory — resume is bit-identical, no recompute.
+
+Both engines share the model entry points in `models/lm.py`; with
+``stamp=None`` (or a prompt that fits one prefill chunk) they produce
+token-identical greedy output, which the parity tests pin.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +35,9 @@ import numpy as np
 
 from repro.models import lm
 from repro.models.config import ModelConfig
+from repro.serving import paged_kvcache as PKV
+from repro.serving.scheduler import (RUNNING, SchedRequest, Scheduler,
+                                     SchedulerConfig)
 
 
 @dataclasses.dataclass
@@ -32,6 +47,9 @@ class Request:
     max_new_tokens: int = 32
     out_tokens: Optional[np.ndarray] = None
     latency_s: float = 0.0
+    ttft_s: float = 0.0           # submit → first token
+    preemptions: int = 0
+    submit_t: float = 0.0
 
 
 @dataclasses.dataclass
@@ -42,34 +60,69 @@ class EngineConfig:
     eos_id: int = -1              # <0 disables EOS stopping
 
 
-class ServingEngine:
-    def __init__(self, params, cfg: ModelConfig, serve: lm.ServeConfig,
-                 ecfg: EngineConfig = EngineConfig()):
+@dataclasses.dataclass
+class PagedEngineConfig:
+    max_slots: int = 8            # decode batch width (static jit shape)
+    prefill_chunk: int = 128      # tokens prefilled per engine step
+    max_seq: int = 256            # per-request length cap (table width)
+    block_size: int = 16          # tokens per cache page
+    num_hi_blocks: Optional[int] = None   # pool sizes; None = enough for
+    num_lo_blocks: Optional[int] = None   # max_slots full-length requests
+    eos_id: int = -1
+
+
+class _EngineBase:
+    """Shared request plumbing: fused-weight preparation + submit queue."""
+
+    def __init__(self, params, cfg: ModelConfig, serve: lm.ServeConfig):
         if serve.stamp is not None and serve.stamp.enabled and \
                 serve.stamp.execution == "fused":
             # hoist the fused sites' weights into cached int8 buffers once;
             # prefill then runs the integer kernel per STaMP linear and
-            # decode dequantizes the same buffers (no bf16 weight copies
-            # re-materialized per call).
+            # decode consumes the same buffers through the single-token
+            # integer kernel (kernels/decode_matmul.py) instead of
+            # re-dequantizing them to bf16 every step.
             params = lm.prepare_fused_weights(params, serve.stamp)
+            serve = dataclasses.replace(serve, fused_decode_matmul=True)
         self.params = params
         self.cfg = cfg
         self.serve = serve
-        self.ecfg = ecfg
-        self.queue: List[Request] = []
         self._uid = 0
-        serve = dataclasses.replace(serve, cache_capacity=ecfg.max_seq)
-        self.serve = serve
-        self._prefill = jax.jit(
-            lambda p, b: lm.prefill(p, b, cfg, serve))
-        self._decode = jax.jit(
-            lambda p, c, t, pos: lm.decode_step(p, c, t, pos, cfg, serve))
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> int:
         self._uid += 1
-        self.queue.append(Request(self._uid, np.asarray(prompt, np.int32),
-                                  max_new_tokens))
+        req = Request(self._uid, np.asarray(prompt, np.int32),
+                      max_new_tokens, submit_t=time.time())
+        self._enqueue(req)
         return self._uid
+
+    def _enqueue(self, req: Request) -> None:
+        raise NotImplementedError
+
+
+class BucketedEngine(_EngineBase):
+    """Lockstep slot-batching (the pre-paging design, kept as the simple
+    baseline and for stateful mixers the paged engine doesn't cover)."""
+
+    def __init__(self, params, cfg: ModelConfig, serve: lm.ServeConfig,
+                 ecfg: Optional[EngineConfig] = None):
+        super().__init__(params, cfg, serve)
+        # NOTE: default constructed per instance — a dataclass default
+        # instance in the signature would be shared across engines (mutable
+        # default), letting one engine's config edits leak into another.
+        self.ecfg = ecfg if ecfg is not None else EngineConfig()
+        self.queue: List[Request] = []
+        serve = dataclasses.replace(self.serve,
+                                    cache_capacity=self.ecfg.max_seq)
+        self.serve = serve
+        cfgm = self.cfg
+        self._prefill = jax.jit(
+            lambda p, b, lp: lm.prefill(p, b, cfgm, serve, last_pos=lp))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: lm.decode_step(p, c, t, pos, cfgm, serve))
+
+    def _enqueue(self, req: Request) -> None:
+        self.queue.append(req)
 
     # ------------------------------------------------------------------
     def run(self) -> List[Request]:
@@ -86,17 +139,30 @@ class ServingEngine:
         b = len(reqs)
         bucket = self.ecfg.bucket
         prompts = np.zeros((b, bucket), np.int32)
+        lens = np.zeros((b,), np.int32)
         for i, r in enumerate(reqs):
             p = r.prompt[-bucket:]
-            prompts[i, bucket - len(p):] = p     # left-pad
-        # NOTE: left-padding keeps the *last* position meaningful for the
-        # next-token logits; the first-64-token high-precision region then
-        # covers padding for short prompts — harmless (zero energy tokens).
-        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(prompts)})
+            prompts[i, : len(p)] = p              # right-pad
+            lens[i] = len(p)
+        # Right-padding + per-slot decode positions: pad tokens sit AFTER
+        # every prompt position, so causal attention never sees them, the
+        # next-token logits are read at each row's true last token, and the
+        # first generated token overwrites the pad K/V at position len —
+        # the output is identical to serving the request unpadded (and to
+        # the paged engine's chunked prefill of the same prompt).
+        logits, cache = self._prefill(self.params,
+                                      {"tokens": jnp.asarray(prompts)},
+                                      jnp.asarray(lens - 1))
         max_new = max(r.max_new_tokens for r in reqs)
-        max_new = min(max_new, self.ecfg.max_seq - bucket)
+        max_new = min(max_new, self.ecfg.max_seq - int(lens.max()))
         outs = np.zeros((b, max_new), np.int32)
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        # force the async-dispatched prefill before timestamping, so TTFT
+        # measures execution (as the paged engine's np.argmax does)
+        jax.block_until_ready(tok)
+        t_first = time.time()
+        for r in reqs:
+            r.ttft_s = t_first - r.submit_t
         alive = np.ones(b, bool)
         for step in range(max_new):
             outs[:, step] = np.where(alive, np.asarray(tok), 0)
@@ -106,10 +172,215 @@ class ServingEngine:
                     outs = outs[:, : step + 1]
                     break
             logits, cache = self._decode(self.params, cache, tok,
-                                         jnp.int32(bucket + step))
+                                         jnp.asarray(lens + step))
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         dt = time.time() - t0
         for i, r in enumerate(reqs):
             r.out_tokens = outs[i][: r.max_new_tokens]
             r.latency_s = dt
         return reqs
+
+
+# backward-compatible name: the bucketed engine is the original design
+ServingEngine = BucketedEngine
+
+
+class PagedServingEngine(_EngineBase):
+    """Continuous batching over the block-paged mixed-precision cache.
+
+    Each engine step: (1) the scheduler admits waiting requests into free
+    slots and reserves pages (preempting later arrivals on exhaustion),
+    (2) at most one prefill chunk runs for the earliest admitted request
+    still holding uncached prompt tokens, (3) every RUNNING slot decodes
+    one token through `lm.paged_decode_step` — a single fixed-shape jit
+    call whose membership changes step to step via the host-built block
+    tables and per-slot lengths.  ``events`` records the full admission /
+    join / leave / preemption trace for tests and the benchmark.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, serve: lm.ServeConfig,
+                 ecfg: Optional[PagedEngineConfig] = None):
+        super().__init__(params, cfg, serve)
+        self.ecfg = ecfg if ecfg is not None else PagedEngineConfig()
+        e = self.ecfg
+        quant = self.serve.kv
+        num_hi = quant.num_hi if quant.quantized else 0
+        if quant.quantized and num_hi % e.block_size:
+            raise ValueError("num_hi must be a multiple of block_size")
+        hi_per_seq = num_hi // e.block_size if quant.quantized else 0
+        lo_per_seq = -(-(e.max_seq - num_hi) // e.block_size)
+        n_hi = e.num_hi_blocks if e.num_hi_blocks is not None \
+            else e.max_slots * hi_per_seq + 1
+        n_lo = e.num_lo_blocks if e.num_lo_blocks is not None \
+            else e.max_slots * lo_per_seq + 1
+        self.pcfg = PKV.PagedCacheConfig(
+            block_size=e.block_size, num_lo_blocks=n_lo,
+            num_hi_blocks=max(n_hi, 1), max_blocks_per_seq=lo_per_seq,
+            quant=quant)
+        self.serve = dataclasses.replace(self.serve, paged=self.pcfg,
+                                         cache_capacity=None)
+        self.pools = lm.init_paged_cache(cfg, self.pcfg)
+        self.sched = Scheduler(
+            SchedulerConfig(max_slots=e.max_slots,
+                            prefill_chunk=e.prefill_chunk),
+            self.pcfg, swap_out=self._swap_out, swap_in=self._swap_in)
+        self._requests: Dict[int, Request] = {}
+        self.events: List[tuple] = []     # (step, kind, payload)
+        self.stats = {"steps": 0, "decode_tokens": 0, "prefill_chunks": 0,
+                      "preemptions": 0}
+        self._step_i = 0
+
+        cfgm, serve_p = self.cfg, self.serve
+        self._prefill_first = jax.jit(
+            lambda p, pools, t, s, ht, lt, pg, off, ih, li:
+            lm.paged_prefill_chunk(p, pools, t, s, ht, lt, pg, off, ih, li,
+                                   cfgm, serve_p, first=True))
+        self._prefill_cont = jax.jit(
+            lambda p, pools, t, s, ht, lt, pg, off, ih, li:
+            lm.paged_prefill_chunk(p, pools, t, s, ht, lt, pg, off, ih, li,
+                                   cfgm, serve_p, first=False))
+        self._decode = jax.jit(
+            lambda p, pools, t, pos, ht, lt, pg, off, ih:
+            lm.paged_decode_step(p, pools, t, pos, ht, lt, pg, off, ih,
+                                 cfgm, serve_p))
+
+    # ------------------------------------------------------------------
+    def _enqueue(self, req: Request) -> None:
+        self._requests[req.uid] = req
+        self.sched.submit(SchedRequest(
+            uid=req.uid, prompt=req.prompt[-self.ecfg.max_seq + 1:],
+            max_new_tokens=req.max_new_tokens, arrival=req.uid))
+
+    def _swap_out(self, sreq: SchedRequest) -> None:
+        sreq.swapped = PKV.extract_pages(self.pools, sreq.hi_pages,
+                                         sreq.lo_pages)
+        self.events.append((self._step_i, "preempt", sreq.uid))
+        self.stats["preemptions"] += 1
+
+    def _swap_in(self, sreq: SchedRequest) -> None:
+        self.pools = PKV.insert_pages(self.pools, sreq.swapped,
+                                      sreq.hi_pages, sreq.lo_pages)
+        self.events.append((self._step_i, "resume", sreq.uid))
+
+    # ------------------------------------------------------------------
+    def run(self) -> List[Request]:
+        t0 = time.time()
+        done: List[Request] = []
+        while self.sched.has_work():
+            self._step(done)
+        dt = time.time() - t0
+        for r in done:
+            r.latency_s = r.latency_s or dt
+        return done
+
+    # ------------------------------------------------------------------
+    def _tables(self, sreqs: List[SchedRequest]) -> tuple:
+        """Host-built block tables over the full slot array (unmapped → 0)."""
+        e, pc = self.ecfg, self.pcfg
+        ht = np.zeros((e.max_slots, max(pc.hi_blocks_per_seq, 1)), np.int32)
+        lt = np.zeros((e.max_slots, pc.max_blocks_per_seq), np.int32)
+        for sreq in sreqs:
+            if sreq.slot < 0:
+                continue
+            ht[sreq.slot, : len(sreq.hi_pages)] = sreq.hi_pages
+            lt[sreq.slot, : len(sreq.lo_pages)] = sreq.lo_pages
+        if pc.hi_blocks_per_seq == 0:
+            ht = ht[:, :0]
+        return jnp.asarray(ht), jnp.asarray(lt)
+
+    def _write_target(self, sreq: SchedRequest, pos: int) -> tuple:
+        is_hi, pidx, off = PKV.token_page_index(pos, self.pcfg)
+        page = (sreq.hi_pages if is_hi else sreq.lo_pages)[pidx]
+        return page, off, is_hi
+
+    def _step(self, done: List[Request]) -> None:
+        self._step_i += 1
+        self.stats["steps"] += 1
+        plan = self.sched.plan_step()
+        for sreq in plan.admitted:
+            self.events.append((self._step_i, "admit", sreq.uid))
+
+        if plan.prefill is not None:
+            self._run_prefill_chunk(plan.prefill, done)
+        if plan.decode:
+            self._run_decode(plan.decode, done)
+
+    def _run_prefill_chunk(self, sreq: SchedRequest,
+                           done: List[Request]) -> None:
+        e = self.ecfg
+        start = sreq.pos
+        end = min(start + e.prefill_chunk, sreq.prompt_len)
+        valid = end - start
+        chunk = np.zeros((1, e.prefill_chunk), np.int32)
+        chunk[0, :valid] = sreq.prompt[start:end]
+        pages = np.zeros((e.prefill_chunk,), np.int32)
+        offs = np.zeros((e.prefill_chunk,), np.int32)
+        ishi = np.zeros((e.prefill_chunk,), bool)
+        for i in range(valid):
+            pages[i], offs[i], ishi[i] = self._write_target(sreq, start + i)
+        ht_all, lt_all = self._tables([sreq])
+        slot_sel = np.asarray([sreq.slot], np.int32)
+        ht, lt = ht_all[slot_sel], lt_all[slot_sel]
+        last_index = (sreq.prompt_len - 1) - start if end == sreq.prompt_len \
+            else valid - 1
+        fn = self._prefill_first if start == 0 else self._prefill_cont
+        logits, self.pools = fn(
+            self.params, self.pools, jnp.asarray(chunk),
+            jnp.int32(start), ht, lt, jnp.asarray(pages), jnp.asarray(offs),
+            jnp.asarray(ishi), jnp.int32(last_index))
+        sreq.pos = end
+        self.stats["prefill_chunks"] += 1
+        self.events.append((self._step_i, "prefill_chunk",
+                            (sreq.uid, start, end)))
+        if end == sreq.prompt_len:
+            tok = int(np.argmax(np.asarray(logits[0])))
+            sreq.generated.append(tok)
+            sreq.state = RUNNING
+            req = self._requests[sreq.uid]
+            req.ttft_s = time.time() - req.submit_t
+            self.events.append((self._step_i, "first_token", sreq.uid))
+            self._maybe_finish(sreq, done)
+
+    def _run_decode(self, running: List[SchedRequest],
+                    done: List[Request]) -> None:
+        e = self.ecfg
+        s = e.max_slots
+        tokens = np.zeros((s,), np.int32)
+        positions = np.zeros((s,), np.int32)
+        pages = np.zeros((s,), np.int32)
+        offs = np.zeros((s,), np.int32)
+        ishi = np.zeros((s,), bool)
+        for sreq in running:
+            tokens[sreq.slot] = sreq.generated[-1]
+            positions[sreq.slot] = sreq.pos
+            pages[sreq.slot], offs[sreq.slot], ishi[sreq.slot] = \
+                self._write_target(sreq, sreq.pos)
+        ht, lt = self._tables(running)
+        logits, self.pools = self._decode(
+            self.params, self.pools, jnp.asarray(tokens),
+            jnp.asarray(positions), ht, lt, jnp.asarray(pages),
+            jnp.asarray(offs), jnp.asarray(ishi))
+        logits = np.asarray(logits)
+        self.events.append((self._step_i, "decode",
+                            tuple(sorted(r.uid for r in running))))
+        for sreq in running:
+            sreq.pos += 1                      # last token is now cached
+            tok = int(np.argmax(logits[sreq.slot]))
+            sreq.generated.append(tok)
+            self.stats["decode_tokens"] += 1
+            self._maybe_finish(sreq, done)
+
+    def _maybe_finish(self, sreq: SchedRequest, done: List[Request]) -> None:
+        eos = self.ecfg.eos_id
+        hit_eos = eos >= 0 and sreq.generated and sreq.generated[-1] == eos
+        cap = min(sreq.max_new_tokens,
+                  self.ecfg.max_seq - sreq.prompt_len)
+        if hit_eos or len(sreq.generated) >= cap:
+            out = sreq.generated[: sreq.max_new_tokens]
+            req = self._requests[sreq.uid]
+            req.out_tokens = np.asarray(out, np.int32)
+            req.latency_s = time.time() - req.submit_t
+            req.preemptions = sreq.preemptions
+            self.sched.finish(sreq)
+            self.events.append((self._step_i, "finish", sreq.uid))
+            done.append(req)

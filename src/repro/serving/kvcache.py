@@ -9,7 +9,10 @@ Layout per attention stack (stacked over scan periods ``P``):
   nibbles packed along ``head_dim``.
 * ``*_scale, *_zp``  — ``(P, b, s, kv)`` float16 per-token/per-head dynamic
   quantization params (§B.2: per token, sequence and head; f16 is exact for
-  zp ≤ 255 and halves metadata traffic — §Perf decode iter 7).
+  zp ≤ 255 and halves metadata traffic — §Perf decode iter 7).  zp lands in
+  [0, 255] whenever a token's values span zero (the typical K/V case); a
+  one-sided token far from zero can push zp past f16's 2048 exact-integer
+  range, degrading gracefully to f16 rounding of the zero point.
 
 Effective width: (64·8 + (s−64)·4)/s ≈ 4.008 bits at s=32k — the paper's
 4.125 at s=2k.  The sequence axis is sharded over the ``model`` mesh axis
@@ -192,21 +195,14 @@ def write_token(entry: dict, k_new: Array, v_new: Array, pos: Array,
                 cfg: KVCacheConfig) -> dict:
     """Decode path: write one (b, 1, kv, hd) K/V at position ``pos``.
 
+    ``pos`` is a scalar (lockstep batch — every slot at the same position)
+    or a (b,) vector (continuous batching — each slot at its own length).
     Both the hi (int8) and lo (packed int4) regions are updated at a clamped
     index and the correct one selected on ``pos < num_hi`` — branch-free, so
     it lowers to two dynamic-update-slices under jit.
     """
-    if not cfg.quantized:
-        out = dict(entry)
-        for name, t in (("k", k_new), ("v", v_new)):
-            out[name] = jax.lax.dynamic_update_slice_in_dim(
-                entry[name], t.astype(entry[name].dtype), pos, axis=1)
-        return out
-
-    out = dict(entry)
-    hi_len = entry["k_hi"].shape[1]
-    in_hi = pos < hi_len
-    pos_lo = pos - hi_len
+    pos = jnp.asarray(pos)
+    per_slot = pos.ndim == 1
 
     def onehot_write(buf, token, write_pos, enabled):
         """Scatter one token along the (possibly GSPMD-sharded) sequence
@@ -214,11 +210,33 @@ def write_token(entry: dict, k_new: Array, v_new: Array, pos: Array,
         traced position on a sharded axis makes GSPMD all-gather the whole
         buffer (it cannot prove which shard is written); the one-hot form
         partitions perfectly — each shard touches only its local tile
-        (§Perf decode iter 5)."""
+        (§Perf decode iter 5).  Vector positions broadcast per batch row."""
         s = buf.shape[1]
-        iota = jax.lax.broadcasted_iota(jnp.int32, (1, s) + (1,) * (buf.ndim - 2), 1)
-        hit = (iota == write_pos) & enabled
+        iota = jax.lax.broadcasted_iota(
+            jnp.int32, (1, s) + (1,) * (buf.ndim - 2), 1)
+        tail = (1,) * (buf.ndim - 1)
+        wp = jnp.asarray(write_pos).reshape(-1, *tail)
+        en = jnp.asarray(enabled).reshape(-1, *tail)
+        hit = (iota == wp) & en
         return jnp.where(hit, token.astype(buf.dtype), buf)
+
+    if not cfg.quantized:
+        out = dict(entry)
+        for name, t in (("k", k_new), ("v", v_new)):
+            if per_slot:
+                out[name] = onehot_write(entry[name], t, pos,
+                                         jnp.asarray(True))
+            else:
+                out[name] = jax.lax.dynamic_update_slice_in_dim(
+                    entry[name], t.astype(entry[name].dtype), pos, axis=1)
+        return out
+
+    out = dict(entry)
+    hi_len = entry["k_hi"].shape[1]
+    in_hi = pos < hi_len
+    pos_lo = pos - hi_len
+    # (b|1, 1, 1) for the per-(token, head) scale/zp selects
+    in_hi_b = jnp.asarray(in_hi).reshape(-1, 1, 1)
 
     for name, t in (("k", k_new), ("v", v_new)):
         q8, sc8, zp8 = quant_tokens(t, cfg.hi_bits)
@@ -227,8 +245,8 @@ def write_token(entry: dict, k_new: Array, v_new: Array, pos: Array,
         out[f"{name}_hi"] = onehot_write(entry[f"{name}_hi"], q8, pos, in_hi)
         out[f"{name}_lo"] = onehot_write(entry[f"{name}_lo"],
                                          pack_nibbles(q4), pos_lo, ~in_hi)
-        sc = jnp.where(in_hi, sc8, sc4)
-        zp = jnp.where(in_hi, zp8, zp4)
+        sc = jnp.where(in_hi_b, sc8, sc4)
+        zp = jnp.where(in_hi_b, zp8, zp4)
         out[f"{name}_scale"] = onehot_write(entry[f"{name}_scale"], sc, pos,
                                             jnp.asarray(True))
         out[f"{name}_zp"] = onehot_write(entry[f"{name}_zp"], zp, pos,

@@ -1,0 +1,340 @@
+"""Block-paged mixed-precision KV cache — the serving-time layout behind
+continuous batching.
+
+The contiguous cache (`serving/kvcache.py`) reserves ``max_seq`` tokens per
+batch slot whether or not a request uses them; every decode step then streams
+that full reservation through the attention reduction.  Here the cache is a
+**pool of fixed-size pages** shared by all slots, indexed per request through
+a block table, so
+
+* HBM held per request is proportional to its *actual* length (rounded up to
+  one page), and
+* int4 nibble packing quadruples the tokens per HBM page vs bf16 — the
+  "4.008-bit effective cache" (§B.2) becomes 4.008 bits of *allocated* HBM,
+  not just of traffic.
+
+Layout per attention stack (stacked over scan periods ``P``; quantization
+reuses `kvcache.py`'s per-token quant + nibble packing bit-for-bit):
+
+* **hi pool** — ``k_hi / v_hi``: ``(P, NH, bs, kv, hd)`` int8.  The first
+  ``num_hi`` (=64) logical tokens of every sequence live here at 8 bits (the
+  attention-sink region, §B.2); ``num_hi % bs == 0`` so a page is entirely
+  hi or entirely lo.
+* **lo pool** — ``k_lo / v_lo``: ``(P, NL, bs, kv, hd/2)`` uint8, two int4
+  nibbles packed along head_dim.
+* ``*_scale / *_zp`` — ``(P, N?, bs, kv)`` float16 per-token params,
+  paged alongside their codes (a page is self-describing, so eviction /
+  swap moves one contiguous unit).
+
+Page 0 of each pool is the **null page**: never allocated, always zero.
+Index maps clamp unmapped logical blocks to it, and masked writes are routed
+there, so neither reads nor scatters need a validity branch.
+
+Block ids are shared across layers and periods (one allocation covers the
+whole stack, vLLM-style), which keeps the allocator — a host-side numpy free
+list — out of the jit'd step entirely: the engine turns (slot, position) into
+(page, offset) arrays on the host and the device code only ever sees dense
+int32 indices.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving import kvcache as KV
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedCacheConfig:
+    """Pool geometry.  ``quant`` carries the precision split (num_hi/bits)."""
+
+    block_size: int = 16          # tokens per page
+    num_lo_blocks: int = 64       # lo-pool pages (page 0 = null)
+    num_hi_blocks: int = 16       # hi-pool pages (page 0 = null)
+    max_blocks_per_seq: int = 16  # lo-table width (static decode grid)
+    quant: KV.KVCacheConfig = KV.KVCacheConfig()
+
+    def __post_init__(self):
+        if self.quant.quantized and self.quant.num_hi % self.block_size:
+            raise ValueError(
+                f"num_hi={self.quant.num_hi} must be a multiple of "
+                f"block_size={self.block_size} (pages are single-precision)")
+
+    @property
+    def hi_blocks_per_seq(self) -> int:
+        if not self.quant.quantized:
+            return 0
+        return self.quant.num_hi // self.block_size
+
+    @property
+    def num_hi(self) -> int:
+        return self.quant.num_hi if self.quant.quantized else 0
+
+
+# ---------------------------------------------------------------------------
+# pools
+# ---------------------------------------------------------------------------
+
+
+def init_pools(periods: int, kv_heads: int, head_dim: int,
+               cfg: PagedCacheConfig) -> dict:
+    """Zero page pools for one attention position in the period pattern."""
+    bs = cfg.block_size
+    if not cfg.quant.quantized:
+        shape = (periods, cfg.num_lo_blocks, bs, kv_heads, head_dim)
+        return {"k": jnp.zeros(shape, jnp.bfloat16),
+                "v": jnp.zeros(shape, jnp.bfloat16)}
+    nh, nl = cfg.num_hi_blocks, cfg.num_lo_blocks
+    return {
+        "k_hi": jnp.zeros((periods, nh, bs, kv_heads, head_dim), jnp.int8),
+        "v_hi": jnp.zeros((periods, nh, bs, kv_heads, head_dim), jnp.int8),
+        "k_lo": jnp.zeros((periods, nl, bs, kv_heads, head_dim // 2),
+                          jnp.uint8),
+        "v_lo": jnp.zeros((periods, nl, bs, kv_heads, head_dim // 2),
+                          jnp.uint8),
+        # f16 for the same exactness/traffic argument as the contiguous cache
+        "k_hi_scale": jnp.zeros((periods, nh, bs, kv_heads), jnp.float16),
+        "k_hi_zp": jnp.zeros((periods, nh, bs, kv_heads), jnp.float16),
+        "v_hi_scale": jnp.zeros((periods, nh, bs, kv_heads), jnp.float16),
+        "v_hi_zp": jnp.zeros((periods, nh, bs, kv_heads), jnp.float16),
+        "k_lo_scale": jnp.zeros((periods, nl, bs, kv_heads), jnp.float16),
+        "k_lo_zp": jnp.zeros((periods, nl, bs, kv_heads), jnp.float16),
+        "v_lo_scale": jnp.zeros((periods, nl, bs, kv_heads), jnp.float16),
+        "v_lo_zp": jnp.zeros((periods, nl, bs, kv_heads), jnp.float16),
+    }
+
+
+def pool_bytes(entry: dict) -> int:
+    return sum(int(a.size) * a.dtype.itemsize for a in entry.values())
+
+
+# ---------------------------------------------------------------------------
+# host-side page allocator
+# ---------------------------------------------------------------------------
+
+
+class OutOfBlocks(Exception):
+    """Raised by the allocator; the scheduler turns it into preemption."""
+
+
+class BlockAllocator:
+    """Free-list allocator over the hi and lo pools (host, deterministic).
+
+    Page ids are handed out lowest-first so identical request streams
+    produce identical placements (the engine-parity tests rely on this).
+    Page 0 of either pool is never allocated — it is the null page.
+    """
+
+    def __init__(self, cfg: PagedCacheConfig):
+        self.cfg = cfg
+        self._free_hi = list(range(1, cfg.num_hi_blocks)) \
+            if cfg.quant.quantized else []
+        self._free_lo = list(range(1, cfg.num_lo_blocks))
+
+    def free_counts(self) -> tuple[int, int]:
+        return len(self._free_hi), len(self._free_lo)
+
+    def can_allocate(self, n_hi: int, n_lo: int) -> bool:
+        return n_hi <= len(self._free_hi) and n_lo <= len(self._free_lo)
+
+    def alloc_hi(self) -> int:
+        if not self._free_hi:
+            raise OutOfBlocks("hi pool exhausted")
+        return self._free_hi.pop(0)
+
+    def alloc_lo(self) -> int:
+        if not self._free_lo:
+            raise OutOfBlocks("lo pool exhausted")
+        return self._free_lo.pop(0)
+
+    def free(self, hi_ids, lo_ids) -> None:
+        for i in hi_ids:
+            assert i > 0 and i not in self._free_hi
+            self._free_hi.append(i)
+        for i in lo_ids:
+            assert i > 0 and i not in self._free_lo
+            self._free_lo.append(i)
+        self._free_hi.sort()
+        self._free_lo.sort()
+
+
+# ---------------------------------------------------------------------------
+# host-side index math (slot position -> page/offset)
+# ---------------------------------------------------------------------------
+
+
+def token_page_index(pos: int, cfg: PagedCacheConfig) -> tuple[bool, int, int]:
+    """Logical position -> (is_hi, page_index_within_table, offset)."""
+    bs = cfg.block_size
+    if pos < cfg.num_hi:
+        return True, pos // bs, pos % bs
+    rel = pos - cfg.num_hi
+    return False, rel // bs, rel % bs
+
+
+# ---------------------------------------------------------------------------
+# device-side write / read
+# ---------------------------------------------------------------------------
+
+
+def _quant_token(t: Array, bits: int) -> tuple[Array, Array, Array]:
+    """Per-token quant matching `kvcache.quant_tokens` + signed shift for
+    8-bit codes (identical math, so paged and contiguous caches hold
+    bit-identical codes for the same K/V)."""
+    q, sc, zp = KV.quant_tokens(t, bits)
+    if bits == 8:
+        q, zp = KV.to_signed8(q, zp)
+        return q.astype(jnp.int8), sc, zp
+    return KV.pack_nibbles(q), sc, zp
+
+
+def _scatter_tokens(entry: dict, kc: Array, vc: Array,
+                    pages: Array, offsets: Array, is_hi: Array,
+                    cfg: PagedCacheConfig) -> dict:
+    """Scatter N token rows into the pools.  ``kc / vc``: (N, kv, hd);
+    ``pages / offsets``: (N,) int32 physical page + in-page offset
+    (host-computed); ``is_hi``: (N,) bool.  A write lands in exactly one
+    pool — the other pool's scatter (and any masked/pad token) is routed to
+    its null page, which is never read unmasked, so no validity branch is
+    needed on device."""
+    out = dict(entry)
+    if not cfg.quant.quantized:
+        pg_lo = jnp.where(is_hi, 0, pages)
+        for name, t in (("k", kc), ("v", vc)):
+            out[name] = entry[name].at[pg_lo, offsets].set(
+                t.astype(entry[name].dtype))
+        return out
+    pg_hi = jnp.where(is_hi, pages, 0)
+    pg_lo = jnp.where(is_hi, 0, pages)
+    for name, t in (("k", kc), ("v", vc)):
+        q8, sc8, zp8 = _quant_token(t, 8)
+        q4, sc4, zp4 = _quant_token(t, cfg.quant.lo_bits)
+        out[f"{name}_hi"] = entry[f"{name}_hi"].at[pg_hi, offsets].set(q8)
+        out[f"{name}_lo"] = entry[f"{name}_lo"].at[pg_lo, offsets].set(q4)
+        for suffix, hi_val, lo_val in (("scale", sc8, sc4), ("zp", zp8, zp4)):
+            out[f"{name}_hi_{suffix}"] = \
+                entry[f"{name}_hi_{suffix}"].at[pg_hi, offsets].set(
+                    hi_val.astype(jnp.float16))
+            out[f"{name}_lo_{suffix}"] = \
+                entry[f"{name}_lo_{suffix}"].at[pg_lo, offsets].set(
+                    lo_val.astype(jnp.float16))
+    return out
+
+
+def write_tokens(entry: dict, k_new: Array, v_new: Array,
+                 pages: Array, offsets: Array, is_hi: Array,
+                 cfg: PagedCacheConfig) -> dict:
+    """Decode path: scatter one new token per slot into the pools.
+    ``k_new / v_new``: (S, 1, kv, hd); inactive slots arrive with
+    ``pages == 0`` (the null page)."""
+    return _scatter_tokens(entry, k_new[:, 0], v_new[:, 0], pages, offsets,
+                           is_hi, cfg)
+
+
+def write_chunk(entry: dict, k: Array, v: Array,
+                pages: Array, offsets: Array, is_hi: Array,
+                cfg: PagedCacheConfig) -> dict:
+    """Prefill path: scatter a (1, C, kv, hd) K/V chunk of one slot into
+    the pools; pad tokens beyond the chunk's valid length arrive with
+    ``pages == 0``."""
+    return _scatter_tokens(entry, k[0], v[0], pages, offsets, is_hi, cfg)
+
+
+def gather_segments(entry: dict, hi_table: Array, lo_table: Array,
+                    cfg: PagedCacheConfig, dtype=jnp.bfloat16):
+    """Block tables -> dense dequantized segments for the XLA attention path.
+
+    ``hi_table``: (S, nh) int32; ``lo_table``: (S, nl) int32 — unmapped
+    logical blocks hold 0 (the null page, all-zero) and are masked by length
+    downstream.  Returns ``[(k_hi, v_hi, 0), (k_lo, v_lo, num_hi)]`` shaped
+    (S, nh*bs, kv, hd) / (S, nl*bs, kv, hd) — the same segment structure
+    `decode_attention_segments` consumes for the contiguous cache, so the
+    two layouts share one attention implementation (and its exact numerics).
+    """
+    s = hi_table.shape[0] if cfg.quant.quantized else lo_table.shape[0]
+    bs = cfg.block_size
+
+    def dense(codes, lo: bool):
+        g = codes[lo_table if lo else hi_table]       # (S, n, bs, kv, ...)
+        n = g.shape[1]
+        return g.reshape(s, n * bs, *g.shape[3:])
+
+    if not cfg.quant.quantized:
+        k = dense(entry["k"], True).astype(dtype)
+        v = dense(entry["v"], True).astype(dtype)
+        return [(k, v, 0)]
+
+    segs = []
+    regions = (("hi", False, 0), ("lo", True, cfg.num_hi))
+    if hi_table.shape[1] == 0:           # no sink region configured
+        regions = regions[1:]
+    for region, lo, offset in regions:
+        kv_pair = []
+        for name in ("k", "v"):
+            codes = dense(entry[f"{name}_{region}"], lo)
+            sc = dense(entry[f"{name}_{region}_scale"], lo)
+            zp = dense(entry[f"{name}_{region}_zp"], lo)
+            if region == "hi":
+                vals = codes.astype(jnp.float32)
+            else:
+                vals = KV.unpack_nibbles(codes)
+            kv_pair.append(KV.dequant_tokens(vals, sc, zp, dtype))
+        segs.append((kv_pair[0], kv_pair[1], offset))
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# page swap (host <-> device) — preemption support
+# ---------------------------------------------------------------------------
+
+
+def _has_periods_axis(entry: dict) -> bool:
+    """Scanned-period pools are (P, N, bs, kv, hd); prologue entries come
+    period-stripped as (N, bs, kv, hd) (see `lm.init_paged_cache`) — the
+    page axis moves accordingly."""
+    probe = entry["k_hi"] if "k_hi" in entry else entry["k"]
+    return probe.ndim == 5
+
+
+def extract_pages(pools: dict, hi_ids: list[int], lo_ids: list[int]) -> dict:
+    """Copy a request's pages to host memory (vLLM-style swap-out).  The
+    result maps each layer key to {array_name: np.ndarray of the selected
+    pages} and restores bit-identically via :func:`insert_pages`, so a
+    preempted request resumes from the exact cache state it was evicted
+    with — no recompute, no numeric drift."""
+    hi = np.asarray(hi_ids, np.int32)
+    lo = np.asarray(lo_ids, np.int32)
+    swapped = {}
+    for layer_key, entry in pools.items():
+        periods = _has_periods_axis(entry)
+        layer = {}
+        for name, arr in entry.items():
+            ids = lo if (name in ("k", "v") or "_lo" in name) else hi
+            layer[name] = np.asarray(arr[:, ids] if periods else arr[ids])
+        swapped[layer_key] = layer
+    return swapped
+
+
+def insert_pages(pools: dict, swapped: dict, hi_ids: list[int],
+                 lo_ids: list[int]) -> dict:
+    """Swap-in: place saved pages at (possibly different) page ids."""
+    hi = jnp.asarray(np.asarray(hi_ids, np.int32))
+    lo = jnp.asarray(np.asarray(lo_ids, np.int32))
+    out = {}
+    for layer_key, entry in pools.items():
+        periods = _has_periods_axis(entry)
+        layer = dict(entry)
+        for name, arr in entry.items():
+            ids = lo if (name in ("k", "v") or "_lo" in name) else hi
+            if ids.size:
+                saved = jnp.asarray(swapped[layer_key][name])
+                layer[name] = arr.at[:, ids].set(saved) if periods \
+                    else arr.at[ids].set(saved)
+        out[layer_key] = layer
+    return out

@@ -1,0 +1,237 @@
+"""Continuous-batching scheduler: request queue, slot state machine,
+per-step admission/eviction, and block-exhaustion preemption.
+
+The scheduler is pure host-side bookkeeping (deterministic Python over the
+numpy prompt arrays) — it never touches device memory.  Each engine step it
+produces a :class:`StepPlan`:
+
+* **admissions** — FCFS by arrival.  A request is admitted when a slot is
+  free and (for a preempted request resuming) every page it held can be
+  re-allocated; the engine then swaps its saved pages back in.
+* **one prefill chunk** — the earliest admitted request that still has
+  prompt tokens uncached gets its next ``prefill_chunk`` tokens.  Prefill is
+  chunked *between* decode steps rather than bucket-padded up front, so a
+  long prompt never stalls the running batch for more than one chunk.
+* **the decode batch** — every RUNNING slot decodes one token.  Requests
+  join and leave this batch at step granularity; there is no lockstep
+  bucket.
+
+Preemption: when a decode step needs a fresh page and the pools are
+exhausted, the victim is the **latest-admitted** active request (vLLM's
+priority rule — earlier arrivals are never starved by later ones).  Its
+pages are swapped to host memory via the engine callback *before* they are
+freed, and the request re-enters the waiting queue at its original arrival
+rank.  On resume the saved pages are swapped back in at whatever page ids
+are then free — block tables indirect through the pools, so placement is
+irrelevant — and generation continues from the exact cache state it was
+evicted with (bit-identical, no recompute).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.serving.paged_kvcache import (BlockAllocator, OutOfBlocks,
+                                         PagedCacheConfig)
+
+WAITING = "waiting"
+PREFILLING = "prefilling"
+RUNNING = "running"
+FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class SchedRequest:
+    """Scheduler-side state for one engine request."""
+
+    uid: int
+    prompt: np.ndarray               # (len,) int32
+    max_new_tokens: int
+    arrival: int                     # FCFS rank (never changes)
+    state: str = WAITING
+    slot: int = -1
+    pos: int = 0                     # tokens materialized in the cache
+    generated: List[int] = dataclasses.field(default_factory=list)
+    hi_pages: List[int] = dataclasses.field(default_factory=list)
+    lo_pages: List[int] = dataclasses.field(default_factory=list)
+    swapped: Optional[dict] = None   # host-side pages while preempted
+    admit_seq: int = -1              # preemption priority (latest = victim)
+    preemptions: int = 0
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    def pages_for(self, pos: int, cfg: PagedCacheConfig) -> tuple[int, int]:
+        """(hi, lo) page counts needed to hold positions [0, pos)."""
+        bs = cfg.block_size
+        hi_tokens = min(pos, cfg.num_hi)
+        lo_tokens = pos - hi_tokens
+        return -(-hi_tokens // bs), -(-lo_tokens // bs)
+
+
+@dataclasses.dataclass
+class StepPlan:
+    admitted: List[SchedRequest]
+    resumed: List[SchedRequest]      # subset of admitted that swapped back in
+    prefill: Optional[SchedRequest]  # next chunk is prompt[pos : pos+chunk]
+    decode: List[SchedRequest]       # RUNNING slots, slot-index order
+    preempted: List[SchedRequest]    # evicted (already swapped out + freed)
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    max_slots: int = 8
+    prefill_chunk: int = 64
+
+
+class Scheduler:
+    def __init__(self, cfg: SchedulerConfig, cache_cfg: PagedCacheConfig,
+                 swap_out: Callable[[SchedRequest], None],
+                 swap_in: Callable[[SchedRequest], None]):
+        self.cfg = cfg
+        self.cache_cfg = cache_cfg
+        self.alloc = BlockAllocator(cache_cfg)
+        self._swap_out = swap_out
+        self._swap_in = swap_in
+        self.waiting: List[SchedRequest] = []    # sorted by arrival
+        self.active: List[SchedRequest] = []     # PREFILLING | RUNNING
+        self._free_slots = list(range(cfg.max_slots))
+        self._admit_counter = 0
+        self.num_preemptions = 0
+        self._step_preempted: List[SchedRequest] = []
+
+    # ------------------------------------------------------------------
+    def submit(self, sreq: SchedRequest) -> None:
+        self.waiting.append(sreq)
+        self.waiting.sort(key=lambda r: r.arrival)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.active)
+
+    # ------------------------------------------------------------------
+    def plan_step(self) -> StepPlan:
+        self._step_preempted: List[SchedRequest] = []
+        admitted, resumed = self._admit()
+        prefill = self._pick_prefill()
+        self._ensure_decode_capacity()
+        decode = sorted((r for r in self.active if r.state == RUNNING),
+                        key=lambda r: r.slot)
+        if prefill is not None and prefill.state != PREFILLING:
+            prefill = None           # lost its pages to a decode preemption
+        return StepPlan(admitted=admitted, resumed=resumed, prefill=prefill,
+                        decode=decode, preempted=self._step_preempted)
+
+    def finish(self, sreq: SchedRequest) -> None:
+        sreq.state = FINISHED
+        self.active.remove(sreq)
+        self._free_slots.append(sreq.slot)
+        self._free_slots.sort()
+        self.alloc.free(sreq.hi_pages, sreq.lo_pages)
+        sreq.hi_pages, sreq.lo_pages = [], []
+        sreq.slot = -1
+
+    # ------------------------------------------------------------------
+    def _admit(self) -> tuple[List[SchedRequest], List[SchedRequest]]:
+        admitted, resumed = [], []
+        while self.waiting and self._free_slots:
+            sreq = self.waiting[0]
+            if sreq.swapped is not None:
+                nh, nl = sreq.pages_for(sreq.pos, self.cache_cfg)
+                if not self.alloc.can_allocate(nh, nl):
+                    break            # resume needs every page back at once
+                self.waiting.pop(0)
+                sreq.hi_pages = [self.alloc.alloc_hi() for _ in range(nh)]
+                sreq.lo_pages = [self.alloc.alloc_lo() for _ in range(nl)]
+                self._place(sreq)
+                self._swap_in(sreq)
+                sreq.swapped = None
+                sreq.state = RUNNING if sreq.pos >= sreq.prompt_len \
+                    else PREFILLING
+                resumed.append(sreq)
+            else:
+                self.waiting.pop(0)
+                self._place(sreq)
+                sreq.state = PREFILLING
+            admitted.append(sreq)
+        return admitted, resumed
+
+    def _place(self, sreq: SchedRequest) -> None:
+        sreq.slot = self._free_slots.pop(0)
+        sreq.admit_seq = self._admit_counter
+        self._admit_counter += 1
+        self.active.append(sreq)
+
+    def _pick_prefill(self) -> Optional[SchedRequest]:
+        """Strict FCFS: only the earliest-arrival request with prompt tokens
+        left may prefill; reserve pages for its next chunk (preempting only
+        requests that arrived after it)."""
+        cands = sorted((r for r in self.active if r.state == PREFILLING),
+                       key=lambda r: r.arrival)
+        if not cands:
+            return None
+        sreq = cands[0]
+        end = min(sreq.pos + self.cfg.prefill_chunk, sreq.prompt_len)
+        return sreq if self._reserve(sreq, end) else None
+
+    def _ensure_decode_capacity(self) -> None:
+        """Every RUNNING slot writes one token this step; make sure the page
+        holding that position exists.  On exhaustion the latest arrival is
+        evicted — possibly the requester itself, if nothing younger holds
+        pages (earlier arrivals are never sacrificed for later ones)."""
+        for sreq in sorted((r for r in self.active if r.state == RUNNING),
+                           key=lambda r: r.arrival):
+            if sreq.state != RUNNING:
+                continue             # preempted earlier in this very loop
+            if not self._reserve(sreq, sreq.pos + 1):
+                # no younger page-holder exists, so sreq is the youngest:
+                # swap itself out rather than rob an earlier arrival
+                self._preempt(sreq)
+
+    def _reserve(self, sreq: SchedRequest, upto: int) -> bool:
+        """Grow the request's page lists to cover positions [0, upto),
+        preempting later arrivals as needed."""
+        nh, nl = sreq.pages_for(upto, self.cache_cfg)
+        need_hi = nh - len(sreq.hi_pages)
+        need_lo = nl - len(sreq.lo_pages)
+        if need_hi <= 0 and need_lo <= 0:
+            return True
+        while not self.alloc.can_allocate(max(need_hi, 0), max(need_lo, 0)):
+            victim = self._pick_victim(exclude=sreq, after=sreq.arrival)
+            if victim is None:
+                if not self.active or self.active == [sreq]:
+                    raise OutOfBlocks(
+                        f"pools too small for a single request "
+                        f"(uid={sreq.uid}, upto={upto})")
+                return False
+            self._preempt(victim)
+        sreq.hi_pages += [self.alloc.alloc_hi() for _ in range(need_hi)]
+        sreq.lo_pages += [self.alloc.alloc_lo() for _ in range(need_lo)]
+        return True
+
+    def _pick_victim(self, exclude: Optional[SchedRequest],
+                     after: Optional[int] = None) -> Optional[SchedRequest]:
+        cands = [r for r in self.active
+                 if r is not exclude and (r.hi_pages or r.lo_pages)]
+        if after is not None:
+            cands = [r for r in cands if r.arrival > after]
+        if not cands:
+            return None
+        return max(cands, key=lambda r: r.arrival)
+
+    def _preempt(self, victim: SchedRequest) -> None:
+        self._swap_out(victim)       # copies pages to host BEFORE freeing
+        self.alloc.free(victim.hi_pages, victim.lo_pages)
+        victim.hi_pages, victim.lo_pages = [], []
+        self.active.remove(victim)
+        self._free_slots.append(victim.slot)
+        self._free_slots.sort()
+        victim.slot = -1
+        victim.state = WAITING
+        victim.preemptions += 1
+        self.num_preemptions += 1
+        self._step_preempted.append(victim)
+        self.submit(victim)          # re-enters at its original arrival rank

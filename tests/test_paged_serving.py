@@ -1,0 +1,413 @@
+"""Continuous-batching subsystem tests: block allocator, paged-cache code
+parity with the contiguous layout, the Pallas paged-attention and decode
+matmul kernels vs their oracles, engine token parity (paged vs bucketed),
+admission ordering, mid-stream join/leave, and block-exhaustion
+preemption + bit-identical resume."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_platform_name", "cpu")
+
+from repro.core.stamp import StampConfig
+from repro.kernels import ops, ref
+from repro.kernels.paged_attention import paged_decode_attention
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.serving import kvcache as KV
+from repro.serving import paged_kvcache as PKV
+from repro.serving.engine import (BucketedEngine, EngineConfig,
+                                  PagedEngineConfig, PagedServingEngine)
+from repro.serving.paged_kvcache import (BlockAllocator, OutOfBlocks,
+                                         PagedCacheConfig)
+
+CFG = ModelConfig(name="paged-test", family="dense", num_layers=2,
+                  d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                  vocab_size=128)
+PROMPT_LENS = (20, 45, 12, 30, 26)
+MAX_NEW = (6, 4, 8, 5, 7)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return lm.init_params(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def prompts():
+    rng = np.random.default_rng(2)
+    return [rng.integers(0, CFG.vocab_size, l) for l in PROMPT_LENS]
+
+
+def run_engine(engine, prompts, max_new=MAX_NEW):
+    for p, m in zip(prompts, max_new):
+        engine.submit(p, m)
+    done = engine.run()
+    lm.set_fused_cache_attention(False)
+    lm.set_fused_decode_matmul(False)
+    return {r.uid: r.out_tokens for r in done}
+
+
+def paged_cfg(**kw):
+    kw.setdefault("max_slots", 5)
+    kw.setdefault("prefill_chunk", 64)
+    kw.setdefault("max_seq", 96)
+    kw.setdefault("block_size", 16)
+    return PagedEngineConfig(**kw)
+
+
+QUANT = KV.KVCacheConfig(quantized=True, num_hi=16)
+
+
+# ---------------------------------------------------------------------------
+# allocator + page index math
+# ---------------------------------------------------------------------------
+
+
+class TestBlockAllocator:
+    def test_null_page_reserved_and_lowest_first(self):
+        cfg = PagedCacheConfig(block_size=8, num_lo_blocks=4,
+                               num_hi_blocks=3, quant=QUANT)
+        alloc = BlockAllocator(cfg)
+        assert alloc.alloc_lo() == 1 and alloc.alloc_lo() == 2
+        assert alloc.alloc_hi() == 1
+        alloc.free([1], [1])
+        assert alloc.alloc_lo() == 1     # lowest-first → deterministic
+        assert alloc.alloc_lo() == 3
+        with pytest.raises(OutOfBlocks):
+            alloc.alloc_lo()             # 1,2,3 all out (0 is null)
+
+    def test_token_page_index_regions(self):
+        cfg = PagedCacheConfig(block_size=8, quant=QUANT)  # num_hi=16
+        assert PKV.token_page_index(0, cfg) == (True, 0, 0)
+        assert PKV.token_page_index(15, cfg) == (True, 1, 7)
+        assert PKV.token_page_index(16, cfg) == (False, 0, 0)
+        assert PKV.token_page_index(31, cfg) == (False, 1, 7)
+
+    def test_num_hi_must_divide_into_pages(self):
+        with pytest.raises(ValueError):
+            PagedCacheConfig(block_size=12, quant=QUANT)
+
+
+# ---------------------------------------------------------------------------
+# paged cache <-> contiguous cache code parity
+# ---------------------------------------------------------------------------
+
+
+class TestPagedCacheParity:
+    def _fill(self, s=40, seed=0):
+        cfg = PagedCacheConfig(block_size=8, num_lo_blocks=12,
+                               num_hi_blocks=4, max_blocks_per_seq=6,
+                               quant=QUANT)
+        rng = np.random.default_rng(seed)
+        g, hd = 2, 16
+        k = jnp.asarray(rng.normal(size=(1, s, g, hd)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(1, s, g, hd)).astype(np.float32))
+        entry = {kk: a[0] for kk, a in PKV.init_pools(1, g, hd, cfg).items()}
+        hi_pages, lo_pages = [1, 2], [1, 2, 3]
+        pages, offs, ishi = [], [], []
+        for pos in range(s):
+            is_hi, pidx, off = PKV.token_page_index(pos, cfg)
+            pages.append((hi_pages if is_hi else lo_pages)[pidx])
+            offs.append(off)
+            ishi.append(is_hi)
+        entry = PKV.write_chunk(entry, k, v, jnp.asarray(pages, jnp.int32),
+                                jnp.asarray(offs, jnp.int32),
+                                jnp.asarray(ishi, bool), cfg)
+        ht = jnp.asarray([hi_pages], jnp.int32)
+        lt = jnp.asarray([lo_pages + [0, 0, 0]], jnp.int32)
+        return cfg, entry, (k, v), (ht, lt)
+
+    def test_prefill_chunk_matches_bulk_quantization(self):
+        cfg, entry, (k, v), (ht, lt) = self._fill()
+        s = k.shape[1]
+        hi = cfg.num_hi
+        segs = PKV.gather_segments(entry, ht, lt, cfg, jnp.float32)
+        bulk = KV.quantize_full(k, v, cfg.quant)
+        kd, vd = KV.dequantize_full(bulk, cfg.quant, jnp.float32)
+        np.testing.assert_array_equal(np.asarray(segs[0][0]),
+                                      np.asarray(kd[:, :hi]))
+        np.testing.assert_array_equal(np.asarray(segs[1][0][:, :s - hi]),
+                                      np.asarray(kd[:, hi:s]))
+        np.testing.assert_array_equal(np.asarray(segs[1][1][:, :s - hi]),
+                                      np.asarray(vd[:, hi:s]))
+
+    def test_decode_write_matches_contiguous_write_token(self):
+        cfg, entry, (k, v), (ht, lt) = self._fill()
+        rng = np.random.default_rng(7)
+        k1 = jnp.asarray(rng.normal(size=(1, 1, 2, 16)).astype(np.float32))
+        v1 = jnp.asarray(rng.normal(size=(1, 1, 2, 16)).astype(np.float32))
+        for pos in (3, 16, 39):          # hi page, lo page start, lo tail
+            is_hi, pidx, off = PKV.token_page_index(pos, cfg)
+            page = ([1, 2] if is_hi else [1, 2, 3])[pidx]
+            paged = PKV.write_tokens(entry, k1, v1,
+                                     jnp.asarray([page], jnp.int32),
+                                     jnp.asarray([off], jnp.int32),
+                                     jnp.asarray([is_hi], bool), cfg)
+            bulk = KV.write_token(KV.quantize_full(k, v, cfg.quant),
+                                  k1, v1, jnp.int32(pos), cfg.quant)
+            segs = PKV.gather_segments(paged, ht, lt, cfg, jnp.float32)
+            kd, vd = KV.dequantize_full(bulk, cfg.quant, jnp.float32)
+            hi = cfg.num_hi
+            np.testing.assert_array_equal(np.asarray(segs[0][0]),
+                                          np.asarray(kd[:, :hi]))
+            np.testing.assert_array_equal(
+                np.asarray(segs[1][0][:, :40 - hi]), np.asarray(kd[:, hi:40]))
+
+    def test_swap_roundtrip_bit_identical(self):
+        """Swap-out/in must restore exactly, for both pool layouts: scanned
+        periods ("0": (P, N, ...)) and period-stripped prologue entries
+        ("pro0": (N, ...)) — the page axis moves between the two."""
+        cfg, entry, _, (ht, lt) = self._fill()
+        pools = {"0": jax.tree.map(lambda a: a[None], entry),
+                 "pro0": entry}
+        saved = PKV.extract_pages(pools, [1, 2], [1, 2, 3])
+        # relocate to different page ids; gather must read back identically
+        restored = PKV.insert_pages(pools, saved, [3, 1], [5, 9, 2])
+        ht2 = jnp.asarray([[3, 1]], jnp.int32)
+        lt2 = jnp.asarray([[5, 9, 2, 0, 0, 0]], jnp.int32)
+        before = PKV.gather_segments(entry, ht, lt, cfg, jnp.float32)
+        for layer_key, strip in (("0", True), ("pro0", False)):
+            moved = restored[layer_key]
+            if strip:
+                moved = {k: a[0] for k, a in moved.items()}
+            after = PKV.gather_segments(moved, ht2, lt2, cfg, jnp.float32)
+            for (a, b, _), (c, d, _) in zip(before, after):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(c),
+                                              err_msg=layer_key)
+                np.testing.assert_array_equal(np.asarray(b), np.asarray(d),
+                                              err_msg=layer_key)
+
+
+# ---------------------------------------------------------------------------
+# kernels vs oracles
+# ---------------------------------------------------------------------------
+
+
+class TestPagedAttentionKernel:
+    def test_matches_gather_reference(self):
+        cfg = PagedCacheConfig(block_size=8, num_lo_blocks=12,
+                               num_hi_blocks=6, max_blocks_per_seq=4,
+                               quant=QUANT)
+        rng = np.random.default_rng(3)
+        g, hd, h, S = 2, 16, 4, 3
+        entry = {k: a[0] for k, a in PKV.init_pools(1, g, hd, cfg).items()}
+        # three slots with different lengths / page placements
+        tables = {0: ([1, 2], [1, 2, 3], 38), 1: ([3, 4], [4], 20),
+                  2: ([5, 0], [0], 9)}
+        for slot, (hp, lp, ln) in tables.items():
+            k = jnp.asarray(rng.normal(size=(1, ln, g, hd)).astype(np.float32))
+            v = jnp.asarray(rng.normal(size=(1, ln, g, hd)).astype(np.float32))
+            pages, offs, ishi = [], [], []
+            for pos in range(ln):
+                is_hi, pidx, off = PKV.token_page_index(pos, cfg)
+                pages.append((hp if is_hi else lp)[pidx])
+                offs.append(off)
+                ishi.append(is_hi)
+            entry = PKV.write_chunk(entry, k, v,
+                                    jnp.asarray(pages, jnp.int32),
+                                    jnp.asarray(offs, jnp.int32),
+                                    jnp.asarray(ishi, bool), cfg)
+        q = jnp.asarray(rng.normal(size=(S, 1, h, hd)).astype(np.float32))
+        lengths = jnp.asarray([tables[i][2] for i in range(S)], jnp.int32)
+        ht = jnp.asarray([tables[i][0] for i in range(S)], jnp.int32)
+        lt = jnp.asarray([tables[i][1] + [0] * (4 - len(tables[i][1]))
+                          for i in range(S)], jnp.int32)
+        out = paged_decode_attention(entry, q, lengths, ht, lt,
+                                     cfg.block_size, interpret=True)
+        oracle = ref.paged_attention_ref(entry, q, lengths, ht, lt,
+                                         cfg.block_size, cfg.num_hi)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(oracle), atol=1e-5, rtol=1e-5)
+
+    def test_unmapped_blocks_and_partial_pages_masked(self):
+        """A slot whose length ends mid-page must ignore the page tail and
+        every unmapped (null) block."""
+        cfg = PagedCacheConfig(block_size=8, num_lo_blocks=8,
+                               num_hi_blocks=4, max_blocks_per_seq=3,
+                               quant=QUANT)
+        rng = np.random.default_rng(4)
+        g, hd, h = 2, 16, 4
+        entry = {k: a[0] for k, a in PKV.init_pools(1, g, hd, cfg).items()}
+        ln = 21                          # 16 hi + 5 lo (page 1 of lo, partial)
+        k = jnp.asarray(rng.normal(size=(1, ln, g, hd)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(1, ln, g, hd)).astype(np.float32))
+        pages, offs, ishi = [], [], []
+        for pos in range(ln):
+            is_hi, pidx, off = PKV.token_page_index(pos, cfg)
+            pages.append(([1, 2] if is_hi else [1])[pidx])
+            offs.append(off)
+            ishi.append(is_hi)
+        entry = PKV.write_chunk(entry, k, v, jnp.asarray(pages, jnp.int32),
+                                jnp.asarray(offs, jnp.int32),
+                                jnp.asarray(ishi, bool), cfg)
+        q = jnp.asarray(rng.normal(size=(1, 1, h, hd)).astype(np.float32))
+        out = paged_decode_attention(
+            entry, q, jnp.asarray([ln], jnp.int32),
+            jnp.asarray([[1, 2]], jnp.int32),
+            jnp.asarray([[1, 0, 0]], jnp.int32), cfg.block_size,
+            interpret=True)
+        # oracle over the dense first-ln tokens only
+        segs = PKV.gather_segments(entry, jnp.asarray([[1, 2]], jnp.int32),
+                                   jnp.asarray([[1, 0, 0]], jnp.int32),
+                                   cfg, jnp.float32)
+        from repro.models.layers import decode_attention
+        kd = jnp.concatenate([segs[0][0], segs[1][0]], axis=1)[:, :ln]
+        vd = jnp.concatenate([segs[0][1], segs[1][1]], axis=1)[:, :ln]
+        oracle = decode_attention(q.astype(jnp.float32), kd, vd)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(oracle), atol=1e-5, rtol=1e-5)
+
+
+class TestDecodeMatmul:
+    def test_matches_oracle(self):
+        rng = np.random.default_rng(5)
+        for b, k, n in ((1, 64, 96), (4, 48, 128), (8, 32, 32)):
+            x = jnp.asarray(rng.normal(size=(b, k)).astype(np.float32))
+            qw = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int8)
+            sw = jnp.asarray(rng.uniform(1e-3, 1e-2, (1, n)).astype(np.float32))
+            zw = jnp.asarray(rng.integers(-10, 10, (1, n)).astype(np.float32))
+            bias = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+            y = ops.stamp_decode_matmul(x, qw, sw, zw, bias,
+                                        out_dtype=jnp.float32,
+                                        interpret=True)
+            yr = ref.stamp_decode_matmul_ref(x, qw, sw, zw, bias)
+            rel = float(np.linalg.norm(np.asarray(y) - np.asarray(yr)) /
+                        np.linalg.norm(np.asarray(yr)))
+            assert rel < 1e-5, (b, k, n, rel)
+
+    def test_decode_step_dispatch_tracks_dequant_path(self, params):
+        """fused_decode_matmul consumes the prepared int8 buffers directly;
+        logits stay within 8-bit activation-quant tolerance of the
+        per-step-dequant path."""
+        st = StampConfig(num_hi_tokens=8, execution="fused")
+        pf = lm.prepare_fused_weights(params, st)
+        toks = jnp.asarray(np.random.default_rng(0).integers(
+            0, CFG.vocab_size, (2, 64)), jnp.int32)
+        base = lm.ServeConfig(stamp=st, kv=QUANT, cache_capacity=96)
+        fused = dataclasses.replace(base, fused_decode_matmul=True)
+        _, cache = lm.prefill(pf, {"tokens": toks}, CFG, base)
+        tok = jnp.zeros((2,), jnp.int32)
+        l_deq, _ = lm.decode_step(pf, cache, tok, jnp.int32(64), CFG, base)
+        l_int8, _ = lm.decode_step(pf, cache, tok, jnp.int32(64), CFG, fused)
+        lm.set_fused_decode_matmul(False)
+        rel = np.abs(np.asarray(l_deq) - np.asarray(l_int8)).max() / \
+            (np.abs(np.asarray(l_deq)).max() + 1e-9)
+        assert rel < 5e-2, rel
+
+
+# ---------------------------------------------------------------------------
+# engine parity + scheduling behavior
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def parity_runs(params, prompts):
+    """One bucketed + one paged run per cache setting, shared by the
+    parity assertions below (engine runs dominate this module's cost)."""
+    runs = {}
+    for label, serve in (
+        ("quant", lm.ServeConfig(stamp=None, kv=QUANT)),
+        ("bf16", lm.ServeConfig(stamp=None,
+                                kv=KV.KVCacheConfig(quantized=False))),
+        ("stamp", lm.ServeConfig(stamp=StampConfig(num_hi_tokens=8),
+                                 kv=QUANT)),
+    ):
+        be = BucketedEngine(params, CFG, serve,
+                            EngineConfig(max_batch=5, bucket=64, max_seq=96))
+        pe = PagedServingEngine(params, CFG, serve, paged_cfg())
+        runs[label] = (run_engine(be, prompts), run_engine(pe, prompts), pe)
+    return runs
+
+
+class TestEngineParity:
+    @pytest.mark.parametrize("label", ["quant", "bf16", "stamp"])
+    def test_token_identical(self, parity_runs, label):
+        """Mixed-length request set, greedy decode: the continuous-batching
+        engine must reproduce the bucketed engine token for token."""
+        bucketed, paged, _ = parity_runs[label]
+        assert set(bucketed) == set(paged)
+        for uid in bucketed:
+            np.testing.assert_array_equal(bucketed[uid], paged[uid],
+                                          err_msg=f"{label} uid={uid}")
+
+    def test_every_request_completes_full_budget(self, parity_runs):
+        _, paged, _ = parity_runs["quant"]
+        for uid, m in zip(sorted(paged), MAX_NEW):
+            assert len(paged[uid]) == m
+
+
+class TestScheduling:
+    def test_admission_is_fcfs(self, parity_runs):
+        """More requests than slots: admits must follow submit order."""
+        _, _, pe = parity_runs["quant"]
+        admits = [p for _, kind, p in pe.events if kind == "admit"]
+        assert admits == sorted(admits)
+
+    def test_mid_stream_join_and_leave(self, params, prompts):
+        """The decode batch gains members while earlier requests are still
+        generating, and loses them when they finish — no lockstep bucket."""
+        pe = PagedServingEngine(
+            params, CFG, lm.ServeConfig(stamp=None, kv=QUANT),
+            paged_cfg(max_slots=3))
+        run_engine(pe, prompts)
+        batches = [set(p) for _, kind, p in pe.events if kind == "decode"]
+        assert batches, "no decode steps recorded"
+        grew = any(b2 > b1 for b1, b2 in zip(batches, batches[1:]))
+        shrank_while_busy = any(
+            (b1 - b2) and b2 for b1, b2 in zip(batches, batches[1:]))
+        assert grew, "no request ever joined a running batch"
+        assert shrank_while_busy, "no request left while others kept going"
+
+    def test_preemption_and_bit_identical_resume(self, params, prompts):
+        """Tiny lo pool: decode runs out of pages, the latest arrival is
+        swapped out and later resumed; final tokens must equal the
+        uncontended run (swap restores the exact cache state).  Longer
+        generations than the parity workload so running requests cross page
+        boundaries while younger requests still hold pages."""
+        max_new = (14, 10, 16, 8, 12)
+        serve = lm.ServeConfig(stamp=None, kv=QUANT)
+        ample = run_engine(PagedServingEngine(params, CFG, serve,
+                                              paged_cfg()),
+                           prompts, max_new)
+        pe = PagedServingEngine(params, CFG, serve,
+                                paged_cfg(num_lo_blocks=6))
+        tight = run_engine(pe, prompts, max_new)
+        assert pe.stats["preemptions"] > 0
+        kinds = [kind for _, kind, _ in pe.events]
+        assert "preempt" in kinds and "resume" in kinds
+        assert kinds.index("preempt") < kinds.index("resume")
+        preempted_uids = {p for _, k, p in pe.events if k == "preempt"}
+        assert any(self_or_req.preemptions > 0
+                   for self_or_req in pe._requests.values())
+        assert preempted_uids
+        for uid in ample:
+            np.testing.assert_array_equal(ample[uid], tight[uid])
+
+    def test_pool_too_small_raises(self, params, prompts):
+        pe = PagedServingEngine(
+            params, CFG, lm.ServeConfig(stamp=None, kv=QUANT),
+            paged_cfg(num_lo_blocks=2))   # 1 usable page = 16 lo tokens
+        pe.submit(prompts[1], 40)         # needs 45+40-16 lo tokens
+        with pytest.raises(OutOfBlocks):
+            pe.run()
+
+
+class TestEngineConfigDefaults:
+    def test_engine_config_not_shared_between_instances(self, params):
+        """The old ``ecfg: EngineConfig = EngineConfig()`` default was a
+        single shared instance — mutating one engine's config leaked into
+        every other engine constructed without an explicit config."""
+        serve = lm.ServeConfig(stamp=None, kv=QUANT)
+        e1 = BucketedEngine(params, CFG, serve)
+        e2 = BucketedEngine(params, CFG, serve)
+        assert e1.ecfg is not e2.ecfg
+        e1.ecfg.bucket = 7
+        assert e2.ecfg.bucket != 7
+        p1 = PagedServingEngine(params, CFG, serve)
+        p2 = PagedServingEngine(params, CFG, serve)
+        assert p1.ecfg is not p2.ecfg

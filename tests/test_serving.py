@@ -179,3 +179,86 @@ class TestFusedKernelIntegration:
         entry = KV.quantize_full(k, v, cfg)
         assert entry["k_scale"].dtype == jnp.float16
         assert entry["v_zp"].dtype == jnp.float16
+
+
+class TestPackUnpackEdgeCases:
+    """Round-trip coverage the paged cache relies on: odd sequence lengths,
+    num_hi ≥ seq, and f16 scale/zp exactness at the int8 boundary."""
+
+    @pytest.mark.parametrize("s", [1, 7, 17, 33, 63])
+    def test_odd_sequence_lengths_roundtrip(self, s):
+        """Sequence lengths that are not multiples of anything: the hi/lo
+        split and nibble packing are token-local, so every length packs and
+        unpacks within half a quantization step."""
+        cfg = KV.KVCacheConfig(quantized=True, num_hi=8)
+        k, v = rand_kv(2, s, 2, 16, seed=100 + s)
+        entry = KV.quantize_full(k, v, cfg)
+        hi = min(cfg.num_hi, s)
+        assert entry["k_hi"].shape[1] == hi
+        assert entry["k_lo"].shape[1] == s - hi
+        kd, vd = KV.dequantize_full(entry, cfg, jnp.float32)
+        assert kd.shape == k.shape and vd.shape == v.shape
+        for orig, deq in ((k, kd), (v, vd)):
+            rng_span = np.asarray(orig.max(-1) - orig.min(-1))
+            step = np.where(np.arange(s)[None, :, None] < hi,
+                            rng_span / 255.0, rng_span / 15.0)
+            err = np.abs(np.asarray(deq - orig)).max(-1)
+            # half a step of round-to-nearest plus the f16 scale storage:
+            # |q − zp| ≤ 255 and Δscale ≤ scale·2⁻¹¹ adds ≤ 0.125·step
+            assert (err <= step * 0.63 + 1e-5).all()
+
+    @pytest.mark.parametrize("s,num_hi", [(4, 8), (16, 16), (8, 64)])
+    def test_num_hi_at_least_seq_all_tokens_hi(self, s, num_hi):
+        """num_hi ≥ seq: the lo region is empty and every token carries
+        8-bit codes; dequant must still round-trip."""
+        cfg = KV.KVCacheConfig(quantized=True, num_hi=num_hi)
+        k, v = rand_kv(1, s, 2, 16, seed=200 + s)
+        entry = KV.quantize_full(k, v, cfg)
+        assert entry["k_hi"].shape[1] == s
+        assert entry["k_lo"].shape[1] == 0
+        kd, _ = KV.dequantize_full(entry, cfg, jnp.float32)
+        step = np.asarray(k.max(-1) - k.min(-1)) / 255.0
+        # 0.5·step rounding + ≤0.125·step from the f16-stored scale
+        assert (np.abs(np.asarray(kd - k)).max(-1) <= step * 0.63 + 1e-5).all()
+        # decode write at every position stays in the hi region
+        k1, v1 = rand_kv(1, 1, 2, 16, seed=300 + s)
+        new = KV.write_token(entry, k1, v1, jnp.int32(s - 1), cfg)
+        kd2, _ = KV.dequantize_full(new, cfg, jnp.float32)
+        np.testing.assert_allclose(np.asarray(kd2[:, s - 1]),
+                                   np.asarray(k1[:, 0]), atol=0.05)
+
+    def test_f16_scale_zp_exact_at_int8_boundary(self):
+        """The boundary case the f16 metadata depends on: zp = 255 (an
+        all-negative channel) and zp = 0 are integers ≤ 255, hence exact in
+        f16 — the f16-stored params must dequantize identically to f32
+        params."""
+        rng = np.random.default_rng(9)
+        base = rng.uniform(0.5, 1.5, size=(1, 16, 2, 16)).astype(np.float32)
+        for sign in (-1.0, 1.0):         # zp pinned to 255 / 0
+            # anchor the range at zero from one side: max exactly 0 gives
+            # zp = 255 (the int8 boundary), min exactly 0 gives zp = 0
+            if sign < 0:
+                t = jnp.asarray(base - base.max(-1, keepdims=True))
+            else:
+                t = jnp.asarray(base - base.min(-1, keepdims=True))
+            q, scale, zp = KV.quant_tokens(t, 8)
+            zp_f16 = zp.astype(jnp.float16)
+            scale_f16 = scale.astype(jnp.float16)
+            # zero points are exact integers in f16
+            np.testing.assert_array_equal(np.asarray(zp_f16, np.float32),
+                                          np.asarray(zp))
+            expected = 255.0 if sign < 0 else 0.0
+            assert float(jnp.abs(zp - expected).max()) == 0.0
+            # codes at the extremes (0 and 255) survive the signed shift
+            q8, zp_s = KV.to_signed8(q, zp)
+            assert int(q8.min()) >= -128 and int(q8.max()) <= 127
+            d32 = KV.dequant_tokens(q8.astype(jnp.float32), scale, zp_s,
+                                    jnp.float32)
+            d16 = KV.dequant_tokens(q8.astype(jnp.float32),
+                                    scale_f16.astype(jnp.float32),
+                                    (zp_s).astype(jnp.float16)
+                                    .astype(jnp.float32), jnp.float32)
+            # f16 scale rounding is the only difference: bounded by the
+            # f16 epsilon of the scale, no systematic zero-point error
+            denom = np.maximum(np.abs(np.asarray(d32)), 1e-6)
+            assert (np.abs(np.asarray(d16 - d32)) / denom).max() < 2e-3
