@@ -17,12 +17,16 @@ both attention matmuls run in the same residency:
       scores (rep, bs) → online-softmax (m, l, acc) accumulated across
       logical blocks in the revisited output ref → out (rep, hd)
 
-Unmapped logical blocks read the null page (index maps clamp to page 0) and
-are masked by the slot length; a fully-masked block's ``m = −1e30`` makes
-its merge correction underflow to exactly zero, so no validity branch is
-needed.  HBM traffic per layer step is proportional to **allocated pages**
-(0.52 B/value average at the 64@8b + int4 setting), not to the engine-wide
-``max_seq`` reservation the contiguous layout streams.
+Unmapped logical blocks read the null page (the block table holds 0 for
+them) and are masked by the slot length; a fully-masked block's
+``m = −1e30`` makes its merge correction underflow to exactly zero, so no
+validity branch is needed.  The branch that is *inactive* at a grid step
+keeps an already-resident page index (its index map clamps into its own
+phase rather than switching pages — see ``hi_idx``/``lo_idx``), so each
+step fetches only the page its branch consumes and HBM traffic per layer
+step is proportional to **allocated pages** (0.52 B/value average at the
+64@8b + int4 setting), not to the engine-wide ``max_seq`` reservation the
+contiguous layout streams.
 """
 
 from __future__ import annotations
@@ -133,11 +137,19 @@ def paged_decode_attention(entry: dict, q: jax.Array, lengths: jax.Array,
     scale = float(1.0 / np.sqrt(hd))
     qg = q.reshape(s_slots, h, hd).reshape(s_slots, g, rep, hd)
 
+    # The inactive branch's operand is never read, so its index map CLAMPS
+    # to the nearest in-phase entry instead of routing to the null page:
+    # during lo steps the hi operand repeats the last hi page (index
+    # unchanged between grid steps → Mosaic issues no copy), and during hi
+    # steps the lo operand pins to the first lo page — the very block the
+    # k == nh step needs, so its fetch is an early prefetch, not extra
+    # traffic.  Each grid step therefore streams only the page its branch
+    # consumes.
     def hi_idx(i, k, ht):
-        return jnp.where(k < nh, ht[i, jnp.minimum(k, max(nh - 1, 0))], 0)
+        return ht[i, jnp.clip(k, 0, max(nh - 1, 0))]
 
     def lo_idx(i, k, lt):
-        return lt[i, jnp.clip(k - nh, 0, nl - 1)] * jnp.where(k >= nh, 1, 0)
+        return lt[i, jnp.clip(k - nh, 0, nl - 1)]
 
     hi_spec = pl.BlockSpec((1, bs, 1, hd),
                            lambda i, j, k, ht, lt, ln:

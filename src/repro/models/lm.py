@@ -322,7 +322,11 @@ def set_fused_decode_matmul(enabled: bool) -> None:
     """Route decode-shaped linears over prepared int8 weights through
     `kernels/decode_matmul.stamp_decode_matmul` (no per-step bf16 weight
     re-materialization).  Set from ``ServeConfig.fused_decode_matmul`` at
-    each decode entry point."""
+    each decode entry point and reset to False by every prefill/train/eval
+    entry (`model_hidden`, `paged_prefill_chunk`): the `_linear` dispatch
+    keys only on the token dimension being 1, so a stale True from an
+    earlier decode would silently skip the STaMP transform on any later
+    length-1-sequence forward."""
     global _FUSED_DECODE_MATMUL
     _FUSED_DECODE_MATMUL = enabled
 
@@ -748,6 +752,10 @@ def model_hidden(params, batch: dict, cfg: ModelConfig, *,
                  cache_capacity: Optional[int] = None
                  ) -> tuple[Array, Optional[dict], Array]:
     """Shared train/prefill forward.  Returns (hidden, cache, labels)."""
+    # non-decode entry: clear the process-global decode-matmul flag so a
+    # previous fused decode can't divert a length-1 forward off the STaMP
+    # transform path (see set_fused_decode_matmul)
+    set_fused_decode_matmul(False)
     compute_dtype = jnp.bfloat16
     labels = batch.get("labels")
     enc_out = None
@@ -912,7 +920,9 @@ def paged_prefill_chunk(params, pools: dict, tokens: Array, start: Array,
     when the prompt fits one chunk, a documented approximation beyond that.
     """
     set_fused_cache_attention(serve.fused_cache_attention)
-    set_fused_decode_matmul(serve.fused_decode_matmul)
+    # prefill must run the STaMP transform even at chunk width 1 — never
+    # the (transform-free) decode matmul
+    set_fused_decode_matmul(False)
     compute_dtype = jnp.bfloat16
     x = _embed(params, tokens, compute_dtype)
     x = constrain(x, policy, lambda pol: pol.acts())

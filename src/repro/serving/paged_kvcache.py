@@ -26,9 +26,13 @@ reuses `kvcache.py`'s per-token quant + nibble packing bit-for-bit):
   paged alongside their codes (a page is self-describing, so eviction /
   swap moves one contiguous unit).
 
-Page 0 of each pool is the **null page**: never allocated, always zero.
-Index maps clamp unmapped logical blocks to it, and masked writes are routed
-there, so neither reads nor scatters need a validity branch.
+Page 0 of each pool is the **null page**: never handed out by the
+allocator, and never *read unmasked*.  Block tables hold 0 for unmapped
+logical blocks, and masked / pad / inactive-slot writes are routed there,
+so neither reads nor scatters need a validity branch — but those routed
+writes mean the null page accumulates stale quantized values; correctness
+rests on every reader masking unmapped blocks by the slot length (which
+all readers do), **not** on the page staying zero.
 
 Block ids are shared across layers and periods (one allocation covers the
 whole stack, vLLM-style), which keeps the allocator — a host-side numpy free
@@ -40,6 +44,7 @@ int32 indices.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 
 import jax
 import jax.numpy as jnp
@@ -126,16 +131,25 @@ class OutOfBlocks(Exception):
 class BlockAllocator:
     """Free-list allocator over the hi and lo pools (host, deterministic).
 
-    Page ids are handed out lowest-first so identical request streams
-    produce identical placements (the engine-parity tests rely on this).
-    Page 0 of either pool is never allocated — it is the null page.
+    Page ids are handed out lowest-first (min-heap pop) so identical request
+    streams produce identical placements (the engine-parity tests rely on
+    this).  Page 0 of either pool is never allocated — it is the null page.
+    Freeing page 0, an out-of-range id, or an already-free page raises
+    ``ValueError`` (a real exception, not an ``assert`` stripped under
+    ``python -O``); membership is tracked in a set mirror so the check is
+    O(1) per page.
     """
 
     def __init__(self, cfg: PagedCacheConfig):
         self.cfg = cfg
+        # ascending ranges are already valid min-heaps
         self._free_hi = list(range(1, cfg.num_hi_blocks)) \
             if cfg.quant.quantized else []
         self._free_lo = list(range(1, cfg.num_lo_blocks))
+        self._free_hi_set = set(self._free_hi)
+        self._free_lo_set = set(self._free_lo)
+        self._num_blocks = {"hi": cfg.num_hi_blocks if cfg.quant.quantized
+                            else 0, "lo": cfg.num_lo_blocks}
 
     def free_counts(self) -> tuple[int, int]:
         return len(self._free_hi), len(self._free_lo)
@@ -146,22 +160,32 @@ class BlockAllocator:
     def alloc_hi(self) -> int:
         if not self._free_hi:
             raise OutOfBlocks("hi pool exhausted")
-        return self._free_hi.pop(0)
+        i = heapq.heappop(self._free_hi)
+        self._free_hi_set.remove(i)
+        return i
 
     def alloc_lo(self) -> int:
         if not self._free_lo:
             raise OutOfBlocks("lo pool exhausted")
-        return self._free_lo.pop(0)
+        i = heapq.heappop(self._free_lo)
+        self._free_lo_set.remove(i)
+        return i
 
     def free(self, hi_ids, lo_ids) -> None:
-        for i in hi_ids:
-            assert i > 0 and i not in self._free_hi
-            self._free_hi.append(i)
-        for i in lo_ids:
-            assert i > 0 and i not in self._free_lo
-            self._free_lo.append(i)
-        self._free_hi.sort()
-        self._free_lo.sort()
+        for pool, ids, heap, members in (
+                ("hi", hi_ids, self._free_hi, self._free_hi_set),
+                ("lo", lo_ids, self._free_lo, self._free_lo_set)):
+            for i in ids:
+                i = int(i)
+                if not 0 < i < self._num_blocks[pool]:
+                    raise ValueError(
+                        f"cannot free {pool} page {i}: outside the "
+                        f"allocatable range [1, {self._num_blocks[pool]}) "
+                        f"(page 0 is the null page)")
+                if i in members:
+                    raise ValueError(f"double free of {pool} page {i}")
+                heapq.heappush(heap, i)
+                members.add(i)
 
 
 # ---------------------------------------------------------------------------

@@ -18,11 +18,13 @@ produces a :class:`StepPlan`:
 
 Preemption: when a decode step needs a fresh page and the pools are
 exhausted, the victim is the **latest-admitted** active request (vLLM's
-priority rule — earlier arrivals are never starved by later ones).  Its
-pages are swapped to host memory via the engine callback *before* they are
-freed, and the request re-enters the waiting queue at its original arrival
-rank.  On resume the saved pages are swapped back in at whatever page ids
-are then free — block tables indirect through the pools, so placement is
+priority rule — earlier arrivals are never starved by later ones).  Pages
+reserved ahead of the victim's materialized prefix (a prefill chunk's
+reservation not yet executed) are released empty; the rest are swapped to
+host memory via the engine callback *before* they are freed, and the
+request re-enters the waiting queue at its original arrival rank.  On
+resume the saved pages are swapped back in at whatever page ids are then
+free — block tables indirect through the pools, so placement is
 irrelevant — and generation continues from the exact cache state it was
 evicted with (bit-identical, no recompute).
 """
@@ -223,6 +225,18 @@ class Scheduler:
         return max(cands, key=lambda r: r.arrival)
 
     def _preempt(self, victim: SchedRequest) -> None:
+        # A prefill reservation runs ahead of execution (`_pick_prefill`
+        # covers [0, end) while only [0, pos) is materialized), so a victim
+        # caught mid-plan can hold more pages than its materialized prefix.
+        # Those extra pages carry no data: release them before the swap so
+        # the saved page set always equals the pages_for(pos) re-allocation
+        # at resume (extract/insert page counts must agree).
+        nh, nl = victim.pages_for(victim.pos, self.cache_cfg)
+        extra_hi, extra_lo = victim.hi_pages[nh:], victim.lo_pages[nl:]
+        if extra_hi or extra_lo:
+            victim.hi_pages = victim.hi_pages[:nh]
+            victim.lo_pages = victim.lo_pages[:nl]
+            self.alloc.free(extra_hi, extra_lo)
         self._swap_out(victim)       # copies pages to host BEFORE freeing
         self.alloc.free(victim.hi_pages, victim.lo_pages)
         victim.hi_pages, victim.lo_pages = [], []

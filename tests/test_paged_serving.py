@@ -48,7 +48,6 @@ def run_engine(engine, prompts, max_new=MAX_NEW):
         engine.submit(p, m)
     done = engine.run()
     lm.set_fused_cache_attention(False)
-    lm.set_fused_decode_matmul(False)
     return {r.uid: r.out_tokens for r in done}
 
 
@@ -91,6 +90,21 @@ class TestBlockAllocator:
     def test_num_hi_must_divide_into_pages(self):
         with pytest.raises(ValueError):
             PagedCacheConfig(block_size=12, quant=QUANT)
+
+    def test_free_guards_raise_real_exceptions(self):
+        """Double-free / null-page / out-of-range frees must raise even
+        under ``python -O`` (ValueError, not assert)."""
+        cfg = PagedCacheConfig(block_size=8, num_lo_blocks=4,
+                               num_hi_blocks=3, quant=QUANT)
+        alloc = BlockAllocator(cfg)
+        p = alloc.alloc_lo()
+        alloc.free([], [p])
+        with pytest.raises(ValueError, match="double free"):
+            alloc.free([], [p])
+        with pytest.raises(ValueError, match="null page"):
+            alloc.free([0], [])
+        with pytest.raises(ValueError, match="outside the allocatable"):
+            alloc.free([], [99])
 
 
 # ---------------------------------------------------------------------------
@@ -294,10 +308,20 @@ class TestDecodeMatmul:
         tok = jnp.zeros((2,), jnp.int32)
         l_deq, _ = lm.decode_step(pf, cache, tok, jnp.int32(64), CFG, base)
         l_int8, _ = lm.decode_step(pf, cache, tok, jnp.int32(64), CFG, fused)
-        lm.set_fused_decode_matmul(False)
         rel = np.abs(np.asarray(l_deq) - np.asarray(l_int8)).max() / \
             (np.abs(np.asarray(l_deq)).max() + 1e-9)
         assert rel < 5e-2, rel
+
+    def test_prefill_entry_resets_fused_decode_flag(self, params):
+        """A fused engine's decode leaves the process-global decode-matmul
+        flag set; every prefill/train entry must clear it so a later
+        length-1-sequence forward keeps the STaMP transform path — no
+        manual `set_fused_decode_matmul(False)` between runs."""
+        lm.set_fused_decode_matmul(True)
+        toks = jnp.zeros((1, 8), jnp.int32)
+        lm.prefill(params, {"tokens": toks}, CFG,
+                   lm.ServeConfig(stamp=None, kv=QUANT, cache_capacity=16))
+        assert lm._FUSED_DECODE_MATMUL is False
 
 
 # ---------------------------------------------------------------------------
@@ -385,6 +409,39 @@ class TestScheduling:
         assert any(self_or_req.preemptions > 0
                    for self_or_req in pe._requests.values())
         assert preempted_uids
+        for uid in ample:
+            np.testing.assert_array_equal(ample[uid], tight[uid])
+
+    def test_mid_prefill_preemption_over_reserved_pages(self, params):
+        """`plan_step` reserves the prefill candidate's *next* chunk before
+        checking decode capacity, so an earlier arrival's decode growth can
+        preempt a PREFILLING request whose page set runs ahead of its
+        materialized prefix.  The scheduler must release those empty pages
+        at eviction so the saved page set equals the pages_for(pos)
+        re-allocation at resume — previously the count mismatch crashed
+        `insert_pages` with a shape error.  The tight run must still match
+        the uncontended run token for token."""
+        rng = np.random.default_rng(11)
+        reqs = [rng.integers(0, CFG.vocab_size, 14),
+                rng.integers(0, CFG.vocab_size, 40)]   # > 2 prefill chunks
+        max_new = (6, 4)
+        serve = lm.ServeConfig(stamp=None, kv=QUANT)
+        ample = run_engine(
+            PagedServingEngine(params, CFG, serve,
+                               paged_cfg(max_slots=2, prefill_chunk=16)),
+            reqs, max_new)
+        pe = PagedServingEngine(
+            params, CFG, serve,
+            paged_cfg(max_slots=2, prefill_chunk=16, num_lo_blocks=3))
+        tight = run_engine(pe, reqs, max_new)
+        assert pe.stats["preemptions"] > 0
+        # the long prompt (uid 2) was evicted mid-prefill: it still had
+        # chunks left to run after the preemption
+        ev = [(kind, p) for _, kind, p in pe.events]
+        pre_i = ev.index(("preempt", 2))
+        chunks_after = [p for kind, p in ev[pre_i:]
+                        if kind == "prefill_chunk" and p[0] == 2]
+        assert chunks_after, "victim was not preempted mid-prefill"
         for uid in ample:
             np.testing.assert_array_equal(ample[uid], tight[uid])
 
