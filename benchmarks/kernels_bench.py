@@ -1,7 +1,13 @@
 """Kernel micro-benchmarks (interpret mode on CPU — correctness +
-derived TPU traffic estimates; wall times are NOT TPU latencies)."""
+derived TPU traffic estimates; wall times are NOT TPU latencies).
+
+``--out BENCH_kernels.json`` writes the rows as JSON; CI runs that on every
+push and commits the refreshed file on main, so the repo accumulates a
+per-PR perf trajectory instead of expiring artifacts."""
 
 from __future__ import annotations
+
+import functools
 
 import jax.numpy as jnp
 import numpy as np
@@ -38,6 +44,7 @@ def run() -> list[dict]:
     rows.append({"name": "kernels/int8_matmul_256", "us_per_call": us,
                  "derived": f"tpu_int_macs={2 * m * n * k}"})
     rows.extend(_stamp_linear_rows(rng))
+    rows.extend(fused_site_rows())
     return rows
 
 
@@ -73,17 +80,7 @@ def _stamp_linear_rows(rng) -> list[dict]:
     us_fused, _ = timed(
         lambda: stamp_linear(x, None, None, cfg_fused, prepared=prep), reps=2)
 
-    act, out = s * din * 4, s * dout * 4
-    wbytes = din * dout                 # int8 codes read
-    ref_bytes = (2 * act            # L·X written + read back
-                 + 2 * act          # Q(T) written + read back
-                 + 2 * out          # matmul out written + read by inverse
-                 + out              # inverse write
-                 + act              # original X read
-                 + wbytes           # int8 codes read
-                 + 2 * din * dout * 2)  # bf16 weight re-materialized:
-                                        # dequant write + matmul read
-    fused_bytes = act + out + wbytes    # one round trip + int8 weight
+    ref_bytes, fused_bytes = stamp_site_bytes(s, din, dout)
     return [
         {"name": "kernels/stamp_linear_reference_1k", "us_per_call": us_ref,
          "derived": f"tpu_hbm_bytes={ref_bytes},act_roundtrips=4"},
@@ -92,6 +89,124 @@ def _stamp_linear_rows(rng) -> list[dict]:
     ]
 
 
-if __name__ == "__main__":
-    for r in run():
+def stamp_site_bytes(s: int, din: int, dout: int,
+                     dual: bool = False) -> tuple[int, int]:
+    """Derived per-call HBM traffic of one STaMP linear site, f32 activation
+    accounting (the reference path materializes f32 intermediates).
+
+    Reference (per linear): transform write+read, fake-quant write+read,
+    matmul out write + inverse read, inverse write, original X read, int8
+    weight codes read, and the bf16 weight re-materialized from the codes
+    (dequant write + matmul read).  A gate/up ``dual`` site shares one
+    transform+quant round trip but doubles everything per-projection and
+    adds the silu·mul combine (g and u re-read, product written).
+
+    Fused: read X once, write the output once, stream the int8 codes —
+    for the dual site both weight sets stream but X is still read once and
+    only the silu·mul product is written.
+    """
+    act, out = s * din * 4, s * dout * 4
+    wbytes = din * dout                  # int8 codes read
+    wremat = 2 * din * dout * 2          # bf16 dequant write + matmul read
+    shared = (2 * act                # L·X written + read back
+              + 2 * act              # Q(T) written + read back
+              + act)                 # original X read
+    per_proj = (2 * out              # matmul out written + read by inverse
+                + out                # inverse write
+                + wbytes + wremat)
+    if not dual:
+        return shared + per_proj, act + out + wbytes
+    # reference gate/up: hq read by the second matmul too, then the
+    # silu·mul combine reads both projections and writes the product
+    ref = shared + 2 * per_proj + act + 2 * out + out
+    fused = act + out + 2 * wbytes
+    return ref, fused
+
+
+@functools.lru_cache(maxsize=1)
+def fused_site_rows() -> list[dict]:
+    """Fused-vs-reference rows for EVERY model site wired through the fused
+    integer kernels (`repro.models.lm.FUSED_SITES` + the merged QKV):
+    attention QKV / out-proj, the MLP gate+up pair and down projection, and
+    the Mamba in/out projections.  Cached so `run.py` (which imports this
+    from both kernels_bench and table4_sites) measures once."""
+    import dataclasses
+
+    from repro.core.stamp import (StampConfig, prepare_linear, stamp_linear,
+                                  stamp_dual_linear)
+
+    rng = np.random.default_rng(7)
+    s, d = 256, 128
+    nh, hd = 4, 32                       # out-proj head split (nh·hd = d)
+    di = 2 * d                           # mamba inner dim
+    cfg_ref = StampConfig(num_hi_tokens=64)
+    cfg_fused = dataclasses.replace(cfg_ref, execution="fused")
+
+    def acts(*shape):
+        return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+    def weight(k, n):
+        return jnp.asarray(rng.normal(size=(k, n)).astype(np.float32) * .05)
+
+    sites = {
+        # name -> (din, dout, head-split input?, dual?)
+        "attn.qkv": (d, 2 * d, False, False),      # merged q + 2·kv widths
+        "attn.out_proj": (d, d, True, False),
+        "mlp.gate_up": (d, 2 * d, False, True),
+        "mlp.down_proj": (2 * d, d, False, False),
+        "mamba.in_proj": (d, 2 * di + 2 * 32 + 16, False, False),
+        "mamba.out_proj": (di, d, False, False),
+    }
+    rows = []
+    for name, (din, dout, split, dual) in sites.items():
+        x = acts(1, s, nh, din // nh) if split else acts(1, s, din)
+        if dual:
+            wg, wu = weight(din, dout), weight(din, dout)
+            pg, pu = prepare_linear(wg), prepare_linear(wu)
+            us_ref, _ = timed(lambda: stamp_dual_linear(
+                x, pg.dequant(jnp.float32), pu.dequant(jnp.float32),
+                cfg_ref), reps=2)
+            us_fused, _ = timed(lambda: stamp_dual_linear(
+                x, None, None, cfg_fused, prepared_gate=pg, prepared_up=pu),
+                reps=2)
+        else:
+            w = weight(din, dout)
+            prep = prepare_linear(w)
+            us_ref, _ = timed(lambda: stamp_linear(
+                x, prep.dequant(jnp.float32), None, cfg_ref,
+                merge_heads=split), reps=2)
+            us_fused, _ = timed(lambda: stamp_linear(
+                x, None, None, cfg_fused, prepared=prep,
+                merge_heads=split), reps=2)
+        ref_b, fused_b = stamp_site_bytes(s, din, dout, dual=dual)
+        rows.append({"name": f"kernels/site/{name}/reference",
+                     "us_per_call": us_ref,
+                     "derived": f"tpu_hbm_bytes={ref_b}"})
+        rows.append({"name": f"kernels/site/{name}/fused",
+                     "us_per_call": us_fused,
+                     "derived": (f"tpu_hbm_bytes={fused_b},"
+                                 f"hbm_savings={ref_b / fused_b:.2f}x")})
+    return rows
+
+
+def main() -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None,
+                    help="also write rows to this JSON file "
+                         "(BENCH_kernels.json is committed by CI)")
+    args = ap.parse_args()
+    rows = run()
+    for r in rows:
         print(r)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"suite": "kernels", "rows": rows}, f, indent=1)
+            f.write("\n")
+        print(f"wrote {len(rows)} rows to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,12 @@
 """Table 4 — per-site A4 ablation: STaMP helps at sequence-structured sites
 and is ~neutral at the pooled-conditioning site (cross-attn to_out),
-QuaRot+STaMP is the strongest combination everywhere else."""
+QuaRot+STaMP is the strongest combination everywhere else.
+
+Alongside the accuracy ablation this table now reports the *deployment*
+per-site picture: fused-vs-reference wall time and derived HBM bytes for
+every model site wired through the fused integer kernels (rows shared with
+`kernels_bench.fused_site_rows` — QKV, out-proj, gate/up pair, down-proj
+and the Mamba projections)."""
 
 from __future__ import annotations
 
@@ -54,6 +60,8 @@ def run() -> list[dict]:
                 "us_per_call": us,
                 "derived": f"sqnr_db={float(sqnr_db(ref, y)):.2f}",
             })
+    from benchmarks.kernels_bench import fused_site_rows
+    rows.extend(fused_site_rows())
     return rows
 
 

@@ -160,7 +160,10 @@ def prepare_linear(
     (shifted into signed storage, zero point shifted identically); from a
     raw ``w`` a per-output-channel asymmetric min-max quantization at
     ``bits`` is applied.  ``axis=-2`` reduction, so stacked ``(layers, din,
-    dout)`` weights prepare in one call.
+    dout)`` weights prepare in one call — the gate/up pair of a SwiGLU MLP
+    stacks to ``(2, din, dout)`` and prepares as one call too (per-channel
+    scales make the stacked prepare identical to two separate ones); see
+    `repro.models.lm.prepare_fused_weights`.
     """
     if w_quant is not None:
         assert w_quant.bits <= 8, "fused path stores weight codes in int8"
@@ -199,12 +202,19 @@ def fused_eligible(cfg: StampConfig, feature_rot: Optional[Array] = None
             and feature_rot is None)
 
 
-def _fused_linear(x: Array, prep: PreparedLinear, cfg: StampConfig) -> Array:
+def _fused_linear(x: Array, prep: PreparedLinear, cfg: StampConfig,
+                  merge_heads: bool = False) -> Array:
     from repro.kernels import ops as kops
-    *lead, s, d = x.shape
-    x3 = x.reshape(-1, s, d)
+    if merge_heads:
+        # raw head-split attention output: keep the (nh, hd) axes intact
+        # down to the kernel, which merges them on the in-VMEM tile
+        *lead, s, nh, hd = x.shape
+        xk = x.reshape(-1, s, nh, hd)
+    else:
+        *lead, s, d = x.shape
+        xk = x.reshape(-1, s, d)
     y = kops.stamp_quant_matmul(
-        x3, prep.qw, prep.sw, prep.zw, prep.bias,
+        xk, prep.qw, prep.sw, prep.zw, prep.bias,
         transform=cfg.seq_transform, levels=cfg.resolved_levels(s),
         skip_first=cfg.skip_first_token, num_hi=cfg.num_hi_tokens,
         hi_bits=cfg.hi_bits, lo_bits=cfg.lo_bits, out_dtype=x.dtype)
@@ -221,6 +231,7 @@ def stamp_linear(
     basis: Optional[Array] = None,
     feature_rot: Optional[Array] = None,
     prepared: Optional[PreparedLinear] = None,
+    merge_heads: bool = False,
 ) -> Array:
     """STaMP linear layer (Fig. 2a).
 
@@ -235,6 +246,10 @@ def stamp_linear(
     ``prepared`` (see :func:`prepare_linear`) to reuse cached int8 buffers
     across calls; otherwise they are prepared on the fly from ``w_quant``'s
     codes or ``w``.
+
+    ``merge_heads`` marks ``x`` as the raw head-split attention output
+    ``(..., s, nh, hd)`` (out-proj site): the fused kernel merges the head
+    axes on its in-VMEM tile, the fallback paths merge up front.
     """
     if fused_eligible(cfg, feature_rot) and \
             (w_quant is None or w_quant.bits <= 8):
@@ -246,7 +261,9 @@ def stamp_linear(
             # explicit bias wins over the prepared one (matches the
             # reference fallback below)
             prep = dataclasses.replace(prep, bias=b)
-        return _fused_linear(x, prep, cfg)
+        return _fused_linear(x, prep, cfg, merge_heads=merge_heads)
+    if merge_heads:
+        x = x.reshape(*x.shape[:-2], x.shape[-2] * x.shape[-1])
 
     if w is None and w_quant is None and prepared is not None:
         # reference fallback for a caller that only holds prepared buffers
@@ -258,17 +275,99 @@ def stamp_linear(
         y = x @ wmat
         return y + b if b is not None else y
 
-    tx = apply_seq_transform(x.astype(jnp.float32), cfg, basis=basis)
-    if feature_rot is not None:
-        tx = tx @ feature_rot.astype(tx.dtype)
-    bits = cfg.bits_vector(tx.shape[-2])
-    if cfg.granularity == "block":
-        tq = _blockwise_mixed(tx, bits, cfg.block_size)
-    else:
-        tq = Q.fake_quant(tx, bits, axis=-1)
+    tq = _reference_quantize(x, cfg, basis=basis, feature_rot=feature_rot)
     wmat = w_quant.dequant(x.dtype) if w_quant is not None else w
     y = tq.astype(x.dtype) @ wmat
     y = invert_seq_transform(y, cfg, basis=basis)
     if b is not None:
         y = y + b
     return y
+
+
+def _reference_quantize(x: Array, cfg: StampConfig,
+                        basis: Optional[Array] = None,
+                        feature_rot: Optional[Array] = None) -> Array:
+    """Reference-path transformed + fake-quantized activation (shared by
+    the single and dual linears, so their quantization semantics can't
+    diverge)."""
+    tx = apply_seq_transform(x.astype(jnp.float32), cfg, basis=basis)
+    if feature_rot is not None:
+        tx = tx @ feature_rot.astype(tx.dtype)
+    bits = cfg.bits_vector(tx.shape[-2])
+    if cfg.granularity == "block":
+        return _blockwise_mixed(tx, bits, cfg.block_size)
+    return Q.fake_quant(tx, bits, axis=-1)
+
+
+def stamp_dual_linear(
+    x: Array,
+    w_gate: Optional[Array],
+    w_up: Optional[Array],
+    cfg: StampConfig,
+    *,
+    b_gate: Optional[Array] = None,
+    b_up: Optional[Array] = None,
+    basis: Optional[Array] = None,
+    prepared_gate: Optional[PreparedLinear] = None,
+    prepared_up: Optional[PreparedLinear] = None,
+    epilogue: str = "silu_mul",
+):
+    """STaMP gate/up pair sharing ONE transform+quantize of ``x``.
+
+    The fused path issues a single dual-output kernel call
+    (`kernels.stamp_matmul.stamp_quant_dual_matmul_pallas`): the sequence
+    transform and mixed-precision quantize of the shared MLP input run once
+    into VMEM scratch and drive both integer GEMMs.  The reference path
+    shares the transformed/fake-quantized activation across two plain
+    matmuls — mathematically the same single quantization (``L⁻¹`` commutes
+    with the right-multiplication), just unfused.
+
+    ``epilogue="silu_mul"`` returns ``silu(gate)·up`` (the SwiGLU front
+    half, combined in the original token domain); ``"none"`` the tuple.
+    """
+    assert epilogue in ("silu_mul", "none"), epilogue
+    if fused_eligible(cfg):
+        prep_g = prepared_gate if prepared_gate is not None else \
+            prepare_linear(w_gate, b_gate, bits=cfg.fused_weight_bits)
+        prep_u = prepared_up if prepared_up is not None else \
+            prepare_linear(w_up, b_up, bits=cfg.fused_weight_bits)
+        from repro.kernels import ops as kops
+        *lead, s, d = x.shape
+        y = kops.stamp_quant_dual_matmul(
+            x.reshape(-1, s, d),
+            prep_g.qw, prep_g.sw, prep_g.zw,
+            prep_u.qw, prep_u.sw, prep_u.zw,
+            prep_g.bias if b_gate is None else b_gate,
+            prep_u.bias if b_up is None else b_up,
+            transform=cfg.seq_transform, levels=cfg.resolved_levels(s),
+            skip_first=cfg.skip_first_token, num_hi=cfg.num_hi_tokens,
+            hi_bits=cfg.hi_bits, lo_bits=cfg.lo_bits, epilogue=epilogue,
+            out_dtype=x.dtype)
+        if epilogue == "silu_mul":
+            return y.reshape(*lead, s, y.shape[-1])
+        return tuple(o.reshape(*lead, s, o.shape[-1]) for o in y)
+
+    def resolve(w, prep, b):
+        if w is None and prep is not None:
+            w = prep.dequant(x.dtype)
+            b = prep.bias if b is None else b
+        return w, b
+
+    w_gate, b_gate = resolve(w_gate, prepared_gate, b_gate)
+    w_up, b_up = resolve(w_up, prepared_up, b_up)
+
+    if not cfg.enabled:
+        g = x @ w_gate
+        u = x @ w_up
+    else:
+        # one shared reference-path quantization, two matmuls
+        tq = _reference_quantize(x, cfg, basis=basis).astype(x.dtype)
+        g = invert_seq_transform(tq @ w_gate, cfg, basis=basis)
+        u = invert_seq_transform(tq @ w_up, cfg, basis=basis)
+    if b_gate is not None:
+        g = g + b_gate
+    if b_up is not None:
+        u = u + b_up
+    if epilogue == "silu_mul":
+        return jax.nn.silu(g) * u
+    return g, u

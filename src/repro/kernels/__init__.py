@@ -24,6 +24,30 @@ STaMP linears run in one of two modes, selected by
   granularity; ineligible configs silently fall back to the reference path
   with identical semantics.
 
+Every prefill-path model linear is wired through the fused family
+(`repro.models.lm.FUSED_SITES`); two sites get dedicated treatment:
+
+* **out-proj** — `stamp_quant_matmul` also accepts the raw head-split
+  ``(b, s, nh, hd)`` attention output.  The BlockSpec maps the full
+  head-split tile per batch row and the kernel merges ``(nh, hd)`` on the
+  in-VMEM tile right before the transform, so the head-merge reshape is
+  fused with the stamped quantize instead of materializing a merged
+  activation in HBM between attention and the projection.
+* **gate/up pair** — `stamp_matmul.stamp_quant_dual_matmul` executes the
+  SwiGLU front half as ONE kernel.  Execution model: grid ``(batch,
+  N/block_n)`` exactly like the single kernel; on the first output-block
+  step the shared MLP input's transform + mixed-precision quantize run
+  once into VMEM scratch (int8 codes + per-token scale/zp), and **both**
+  the gate and up GEMMs of every output block consume those same codes —
+  the transform+quantize cost is paid once, not twice.  Each GEMM's result
+  is inverse-transformed separately (``L⁻¹`` commutes with the weight
+  multiplication but not with the gating nonlinearity), biases apply in
+  the token domain, and the optional ``silu·mul`` epilogue combines the
+  pair in-VMEM so only the product is written: one HBM read of the shared
+  input, two int8 weight streams, one output write.  With
+  ``epilogue="none"`` both projections are written (two outputs), still
+  off the single shared quantize.
+
 Decode-shaped execution
 -----------------------
 Decode has no sequence axis, so its two kernels drop the transform and keep
@@ -65,6 +89,7 @@ from repro.kernels.ops import (  # noqa: F401
     int8_matmul,
     quantize_pack,
     stamp_decode_matmul,
+    stamp_quant_dual_matmul,
     stamp_quant_matmul,
     walsh_hadamard,
 )

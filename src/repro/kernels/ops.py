@@ -17,7 +17,8 @@ from repro.kernels.decode_matmul import stamp_decode_matmul_pallas
 from repro.kernels.haar_dwt import haar_dwt_pallas
 from repro.kernels.int8_matmul import int8_matmul_pallas
 from repro.kernels.quant_pack import quant_pack_pallas
-from repro.kernels.stamp_matmul import stamp_quant_matmul_pallas
+from repro.kernels.stamp_matmul import (stamp_quant_dual_matmul_pallas,
+                                        stamp_quant_matmul_pallas)
 from repro.kernels.wht import wht_pallas
 
 
@@ -77,7 +78,9 @@ def stamp_quant_matmul(x, qw, sw, zw, bias=None, *, transform: str = "dwt",
                        out_dtype=None, interpret: bool | None = None):
     """Fused STaMP deployment linear (see `stamp_matmul.py`).
 
-    x: (b, s, K) float; qw: (K, N) signed int8 codes; sw/zw: (1, N) f32.
+    x: (b, s, K) float — or the raw head-split (b, s, nh, hd) attention
+    output (out-proj site: the head-merge reshape fuses with the in-VMEM
+    quantize); qw: (K, N) signed int8 codes; sw/zw: (1, N) f32.
     ``bias=None`` lowers a zero bias block (the add is free inside the
     epilogue's VMEM residency).
     """
@@ -89,6 +92,35 @@ def stamp_quant_matmul(x, qw, sw, zw, bias=None, *, transform: str = "dwt",
         x, qw, sw, zw, bias.reshape(1, -1).astype(jnp.float32),
         transform=transform, levels=levels, skip_first=skip_first,
         num_hi=num_hi, hi_bits=hi_bits, lo_bits=lo_bits,
+        out_dtype=out_dtype, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "transform", "levels", "skip_first", "num_hi", "hi_bits", "lo_bits",
+    "epilogue", "out_dtype", "interpret"))
+def stamp_quant_dual_matmul(x, qw_g, sw_g, zw_g, qw_u, sw_u, zw_u,
+                            bias_g=None, bias_u=None, *,
+                            transform: str = "dwt", levels: int = 3,
+                            skip_first: bool = True, num_hi: int = 64,
+                            hi_bits: int = 8, lo_bits: int = 4,
+                            epilogue: str = "silu_mul", out_dtype=None,
+                            interpret: bool | None = None):
+    """Fused STaMP gate/up pair (see `stamp_matmul.py`): the shared input's
+    sequence transform + mixed-precision quantize run ONCE into VMEM scratch
+    and feed both integer GEMMs.  ``epilogue="silu_mul"`` (the SwiGLU front
+    half) returns one array; ``"none"`` returns the (gate, up) tuple.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    if bias_g is None:
+        bias_g = jnp.zeros((1, qw_g.shape[1]), jnp.float32)
+    if bias_u is None:
+        bias_u = jnp.zeros((1, qw_u.shape[1]), jnp.float32)
+    return stamp_quant_dual_matmul_pallas(
+        x, qw_g, sw_g, zw_g, bias_g.reshape(1, -1).astype(jnp.float32),
+        qw_u, sw_u, zw_u, bias_u.reshape(1, -1).astype(jnp.float32),
+        transform=transform, levels=levels, skip_first=skip_first,
+        num_hi=num_hi, hi_bits=hi_bits, lo_bits=lo_bits, epilogue=epilogue,
         out_dtype=out_dtype, interpret=interpret)
 
 

@@ -105,9 +105,13 @@ def stamp_quant_matmul_ref(x, qw, sw, zw, bias=None, *, transform="dwt",
                            lo_bits=4, out_dtype=jnp.float32):
     """Unfused oracle for `stamp_quant_matmul`: transform → mixed-precision
     fake quant → dequantized matmul → inverse transform → bias, each step a
-    separate jnp materialization (exactly the reference execution path)."""
+    separate jnp materialization (exactly the reference execution path).
+    A head-split (b, s, nh, hd) input is merged up front (the kernel fuses
+    that reshape with the quantize)."""
     from repro.core import quant as Q
 
+    if x.ndim == 4:
+        x = x.reshape(*x.shape[:-2], x.shape[-2] * x.shape[-1])
     xf = x.astype(jnp.float32)
     tx = T.sequence_transform(xf, transform, axis=-2, levels=levels,
                               skip_first=skip_first)
@@ -120,3 +124,37 @@ def stamp_quant_matmul_ref(x, qw, sw, zw, bias=None, *, transform="dwt",
     if bias is not None:
         y = y + bias.reshape(1, -1).astype(jnp.float32)
     return y.astype(out_dtype)
+
+
+def stamp_quant_dual_matmul_ref(x, qw_g, sw_g, zw_g, qw_u, sw_u, zw_u,
+                                bias_g=None, bias_u=None, *, transform="dwt",
+                                levels=3, skip_first=True, num_hi=64,
+                                hi_bits=8, lo_bits=4, epilogue="silu_mul",
+                                out_dtype=jnp.float32):
+    """Unfused oracle for `stamp_quant_dual_matmul`: ONE shared transform +
+    fake quant, two dequantized matmuls, per-output inverse transforms, then
+    the optional silu·mul combine in the original (token) domain."""
+    from repro.core import quant as Q
+
+    if x.ndim == 4:
+        x = x.reshape(*x.shape[:-2], x.shape[-2] * x.shape[-1])
+    xf = x.astype(jnp.float32)
+    tx = T.sequence_transform(xf, transform, axis=-2, levels=levels,
+                              skip_first=skip_first)
+    bits = Q.mixed_precision_bits(tx.shape[-2], num_hi, hi_bits, lo_bits)
+    tq = Q.fake_quant(tx, bits, axis=-1)
+
+    def one(qw, sw, zw, bias):
+        y = tq @ ((qw.astype(jnp.float32) - zw) * sw)
+        y = T.inverse_sequence_transform(y, transform, axis=-2,
+                                         levels=levels,
+                                         skip_first=skip_first)
+        if bias is not None:
+            y = y + bias.reshape(1, -1).astype(jnp.float32)
+        return y
+
+    g = one(qw_g, sw_g, zw_g, bias_g)
+    u = one(qw_u, sw_u, zw_u, bias_u)
+    if epilogue == "silu_mul":
+        return (jax.nn.silu(g) * u).astype(out_dtype)
+    return g.astype(out_dtype), u.astype(out_dtype)

@@ -1,10 +1,10 @@
-"""Pallas TPU kernel: the fused STaMP deployment linear (Fig. 2a, one pass).
+"""Pallas TPU kernels: the fused STaMP deployment linears (Fig. 2a, one pass).
 
 The reference path (`repro.core.stamp.stamp_linear` with
 ``execution="reference"``) materializes four HBM-sized intermediates per
 linear: the sequence-transformed activation ``T = L·X``, the fake-quantized
 ``Tq``, the matmul output ``Tq·W`` and the inverse-transformed ``L⁻¹(Tq·W)``.
-This kernel runs the whole chain in one VMEM residency:
+The kernels here run the whole chain in one VMEM residency:
 
     1. ``T = L · X``          — multi-level Haar DWT / WHT butterflies on the
                                 in-VMEM tile (sequence axis fully resident);
@@ -38,6 +38,23 @@ orthonormal helpers from `repro.core.transforms` — static shapes, so they
 trace into sublane shuffles the same way `haar_dwt.py` / `wht.py` do,
 including the identity-tail handling for non-power-of-two sequence lengths
 and the first-token (attention sink) exception.
+
+Three call-site variants share that structure:
+
+* `stamp_quant_matmul_pallas` — the single-output kernel.  ``x`` may be
+  ``(b, s, K)`` or, for the attention out-proj, the *raw head-split*
+  ``(b, s, nh, hd)`` attention output: the head-merge reshape happens on
+  the in-VMEM tile right before the transform, so no merged ``(b, s,
+  nh·hd)`` activation ever materializes in HBM between attention and the
+  projection.
+* `stamp_quant_dual_matmul_pallas` — the dual-output (gate/up) kernel.
+  Two weight sets with the same output width share ONE transform+quantize
+  of the common activation (the scratch codes drive both GEMMs); the
+  optional ``silu·mul`` epilogue combines the two inverse-transformed
+  results in-VMEM, writing a single output — the down-proj input — so the
+  whole SwiGLU front half costs one activation read and one write.
+* `decode_matmul.stamp_decode_matmul_pallas` (sibling module) — the
+  transform-free single-token variant for decode.
 """
 
 from __future__ import annotations
@@ -76,34 +93,35 @@ def _seq_inv(y, kind: str, levels: int, skip_first: bool):
     raise ValueError(f"transform {kind!r} not fusable")
 
 
-def _stamp_kernel(x_ref, qw_ref, sw_ref, zw_ref, b_ref, o_ref,
-                  qx_ref, sx_ref, zx_ref, *,
-                  transform: str, levels: int, skip_first: bool,
-                  num_hi: int, hi_bits: int, lo_bits: int, k_total: int):
-    @pl.when(pl.program_id(1) == 0)
-    def _transform_and_quantize():
-        # runs once per batch row; later output blocks reuse the scratch
-        x = x_ref[0].astype(jnp.float32)               # (s, K)
-        tx = _seq_fwd(x, transform, levels, skip_first)
-        s = tx.shape[0]
-        # mixed-precision per-token min-max quantize (Eq. 1 with b_ij = b_i)
-        row = jax.lax.broadcasted_iota(jnp.int32, (s, 1), 0)
-        n_lev = jnp.where(row < num_hi, 2.0 ** hi_bits - 1.0,
-                          2.0 ** lo_bits - 1.0)
-        mn = jnp.min(tx, axis=-1, keepdims=True)
-        mx = jnp.max(tx, axis=-1, keepdims=True)
-        sx = jnp.maximum((mx - mn) / n_lev, 1e-8)
-        zx = jnp.round(-mn / sx)
-        q = jnp.clip(jnp.round(tx / sx) + zx, 0.0, n_lev)
-        qx_ref[...] = (q - 128.0).astype(jnp.int8)  # unsigned → signed codes
-        sx_ref[...] = sx
-        zx_ref[...] = zx - 128.0           # shift zp identically (exact)
+def _transform_quantize(x_ref, qx_ref, sx_ref, zx_ref, *,
+                        transform: str, levels: int, skip_first: bool,
+                        num_hi: int, hi_bits: int, lo_bits: int):
+    """Transform + mixed-precision quantize the in-VMEM activation tile into
+    scratch.  Runs on the first output-block grid step of each batch row;
+    later blocks (and, in the dual kernel, the second GEMM) reuse the codes.
+    A head-split ``(s, nh, hd)`` tile is merged to ``(s, nh·hd)`` here — the
+    head-merge reshape is fused with the quantize, entirely in VMEM."""
+    x = x_ref[0].astype(jnp.float32)
+    x = x.reshape(x.shape[0], -1)                      # (s, K) head merge
+    tx = _seq_fwd(x, transform, levels, skip_first)
+    s = tx.shape[0]
+    # mixed-precision per-token min-max quantize (Eq. 1 with b_ij = b_i)
+    row = jax.lax.broadcasted_iota(jnp.int32, (s, 1), 0)
+    n_lev = jnp.where(row < num_hi, 2.0 ** hi_bits - 1.0,
+                      2.0 ** lo_bits - 1.0)
+    mn = jnp.min(tx, axis=-1, keepdims=True)
+    mx = jnp.max(tx, axis=-1, keepdims=True)
+    sx = jnp.maximum((mx - mn) / n_lev, 1e-8)
+    zx = jnp.round(-mn / sx)
+    q = jnp.clip(jnp.round(tx / sx) + zx, 0.0, n_lev)
+    qx_ref[...] = (q - 128.0).astype(jnp.int8)      # unsigned → signed codes
+    sx_ref[...] = sx
+    zx_ref[...] = zx - 128.0               # shift zp identically (exact)
 
-    qx = qx_ref[...]                                   # (s, K) int8
-    sx = sx_ref[...]
-    zxs = zx_ref[...]
 
-    # integer GEMM with on-the-fly correction sums (reads each operand once)
+def _int_gemm(qx, sx, zxs, qw_ref, sw_ref, zw_ref, *, k_total: int):
+    """int8×int8 GEMM with the zero-point-correction epilogue; reads each
+    operand once.  Returns the dequantized (s, bn) f32 partial product."""
     qw = qw_ref[...]                                   # (K, bn) int8
     acc = jnp.dot(qx, qw, preferred_element_type=jnp.int32).astype(jnp.float32)
     qw_sum = jnp.sum(qw.astype(jnp.int32), axis=0,
@@ -113,16 +131,92 @@ def _stamp_kernel(x_ref, qw_ref, sw_ref, zw_ref, b_ref, o_ref,
     sw = sw_ref[...].astype(jnp.float32)               # (1, bn)
     zw = zw_ref[...].astype(jnp.float32)
     corr = acc - zxs * qw_sum - zw * qx_sum + float(k_total) * zxs * zw
-    y = corr * sx * sw                                 # (s, bn) f32
+    return corr * sx * sw                              # (s, bn) f32
 
+
+def _stamp_kernel(x_ref, qw_ref, sw_ref, zw_ref, b_ref, o_ref,
+                  qx_ref, sx_ref, zx_ref, *,
+                  transform: str, levels: int, skip_first: bool,
+                  num_hi: int, hi_bits: int, lo_bits: int, k_total: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _tq():
+        _transform_quantize(x_ref, qx_ref, sx_ref, zx_ref,
+                            transform=transform, levels=levels,
+                            skip_first=skip_first, num_hi=num_hi,
+                            hi_bits=hi_bits, lo_bits=lo_bits)
+
+    y = _int_gemm(qx_ref[...], sx_ref[...], zx_ref[...],
+                  qw_ref, sw_ref, zw_ref, k_total=k_total)
     # inverse transform commutes with the right-multiplication by W, so it
     # applies per output block; bias afterwards is exact (Eq. 7).
     y = _seq_inv(y, transform, levels, skip_first)
     o_ref[0] = (y + b_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
 
 
+def _stamp_dual_kernel(x_ref, qwg_ref, swg_ref, zwg_ref, bg_ref,
+                       qwu_ref, swu_ref, zwu_ref, bu_ref, *refs,
+                       transform: str, levels: int, skip_first: bool,
+                       num_hi: int, hi_bits: int, lo_bits: int, k_total: int,
+                       epilogue: str):
+    """Two GEMMs (gate/up) off ONE scratch-resident quantized activation.
+
+    With ``epilogue="silu_mul"`` the inverse-transformed pair combines to
+    ``silu(g)·u`` in-VMEM and a single output block is written; with
+    ``epilogue="none"`` both projections are written separately."""
+    if epilogue == "silu_mul":
+        o_ref, qx_ref, sx_ref, zx_ref = refs
+    else:
+        og_ref, ou_ref, qx_ref, sx_ref, zx_ref = refs
+
+    @pl.when(pl.program_id(1) == 0)
+    def _tq():
+        _transform_quantize(x_ref, qx_ref, sx_ref, zx_ref,
+                            transform=transform, levels=levels,
+                            skip_first=skip_first, num_hi=num_hi,
+                            hi_bits=hi_bits, lo_bits=lo_bits)
+
+    qx, sx, zxs = qx_ref[...], sx_ref[...], zx_ref[...]
+    yg = _int_gemm(qx, sx, zxs, qwg_ref, swg_ref, zwg_ref, k_total=k_total)
+    yu = _int_gemm(qx, sx, zxs, qwu_ref, swu_ref, zwu_ref, k_total=k_total)
+    # both outputs return to the original domain before the gating
+    # nonlinearity — silu does NOT commute with L⁻¹, the element-wise
+    # product must happen on tokens, not wavelet coefficients.
+    yg = _seq_inv(yg, transform, levels, skip_first) \
+        + bg_ref[...].astype(jnp.float32)
+    yu = _seq_inv(yu, transform, levels, skip_first) \
+        + bu_ref[...].astype(jnp.float32)
+    if epilogue == "silu_mul":
+        o_ref[0] = (jax.nn.silu(yg) * yu).astype(o_ref.dtype)
+    else:
+        og_ref[0] = yg.astype(og_ref.dtype)
+        ou_ref[0] = yu.astype(ou_ref.dtype)
+
+
+def _pick_block_n(block_n: int, n: int) -> int:
+    # halve until the block divides N — never fall back to a full-width
+    # block (a concatenated QKV width like 3200 would otherwise force the
+    # whole (K, N) weight + (s, N) f32 output into one VMEM residency)
+    bn = min(block_n, n)
+    while n % bn:
+        bn //= 2
+    return bn
+
+
+def _x_spec(x: jax.Array) -> tuple[pl.BlockSpec, int, int, int]:
+    """Activation BlockSpec for a (b, s, K) or raw head-split (b, s, nh, hd)
+    input.  The 4-D case maps the full (s, nh, hd) tile per batch row; the
+    kernel merges heads in VMEM (`_transform_quantize`), so the out-proj
+    consumes the attention output without a merged HBM intermediate."""
+    if x.ndim == 4:
+        b, s, nh, hd = x.shape
+        return pl.BlockSpec((1, s, nh, hd), lambda i, j: (i, 0, 0, 0)), \
+            b, s, nh * hd
+    b, s, k = x.shape
+    return pl.BlockSpec((1, s, k), lambda i, j: (i, 0, 0)), b, s, k
+
+
 def stamp_quant_matmul_pallas(
-    x: jax.Array,            # (b, s, K) float
+    x: jax.Array,            # (b, s, K) float — or (b, s, nh, hd) head-split
     qw: jax.Array,           # (K, N) int8 signed codes
     sw: jax.Array,           # (1, N) f32 per-output-channel scale
     zw: jax.Array,           # (1, N) f32 signed-shifted zero point
@@ -140,15 +234,10 @@ def stamp_quant_matmul_pallas(
 ) -> jax.Array:
     """Fused STaMP linear: ``L⁻¹(Q(L·x) · Wq_deq) + bias`` in one kernel."""
     assert transform in FUSABLE_TRANSFORMS, transform
-    b, s, k = x.shape
+    x_spec, b, s, k = _x_spec(x)
     k2, n = qw.shape
     assert k == k2, (k, k2)
-    # halve until the block divides N — never fall back to a full-width
-    # block (a concatenated QKV width like 3200 would otherwise force the
-    # whole (K, N) weight + (s, N) f32 output into one VMEM residency)
-    bn = min(block_n, n)
-    while n % bn:
-        bn //= 2
+    bn = _pick_block_n(block_n, n)
     kernel = functools.partial(
         _stamp_kernel, transform=transform, levels=levels,
         skip_first=skip_first, num_hi=num_hi, hi_bits=hi_bits,
@@ -157,7 +246,7 @@ def stamp_quant_matmul_pallas(
         kernel,
         grid=(b, n // bn),
         in_specs=[
-            pl.BlockSpec((1, s, k), lambda i, j: (i, 0, 0)),
+            x_spec,
             pl.BlockSpec((k, bn), lambda i, j: (0, j)),
             pl.BlockSpec((1, bn), lambda i, j: (0, j)),
             pl.BlockSpec((1, bn), lambda i, j: (0, j)),
@@ -172,3 +261,63 @@ def stamp_quant_matmul_pallas(
         ],
         interpret=interpret,
     )(x, qw, sw, zw, bias)
+
+
+def stamp_quant_dual_matmul_pallas(
+    x: jax.Array,            # (b, s, K) float
+    qw_g: jax.Array,         # (K, N) int8 gate codes
+    sw_g: jax.Array,         # (1, N) f32
+    zw_g: jax.Array,         # (1, N) f32
+    bias_g: jax.Array,       # (1, N) f32
+    qw_u: jax.Array,         # (K, N) int8 up codes
+    sw_u: jax.Array,
+    zw_u: jax.Array,
+    bias_u: jax.Array,
+    *,
+    transform: str = "dwt",
+    levels: int = 3,
+    skip_first: bool = True,
+    num_hi: int = 64,
+    hi_bits: int = 8,
+    lo_bits: int = 4,
+    block_n: int = 256,
+    epilogue: str = "silu_mul",   # "silu_mul" | "none"
+    out_dtype=None,
+    interpret: bool = False,
+):
+    """Fused STaMP gate/up pair: ONE transform+quantize of the shared input
+    drives both integer GEMMs.  ``epilogue="silu_mul"`` returns
+    ``silu(L⁻¹(Q·Wg)+bg) · (L⁻¹(Q·Wu)+bu)`` as a single array;
+    ``epilogue="none"`` returns the ``(gate, up)`` tuple."""
+    assert transform in FUSABLE_TRANSFORMS, transform
+    assert epilogue in ("silu_mul", "none"), epilogue
+    x_spec, b, s, k = _x_spec(x)
+    k2, n = qw_g.shape
+    assert k == k2, (k, k2)
+    assert qw_u.shape == qw_g.shape, (qw_u.shape, qw_g.shape)
+    bn = _pick_block_n(block_n, n)
+    kernel = functools.partial(
+        _stamp_dual_kernel, transform=transform, levels=levels,
+        skip_first=skip_first, num_hi=num_hi, hi_bits=hi_bits,
+        lo_bits=lo_bits, k_total=k, epilogue=epilogue)
+    w_spec = pl.BlockSpec((k, bn), lambda i, j: (0, j))
+    c_spec = pl.BlockSpec((1, bn), lambda i, j: (0, j))
+    o_spec = pl.BlockSpec((1, s, bn), lambda i, j: (i, 0, j))
+    o_shape = jax.ShapeDtypeStruct((b, s, n), out_dtype or x.dtype)
+    single = epilogue == "silu_mul"
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, n // bn),
+        in_specs=[x_spec,
+                  w_spec, c_spec, c_spec, c_spec,
+                  w_spec, c_spec, c_spec, c_spec],
+        out_specs=o_spec if single else (o_spec, o_spec),
+        out_shape=o_shape if single else (o_shape, o_shape),
+        scratch_shapes=[
+            pltpu.VMEM((s, k), jnp.int8),      # shared quantized codes
+            pltpu.VMEM((s, 1), jnp.float32),   # per-token scale
+            pltpu.VMEM((s, 1), jnp.float32),   # per-token (shifted) zp
+        ],
+        interpret=interpret,
+    )(x, qw_g, sw_g, zw_g, bias_g, qw_u, sw_u, zw_u, bias_u)
+    return out

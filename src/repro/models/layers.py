@@ -64,7 +64,7 @@ def apply_rope(x: Array, positions: Array, theta: float) -> Array:
 
 
 def stamp_fused_linear(x: Array, w: dict, b: Optional[Array],
-                       stamp_cfg) -> Array:
+                       stamp_cfg, merge_heads: bool = False) -> Array:
     """Run one STaMP linear through the fused Pallas integer kernel.
 
     ``w`` is a prepared-weight dict ``{"iq": (din, dout) int8, "isw": (1,
@@ -73,10 +73,33 @@ def stamp_fused_linear(x: Array, w: dict, b: Optional[Array],
     kernel applies the sequence transform, mixed-precision quantization,
     integer GEMM and inverse transform in one VMEM residency, so the
     activation never materializes an intermediate in HBM.
+
+    ``merge_heads=True`` marks ``x`` as the raw head-split ``(b, s, nh,
+    hd)`` attention output (out-proj site): the head-merge reshape fuses
+    with the kernel's in-VMEM quantize instead of materializing a merged
+    activation first.
     """
     from repro.core.stamp import PreparedLinear, stamp_linear
     prep = PreparedLinear(qw=w["iq"], sw=w["isw"], zw=w["izw"], bias=b)
-    return stamp_linear(x, None, None, stamp_cfg, prepared=prep)
+    return stamp_linear(x, None, None, stamp_cfg, prepared=prep,
+                        merge_heads=merge_heads)
+
+
+def stamp_fused_dual_linear(x: Array, w_gate: dict, w_up: dict,
+                            stamp_cfg) -> Array:
+    """SwiGLU front half ``silu(x·Wg)·(x·Wu)`` through the dual-output
+    fused kernel: the sequence transform + mixed-precision quantize of the
+    shared input run ONCE (VMEM scratch) and drive both integer GEMMs; the
+    silu·mul epilogue combines the pair in-VMEM, so the whole gate/up stage
+    costs one HBM read of ``x`` and one write of the product."""
+    from repro.core.stamp import PreparedLinear, stamp_dual_linear
+    pg = PreparedLinear(qw=w_gate["iq"], sw=w_gate["isw"],
+                        zw=w_gate["izw"], bias=None)
+    pu = PreparedLinear(qw=w_up["iq"], sw=w_up["isw"],
+                        zw=w_up["izw"], bias=None)
+    return stamp_dual_linear(x, None, None, stamp_cfg,
+                             prepared_gate=pg, prepared_up=pu,
+                             epilogue="silu_mul")
 
 
 # ---------------------------------------------------------------------------
@@ -316,12 +339,25 @@ def moe_ffn(
     'model' → E) without ragged ops; the einsum forms lower to
     all-to-all-like collectives under GSPMD.  Overflowing tokens are dropped
     (standard capacity semantics).
+
+    A sequence length that doesn't divide ``group_size`` pads the tail
+    group with zero tokens; padding is masked out of routing *before* the
+    capacity cumsum (a pad token must not occupy an expert slot a real
+    token would have used) and carries zero combine weight, so it never
+    contributes to any output.
     """
     bsz, seq, d = x.shape
     gs = min(group_size, seq)
-    assert seq % gs == 0, (seq, gs)
-    x = x.reshape(bsz * (seq // gs), gs, d)
+    pad = -seq % gs
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.zeros((bsz, pad, d), x.dtype)], axis=1)
+    seq_p = seq + pad
+    x = x.reshape(bsz * (seq_p // gs), gs, d)
     b, s, _ = x.shape
+    valid = (jnp.arange(seq_p) < seq)                          # (seq_p,)
+    valid = jnp.broadcast_to(valid[None], (bsz, seq_p)) \
+        .reshape(b, s).astype(jnp.float32)
     e = gate_w.shape[-1]
     k = experts_per_token
     cap = max(int(np.ceil(s * k / e * capacity_factor)), 1)
@@ -333,6 +369,7 @@ def moe_ffn(
         gate_vals.sum(-1, keepdims=True), 1e-9)                # renormalize
 
     onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)    # (b, s, k, E)
+    onehot = onehot * valid[:, :, None, None]                  # drop padding
     # position of each (token, choice) within its expert queue, top-1 first
     flat = onehot.transpose(0, 2, 1, 3).reshape(b, k * s, e)   # (b, k*s, E)
     pos = jnp.cumsum(flat, axis=1) - flat                      # (b, k*s, E)
@@ -354,7 +391,7 @@ def moe_ffn(
     h = jax.nn.silu(g) * u
     out = jnp.einsum("becf,efd->becd", h, w_down.astype(x.dtype))
     y = jnp.einsum("bsec,becd->bsd", combine, out)
-    return y.reshape(bsz, seq, d)
+    return y.reshape(bsz, seq_p, d)[:, :seq]
 
 
 # ---------------------------------------------------------------------------

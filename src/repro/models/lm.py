@@ -220,21 +220,39 @@ def quantize_weights_for_serving(params: Pytree, bits: int = 4) -> Pytree:
     return visit(params)
 
 
-# sites wired to the fused integer kernel: the attention QKV projections
-# (merged into one concatenated "wqkv" buffer so prefill issues a single
-# kernel call and decode a single dequant matmul) and the MLP down
-# projection (their inputs are exactly the STaMP'd activations).  Attention
-# out-proj and the MLP gate/up pair stay on the reference path — see
-# ROADMAP "Open items".
-FUSED_SITES = ("wo_mlp", "dwo_mlp")
+# Per-site fused-wiring table: every prefill-path STaMP linear and how the
+# fused integer kernel consumes its prepared int8 buffers.
+#
+#   single — one `stamp_quant_matmul` call (the attention out-proj feeds
+#            the raw (b, s, nh, hd) attention output; the head merge fuses
+#            with the kernel's in-VMEM quantize);
+#   pair   — the SwiGLU gate/up pair shares ONE transform+quantize through
+#            the dual-output kernel (`stamp_quant_dual_matmul`, silu·mul
+#            epilogue);
+#   merged — wq/wk/wv concatenate into one "wqkv" buffer at prepare time so
+#            prefill issues a single kernel call over the full QKV width.
+#
+# Cross-attention projections (xw*) stay un-prepared: the paper applies no
+# sequence transform at pooled-conditioning sites (Table 4), and the MoE
+# expert einsums remain reference-only (ROADMAP "Open items").
+FUSED_SITES = {
+    "wo": "single",              # attention out-proj (head-merge fused)
+    "wo_mlp": "single", "dwo_mlp": "single",
+    "in_proj": "single", "out_proj": "single",   # mamba projections
+    "wi_gate": "pair", "wi_up": "pair",
+    "dwi_gate": "pair", "dwi_up": "pair",
+}
 _QKV = ("wq", "wk", "wv")
+_QKV_BIAS = ("bq", "bk", "bv")
+_PAIRS = (("wi_gate", "wi_up"), ("dwi_gate", "dwi_up"))
 
 
 def prepare_fused_weights(params: Pytree, stamp: StampConfig) -> Pytree:
     """Hoist the fused sites' weights into cached int8 buffers
     ``{"iq", "isw", "izw"}`` (per-output-channel scales, signed codes);
-    self-attention wq/wk/wv merge into one ``"wqkv"`` entry (concatenated
-    **once here**, not per forward call).
+    self-attention wq/wk/wv merge into one ``"wqkv"`` entry and their biases
+    into ``"bqkv"`` (concatenated **once here**, not per forward call), and
+    each gate/up pair stacks into one `prepare_linear` call.
 
     Runs once at engine/benchmark setup; stacked ``(nper, din, dout)`` period
     weights prepare in one shot and slice cleanly under `lax.scan`.  Packed
@@ -246,11 +264,21 @@ def prepare_fused_weights(params: Pytree, stamp: StampConfig) -> Pytree:
     if not fused_eligible(stamp):
         return params
 
+    def raw(w):
+        return _dequant_packed(w, jnp.float32) if isinstance(w, dict) \
+            else w.astype(jnp.float32)
+
     def prep(w):
-        if isinstance(w, dict):
-            w = _dequant_packed(w, jnp.float32)
-        p = prepare_linear(w, bits=stamp.fused_weight_bits)
+        p = prepare_linear(raw(w), bits=stamp.fused_weight_bits)
         return {"iq": p.qw, "isw": p.sw, "izw": p.zw}
+
+    def prep_pair(wg, wu):
+        # stacked (2, din, dout) prepare: per-output-channel scales make it
+        # identical to two separate prepares, in one pass over the pair
+        p = prepare_linear(jnp.stack([raw(wg), raw(wu)]),
+                           bits=stamp.fused_weight_bits)
+        return ({"iq": p.qw[0], "isw": p.sw[0], "izw": p.zw[0]},
+                {"iq": p.qw[1], "isw": p.sw[1], "izw": p.zw[1]})
 
     def visit(tree):
         if isinstance(tree, dict):
@@ -259,10 +287,17 @@ def prepare_fused_weights(params: Pytree, stamp: StampConfig) -> Pytree:
             if all(k in items for k in _QKV) and "wqkv" not in items:
                 # per-output-channel scales make prepare(concat) identical
                 # to concat(prepare): quantize the merged buffer directly
-                raws = [items.pop(k) for k in _QKV]
-                raws = [_dequant_packed(r, jnp.float32) if isinstance(r, dict)
-                        else r.astype(jnp.float32) for r in raws]
+                raws = [raw(items.pop(k)) for k in _QKV]
                 out["wqkv"] = prep(jnp.concatenate(raws, axis=-1))
+                if all(k in items for k in _QKV_BIAS):
+                    out["bqkv"] = jnp.concatenate(
+                        [items.pop(k) for k in _QKV_BIAS], axis=-1)
+            for kg, ku in _PAIRS:
+                if kg in items and ku in items and \
+                        not (isinstance(items[kg], dict)
+                             and "iq" in items[kg]):
+                    out[kg], out[ku] = prep_pair(items.pop(kg),
+                                                 items.pop(ku))
             for k, v in items.items():
                 if k == "encoder":
                     # the encoder never runs STaMP (stamp=None in
@@ -356,11 +391,13 @@ def attn_block(
     hd, nh, kvh = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
     h = L.rms_norm(x, p["ln1"].astype(x.dtype), cfg.norm_eps)
     if "wqkv" in p:
-        # merged prepared int8 QKV (prepare_fused_weights): biases stay
-        # per-site leaves — concatenating three (dim,) vectors is free,
-        # unlike the weight concat which happened once at prepare time
-        bqkv = None
-        if p.get("bq") is not None:
+        # merged prepared int8 QKV (prepare_fused_weights): the merged
+        # "bqkv" bias was concatenated there too — once at prepare time,
+        # not per layer call
+        bqkv = p.get("bqkv")
+        if bqkv is None and p.get("bq") is not None:
+            # legacy prepared tree (merged weight, per-site bias leaves):
+            # fall back to the per-call concat rather than dropping biases
             bqkv = jnp.concatenate([p["bq"], p["bk"], p["bv"]], axis=-1)
         if _use_fused(stamp, p["wqkv"]):
             # ONE kernel call: the sequence transform + quantize of h runs
@@ -443,9 +480,15 @@ def attn_block(
         attn = L.flash_attention(q, k, v, causal=causal)
         if mode == "prefill":
             new_entry = KV.quantize_full(k, v, kv_cfg, capacity=cache_capacity)
-    out = _merge_heads(attn)
-    out = _maybe_stamp(out, stamp)
-    x = x + _linear(out, p["wo"])
+    if _use_fused(stamp, p["wo"]):
+        # fused out-proj: the raw head-split attention output goes straight
+        # into the kernel — its stamped quantize fuses with the head-merge
+        # reshape, so no merged (b, s, nh·hd) activation round-trips HBM
+        x = x + L.stamp_fused_linear(attn, p["wo"], None, stamp,
+                                     merge_heads=True)
+    else:
+        out = _maybe_stamp(_merge_heads(attn), stamp)
+        x = x + _linear(out, p["wo"])
 
     if enc_out is not None and "xwq" in p:   # cross-attention (enc-dec)
         hx = L.rms_norm(x, p["lnx"].astype(x.dtype), cfg.norm_eps)
@@ -489,8 +532,11 @@ def mamba_block(
 ) -> tuple[Array, Optional[dict]]:
     di, n, nh, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
     h = L.rms_norm(x, p["ln1"].astype(x.dtype), cfg.norm_eps)
-    h = _maybe_stamp(h, stamp)
-    proj = _linear(h, p["in_proj"])
+    if _use_fused(stamp, p["in_proj"]):
+        # single-output fused kernel on the pre-mixer projection
+        proj = L.stamp_fused_linear(h, p["in_proj"], None, stamp)
+    else:
+        proj = _linear(_maybe_stamp(h, stamp), p["in_proj"])
     z, xbc, dt_raw = jnp.split(proj, [di, 2 * di + 2 * n], axis=-1)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
 
@@ -526,6 +572,12 @@ def mamba_block(
     y = yh.reshape(*yh.shape[:-2], di).astype(x.dtype)
     y = y * jax.nn.silu(z)
     y = L.rms_norm(y, p["ssm_norm"].astype(x.dtype), cfg.norm_eps)
+    # decode always passes stamp=None, so _use_fused is False there — the
+    # same contract that keeps the in_proj dispatch above off the
+    # sequence-transform kernel during decode
+    if _use_fused(stamp, p["out_proj"]):
+        return x + L.stamp_fused_linear(y, p["out_proj"], None,
+                                        stamp), new_entry
     y = _maybe_stamp(y, stamp) if mode != "decode" else y
     return x + _linear(y, p["out_proj"]), new_entry
 
@@ -535,7 +587,10 @@ def ffn_block(p: dict, x: Array, spec: LayerSpec, cfg: ModelConfig, *,
     if spec.ffn == "none":
         return x
     h = L.rms_norm(x, p["ln2"].astype(x.dtype), cfg.norm_eps)
-    h = _maybe_stamp(h, stamp)
+    # h stays raw here: the fused gate/up pair quantizes it inside the dual
+    # kernel; only reference-path consumers see the stamped round trip
+    # (computed once, shared between the MoE branch and un-fused gate/up)
+    hq = None
     out = jnp.zeros_like(x)
     if spec.ffn in ("moe", "moe_dense"):
         gate_w = (p["gate_w"] if not isinstance(p["gate_w"], dict)
@@ -543,13 +598,21 @@ def ffn_block(p: dict, x: Array, spec: LayerSpec, cfg: ModelConfig, *,
         we_gate = _expert_w(p["we_gate"], x.dtype)
         we_up = _expert_w(p["we_up"], x.dtype)
         we_down = _expert_w(p["we_down"], x.dtype)
-        out = out + L.moe_ffn(h, gate_w, we_gate, we_up, we_down,
+        hq = _maybe_stamp(h, stamp)
+        out = out + L.moe_ffn(hq, gate_w, we_gate, we_up, we_down,
                               cfg.experts_per_token, cfg.capacity_factor,
                               group_size=cfg.moe_group_size)
     if spec.ffn in ("mlp", "moe_dense"):
         prefix = "d" if spec.ffn == "moe_dense" else ""
-        g = jax.nn.silu(_linear(h, p[f"{prefix}wi_gate"])) * \
-            _linear(h, p[f"{prefix}wi_up"])
+        wg, wu = p[f"{prefix}wi_gate"], p[f"{prefix}wi_up"]
+        if _use_fused(stamp, wg) and _use_fused(stamp, wu):
+            # ONE dual-output kernel call: the shared input's transform +
+            # quantize runs once (VMEM scratch) and drives both GEMMs,
+            # silu·mul epilogue included
+            g = L.stamp_fused_dual_linear(h, wg, wu, stamp)
+        else:
+            hq = _maybe_stamp(h, stamp) if hq is None else hq
+            g = jax.nn.silu(_linear(hq, wg)) * _linear(hq, wu)
         if _use_fused(stamp, p[f"{prefix}wo_mlp"]):
             out = out + L.stamp_fused_linear(g, p[f"{prefix}wo_mlp"], None,
                                              stamp)

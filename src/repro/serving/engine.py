@@ -77,11 +77,14 @@ class _EngineBase:
     def __init__(self, params, cfg: ModelConfig, serve: lm.ServeConfig):
         if serve.stamp is not None and serve.stamp.enabled and \
                 serve.stamp.execution == "fused":
-            # hoist the fused sites' weights into cached int8 buffers once;
-            # prefill then runs the integer kernel per STaMP linear and
-            # decode consumes the same buffers through the single-token
-            # integer kernel (kernels/decode_matmul.py) instead of
-            # re-dequantizing them to bf16 every step.
+            # hoist every fused site's weights into cached int8 buffers once
+            # (lm.FUSED_SITES: merged QKV+bias, attention out-proj, gate/up
+            # pairs, MLP down, mamba in/out); prefill then runs the integer
+            # kernels per STaMP linear — the gate/up pair through ONE
+            # dual-output call — and decode consumes the same buffers
+            # through the single-token integer kernel
+            # (kernels/decode_matmul.py) instead of re-dequantizing them to
+            # bf16 every step.
             params = lm.prepare_fused_weights(params, serve.stamp)
             serve = dataclasses.replace(serve, fused_decode_matmul=True)
         self.params = params

@@ -162,3 +162,98 @@ class TestServingEquivalence:
         deq = lm._dequant_packed(packed, jnp.float32)
         rel = float(jnp.linalg.norm(deq - w) / jnp.linalg.norm(w))
         assert rel < 0.12
+
+
+class TestMoEPadding:
+    """moe_ffn at sequence lengths that don't divide the routing group:
+    the tail group pads with zero tokens, which must be masked out of
+    routing (no expert-capacity theft) and of the combine (zero output
+    contribution).  Pre-fix this path died on a bare `assert seq % gs == 0`
+    — which `python -O` silently strips, turning the crash into a reshape
+    error or silent corruption."""
+
+    from repro.models import layers as _L
+
+    def _experts(self, d, f, e, seed=0):
+        rng = np.random.default_rng(seed)
+        wg = jnp.asarray(rng.normal(size=(e, d, f)).astype(np.float32) * 0.2)
+        wu = jnp.asarray(rng.normal(size=(e, d, f)).astype(np.float32) * 0.2)
+        wd = jnp.asarray(rng.normal(size=(e, f, d)).astype(np.float32) * 0.2)
+        return wg, wu, wd
+
+    def _dense_mixture(self, x, gate_w, wg, wu, wd, k):
+        """Per-token oracle: top-k softmax-weighted sum of expert MLPs —
+        what capacity routing converges to when nothing is dropped."""
+        probs = jax.nn.softmax(
+            x.astype(jnp.float32) @ gate_w.astype(jnp.float32), axis=-1)
+        gv, gi = jax.lax.top_k(probs, k)
+        gv = gv / jnp.maximum(gv.sum(-1, keepdims=True), 1e-9)
+        y = jnp.zeros_like(x)
+        for j in range(k):
+            sel = gi[..., j]
+            g = jnp.einsum("bsd,bsdf->bsf", x,
+                           wg[sel].astype(x.dtype))
+            u = jnp.einsum("bsd,bsdf->bsf", x,
+                           wu[sel].astype(x.dtype))
+            h = jax.nn.silu(g) * u
+            o = jnp.einsum("bsf,bsfd->bsd", h, wd[sel].astype(x.dtype))
+            y = y + gv[..., j:j + 1] * o
+        return y
+
+    def test_odd_seq_regression(self):
+        """seq=100, group=64 raised AssertionError pre-fix.  With generous
+        capacity the padded run must equal the per-token dense mixture —
+        pads contribute nothing and steal nothing."""
+        d, f, e, k = 16, 32, 4, 2
+        rng = np.random.default_rng(10)
+        x = jnp.asarray(rng.normal(size=(2, 100, d)).astype(np.float32))
+        gate_w = jnp.asarray(rng.normal(size=(d, e)).astype(np.float32))
+        wg, wu, wd = self._experts(d, f, e, seed=11)
+        y = self._L.moe_ffn(x, gate_w, wg, wu, wd, k,
+                            capacity_factor=float(e) / k * 2,
+                            group_size=64)
+        assert y.shape == (2, 100, d)
+        oracle = self._dense_mixture(x, gate_w, wg, wu, wd, k)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(oracle),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_padding_does_not_steal_capacity(self):
+        """Tight capacity, tail group half padding: zero-input pad tokens
+        tie-break their top-1 onto expert 0 — exactly where the tail's real
+        tokens' second choice lands.  In the capacity cumsum, top-1 claims
+        order before top-2 claims, so unmasked pads would take the expert-0
+        slots and drop the real tokens' second expert.  Masked routing must
+        reproduce the full (nothing-dropped) per-token mixture."""
+        d = e = 4
+        f, k, gs, seq = 16, 2, 4, 6         # tail group: 2 real + 2 pads
+        gate_w = jnp.eye(d, dtype=jnp.float32)     # logits = features
+        # group 1: claims balanced 2-per-expert so cap=2 drops nothing;
+        # tail reals: top-1 expert 2, top-2 expert 0 (the pads' tie-break
+        # target); pads: zeros → uniform → top-2 = experts (0, 1)
+        x = jnp.asarray(np.array([
+            [1.0, 0.5, 0.0, 0.0],           # (e0, e1)
+            [0.5, 1.0, 0.0, 0.0],           # (e1, e0)
+            [0.0, 0.0, 1.0, 0.5],           # (e2, e3)
+            [0.0, 0.0, 0.5, 1.0],           # (e3, e2)
+            [0.5, 0.0, 1.0, 0.0],           # (e2, e0)
+            [0.5, 0.0, 1.0, 0.0],           # (e2, e0)
+        ], np.float32))[None]
+        wg, wu, wd = self._experts(d, f, e, seed=13)
+        # cap = ceil(gs·k/e · cf) = 2 slots per expert per group: exactly
+        # the real tokens' demand, zero slack for pads
+        y = self._L.moe_ffn(x, gate_w, wg, wu, wd, k,
+                            capacity_factor=1.0, group_size=gs)
+        oracle = self._dense_mixture(x, gate_w, wg, wu, wd, k)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(oracle),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_divisible_seq_unchanged(self):
+        """The padding path must be a no-op when seq divides the group."""
+        d, f, e, k = 16, 32, 4, 2
+        rng = np.random.default_rng(14)
+        x = jnp.asarray(rng.normal(size=(1, 128, d)).astype(np.float32))
+        gate_w = jnp.asarray(rng.normal(size=(d, e)).astype(np.float32))
+        wg, wu, wd = self._experts(d, f, e, seed=15)
+        y64 = self._L.moe_ffn(x, gate_w, wg, wu, wd, k, 1.25, group_size=64)
+        assert y64.shape == (1, 128, d)
+        assert bool(jnp.isfinite(y64).all())

@@ -272,16 +272,89 @@ class TestModelWiring:
         layer0 = jax.tree.map(lambda a: a, pf["period"][0])
         # self-attention QKV merged into ONE prepared buffer at prepare time
         assert all(k not in layer0 for k in ("wq", "wk", "wv"))
-        for site in ("wqkv", "wo_mlp"):
+        # every prefill-path STaMP linear is prepared: merged QKV, out-proj,
+        # the gate/up pair and the down projection
+        for site in ("wqkv", "wo", "wi_gate", "wi_up", "wo_mlp"):
             assert isinstance(layer0[site], dict) and "iq" in layer0[site]
             assert layer0[site]["iq"].dtype == jnp.int8
         d = 64
         assert layer0["wqkv"]["iq"].shape[-1] == d + 2 * (d // 2)  # q+2kv
-        # non-fused sites untouched
-        assert not isinstance(layer0["wi_gate"], dict)
         # reference-only config: no-op
         assert lm.prepare_fused_weights(
             params, StampConfig(execution="reference")) is params
+
+    def test_prepare_merges_qkv_bias(self):
+        """Satellite: the merged QKV bias concatenates ONCE at prepare time
+        (bqkv), not per layer call — the per-site bias leaves are gone."""
+        import dataclasses as dc
+        lm, KV, cfg, params, _ = self._setup()
+        cfgb = dc.replace(cfg, qkv_bias=True)
+        pb = lm.init_params(jax.random.PRNGKey(1), cfgb)
+        pf = lm.prepare_fused_weights(
+            pb, StampConfig(num_hi_tokens=8, execution="fused"))
+        layer0 = jax.tree.map(lambda a: a, pf["period"][0])
+        assert all(k not in layer0 for k in ("bq", "bk", "bv"))
+        # stacked period leaves: (nper, merged_dim), sliced under lax.scan
+        assert layer0["bqkv"].shape[-1] == cfgb.q_dim + 2 * cfgb.kv_dim
+
+    def test_legacy_merged_tree_keeps_biases(self):
+        """A prepared tree from the previous release (merged 'wqkv' but
+        per-site bias leaves, no 'bqkv') must still apply the QKV biases —
+        the per-call concat fallback, not a silent bias drop."""
+        import dataclasses as dc
+        lm, KV, cfg, params, _ = self._setup()
+        cfgb = dc.replace(cfg, qkv_bias=True)
+        pb = lm.init_params(jax.random.PRNGKey(3), cfgb)
+        # make the biases large enough to dominate the logits
+        pb = jax.tree_util.tree_map_with_path(
+            lambda path, a: jnp.full_like(a, 3.0)
+            if any(getattr(k, "key", None) in ("bq", "bk", "bv")
+                   for k in path) else a, pb)
+        stf = StampConfig(num_hi_tokens=8, execution="fused")
+        pf = lm.prepare_fused_weights(pb, stf)
+
+        def strip_bqkv(tree):
+            if isinstance(tree, dict):
+                out = {}
+                for k, v in tree.items():
+                    if k == "bqkv":
+                        continue
+                    out[k] = strip_bqkv(v)
+                if "bqkv" in tree:      # legacy shape: per-site leaves
+                    q, kv = cfgb.q_dim, cfgb.kv_dim
+                    out["bq"] = tree["bqkv"][..., :q]
+                    out["bk"] = tree["bqkv"][..., q:q + kv]
+                    out["bv"] = tree["bqkv"][..., q + kv:]
+                return out
+            if isinstance(tree, tuple):
+                return tuple(strip_bqkv(t) for t in tree)
+            return tree
+
+        legacy = strip_bqkv(pf)
+        toks = jnp.asarray(np.random.default_rng(4).integers(0, 128, (1, 32)),
+                           jnp.int32)
+        serve = lm.ServeConfig(stamp=stf,
+                               kv=KV.KVCacheConfig(quantized=False),
+                               cache_capacity=48)
+        l_new, _ = lm.prefill(pf, {"tokens": toks}, cfg, serve)
+        l_legacy, _ = lm.prefill(legacy, {"tokens": toks}, cfg, serve)
+        np.testing.assert_allclose(np.asarray(l_legacy), np.asarray(l_new),
+                                   atol=1e-4)
+
+    def test_prepare_pair_matches_separate(self):
+        """The stacked gate/up prepare is identical to two separate
+        prepares (per-output-channel scales)."""
+        lm, KV, cfg, params, _ = self._setup()
+        st = StampConfig(num_hi_tokens=8, execution="fused")
+        pf = lm.prepare_fused_weights(params, st)
+        layer0 = jax.tree.map(lambda a: a, pf["period"][0])
+        for key in ("wi_gate", "wi_up"):
+            sep = prepare_linear(params["period"][0][key],
+                                 bits=st.fused_weight_bits)
+            np.testing.assert_array_equal(np.asarray(layer0[key]["iq"]),
+                                          np.asarray(sep.qw))
+            np.testing.assert_allclose(np.asarray(layer0[key]["isw"]),
+                                       np.asarray(sep.sw), rtol=1e-6)
 
     def test_prefill_fused_tracks_bf16_like_reference(self):
         """Chaotic 4-bit code flips keep untrained-model logits from matching
@@ -337,3 +410,279 @@ class TestModelWiring:
         assert len(done) == 2
         for r in done:
             assert r.out_tokens.shape == (4,)
+
+
+class TestDualKernel:
+    """Dual-output gate/up kernel (interpret mode) vs the shared-quantize
+    oracle, mirroring the single-kernel edge cases: odd sequence lengths,
+    num_hi ≥ seq, skip_first_token off."""
+
+    CASES = [
+        # transform, s, k, n, num_hi, skip_first
+        ("dwt", 128, 64, 96, 32, True),
+        ("dwt", 100, 48, 64, 16, True),    # odd (non-pow2) sequence length
+        ("wht", 60, 32, 48, 8, True),      # identity-tail WHT
+        ("dwt", 48, 32, 64, 128, True),    # num_hi ≥ seq_len
+        ("none", 64, 32, 32, 16, True),
+        ("dwt", 64, 32, 32, 16, False),    # no first-token exception
+    ]
+
+    def _weights(self, k, n, seed):
+        qg, sg, zg, _ = make_int8_weight(k, n, seed=seed)
+        qu, su, zu, _ = make_int8_weight(k, n, seed=seed + 1)
+        return (qg, sg, zg), (qu, su, zu)
+
+    @pytest.mark.parametrize("transform,s,k,n,num_hi,skip_first", CASES)
+    def test_silu_mul_matches_ref(self, transform, s, k, n, num_hi,
+                                  skip_first):
+        x = rand((2, s, k), seed=40)
+        (qg, sg, zg), (qu, su, zu) = self._weights(k, n, seed=41)
+        kw = dict(transform=transform, levels=3, skip_first=skip_first,
+                  num_hi=num_hi)
+        y = ops.stamp_quant_dual_matmul(x, qg, sg, zg, qu, su, zu,
+                                        out_dtype=jnp.float32,
+                                        interpret=True, **kw)
+        yr = ref.stamp_quant_dual_matmul_ref(x, qg, sg, zg, qu, su, zu, **kw)
+        assert rel_err(y, yr) < 1e-3
+
+    @pytest.mark.parametrize("transform", ["dwt", "wht"])
+    def test_no_epilogue_matches_two_singles(self, transform):
+        """epilogue='none': each output must equal the single-output kernel
+        on the same weights — sharing the scratch-resident quantize across
+        the two GEMMs changes nothing."""
+        s, k, n = 128, 64, 512      # n > block_n: scratch reuse across blocks
+        x = rand((1, s, k), seed=42)
+        (qg, sg, zg), (qu, su, zu) = self._weights(k, n, seed=43)
+        kw = dict(transform=transform, levels=3, skip_first=True, num_hi=16,
+                  out_dtype=jnp.float32, interpret=True)
+        g, u = ops.stamp_quant_dual_matmul(x, qg, sg, zg, qu, su, zu,
+                                           epilogue="none", **kw)
+        g1 = ops.stamp_quant_matmul(x, qg, sg, zg, **kw)
+        u1 = ops.stamp_quant_matmul(x, qu, su, zu, **kw)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(g1), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(u), np.asarray(u1), atol=1e-5)
+
+    def test_dual_bias_applies_before_silu(self):
+        """Gate bias must land inside the silu argument (reference order:
+        silu(x·Wg + bg) · (x·Wu + bu))."""
+        s, k, n = 64, 32, 32
+        x = rand((1, s, k), seed=44)
+        (qg, sg, zg), (qu, su, zu) = self._weights(k, n, seed=45)
+        bg, bu = rand((n,), seed=46), rand((n,), seed=47)
+        kw = dict(transform="dwt", levels=3, skip_first=True, num_hi=16)
+        y = ops.stamp_quant_dual_matmul(x, qg, sg, zg, qu, su, zu, bg, bu,
+                                        out_dtype=jnp.float32,
+                                        interpret=True, **kw)
+        yr = ref.stamp_quant_dual_matmul_ref(x, qg, sg, zg, qu, su, zu,
+                                             bg, bu, **kw)
+        assert rel_err(y, yr) < 1e-3
+
+
+class TestOutProjKernel:
+    """Head-merge-fused out-proj: the kernel consumes the raw (b, s, nh, hd)
+    attention output and must match the merged 3-D call bit-for-bit."""
+
+    @pytest.mark.parametrize("s,nh,hd,num_hi,skip_first", [
+        (128, 4, 16, 32, True),
+        (100, 4, 12, 16, True),      # odd sequence length
+        (48, 2, 16, 128, True),      # num_hi ≥ seq_len
+        (64, 4, 16, 16, False),
+    ])
+    def test_headsplit_matches_merged(self, s, nh, hd, num_hi, skip_first):
+        b, n = 2, 64
+        x4 = rand((b, s, nh, hd), seed=50)
+        qw, sw, zw, _ = make_int8_weight(nh * hd, n, seed=51)
+        kw = dict(transform="dwt", levels=3, skip_first=skip_first,
+                  num_hi=num_hi, out_dtype=jnp.float32, interpret=True)
+        y4 = ops.stamp_quant_matmul(x4, qw, sw, zw, **kw)
+        y3 = ops.stamp_quant_matmul(x4.reshape(b, s, nh * hd), qw, sw, zw,
+                                    **kw)
+        np.testing.assert_array_equal(np.asarray(y4), np.asarray(y3))
+
+    def test_merge_heads_reference_fallback(self):
+        """An ineligible config (dct) with merge_heads merges up front and
+        takes the reference path — same result as pre-merged input."""
+        from repro.core.stamp import stamp_linear
+        x4 = rand((1, 64, 4, 8), seed=52)
+        w = rand((32, 16), seed=53, scale=0.05)
+        cfg = StampConfig(seq_transform="dct", execution="fused",
+                          num_hi_tokens=8)
+        assert not fused_eligible(cfg)
+        y4 = stamp_linear(x4, w, None, cfg, merge_heads=True)
+        y3 = stamp_linear(x4.reshape(1, 64, 32), w, None, cfg)
+        np.testing.assert_array_equal(np.asarray(y4), np.asarray(y3))
+
+
+class TestNewSiteParity:
+    """stamp_dual_linear (gate/up) and merge_heads stamp_linear (out-proj):
+    fused vs reference across the same edge-case grid as the QKV/down-proj
+    cases above."""
+
+    CASES = [
+        # transform, s, din, dout, num_hi, skip_first
+        ("dwt", 128, 64, 96, 32, True),
+        ("dwt", 100, 48, 64, 16, True),    # odd sequence length
+        ("wht", 60, 32, 48, 8, True),      # identity-tail WHT
+        ("dwt", 48, 32, 64, 128, True),    # num_hi ≥ seq_len
+        ("dwt", 64, 32, 48, 16, False),    # skip_first_token off
+    ]
+
+    @pytest.mark.parametrize("transform,s,din,dout,num_hi,skip_first", CASES)
+    def test_dual_linear_fused_matches_reference(self, transform, s, din,
+                                                 dout, num_hi, skip_first):
+        from repro.core.stamp import stamp_dual_linear
+        x = rand((2, s, din), seed=60)
+        wg = rand((din, dout), seed=61, scale=0.05)
+        wu = rand((din, dout), seed=62, scale=0.05)
+        cfg = StampConfig(seq_transform=transform, num_hi_tokens=num_hi,
+                          skip_first_token=skip_first)
+        cfg_f = dataclasses.replace(cfg, execution="fused")
+        y_ref = stamp_dual_linear(x, wg, wu, cfg)
+        y_fused = stamp_dual_linear(x, wg, wu, cfg_f)
+        # silu·mul squares the quant noise; same tolerance regime as the
+        # single-linear on-the-fly-weight cases
+        assert rel_err(y_fused, y_ref) < 3e-2
+
+    @pytest.mark.parametrize("transform,s,din,dout,num_hi,skip_first", CASES)
+    def test_out_proj_fused_matches_reference(self, transform, s, din, dout,
+                                              num_hi, skip_first):
+        nh = 4
+        assert din % nh == 0
+        x4 = rand((2, s, nh, din // nh), seed=63)
+        w = rand((din, dout), seed=64, scale=0.05)
+        cfg = StampConfig(seq_transform=transform, num_hi_tokens=num_hi,
+                          skip_first_token=skip_first)
+        cfg_f = dataclasses.replace(cfg, execution="fused")
+        y_ref = stamp_linear(x4, w, None, cfg, merge_heads=True)
+        y_fused = stamp_linear(x4, w, None, cfg_f, merge_heads=True)
+        assert rel_err(y_fused, y_ref) < 1e-2
+
+    def test_dual_linear_prepared_skips_dequant(self, monkeypatch):
+        """Prepared gate/up buffers must never re-materialize bf16 weights
+        per call (mirrors the single-linear guarantee)."""
+        from repro.core.stamp import stamp_dual_linear
+        wg = rand((32, 48), seed=65, scale=0.05)
+        wu = rand((32, 48), seed=66, scale=0.05)
+        cfg = StampConfig(execution="fused", num_hi_tokens=8)
+        pg, pu = prepare_linear(wg), prepare_linear(wu)
+
+        def boom(*a, **k):
+            raise AssertionError("per-call weight re-materialization")
+
+        monkeypatch.setattr(Q.QuantizedWeight, "dequant", boom)
+        monkeypatch.setattr(PreparedLinear, "dequant", boom)
+        monkeypatch.setattr("repro.core.stamp.prepare_linear", boom)
+        y = stamp_dual_linear(rand((1, 64, 32), seed=67), None, None, cfg,
+                              prepared_gate=pg, prepared_up=pu)
+        assert y.shape == (1, 64, 48)
+
+
+class TestNoReferenceRoundTrips:
+    """Acceptance: with execution='fused', a prefill forward of a decoder
+    layer issues NO reference-path stamp round trips for any wired site,
+    and the gate/up pair's transform+quantize runs once (one dual-kernel
+    call), not twice."""
+
+    def _counted(self, monkeypatch):
+        from repro.kernels import ops as kops
+        counts = {"single": 0, "dual": 0}
+        real_single, real_dual = (kops.stamp_quant_matmul,
+                                  kops.stamp_quant_dual_matmul)
+
+        def single(*a, **k):
+            counts["single"] += 1
+            return real_single(*a, **k)
+
+        def dual(*a, **k):
+            counts["dual"] += 1
+            return real_dual(*a, **k)
+
+        monkeypatch.setattr(kops, "stamp_quant_matmul", single)
+        monkeypatch.setattr(kops, "stamp_quant_dual_matmul", dual)
+
+        def boom(*a, **k):
+            raise AssertionError("reference-path STaMP round trip")
+
+        # _maybe_stamp (the reference fake-quant round trip) and the
+        # reference transform inside stamp_linear must never run
+        monkeypatch.setattr("repro.models.lm.stamp_fake_quant", boom)
+        monkeypatch.setattr("repro.core.stamp.apply_seq_transform", boom)
+        return counts
+
+    def test_attn_mlp_layer_all_sites_fused(self, monkeypatch):
+        from repro.models import lm
+        from repro.models.config import ModelConfig
+        from repro.serving import kvcache as KV
+        cfg = ModelConfig(name="count-test", family="dense", num_layers=2,
+                          d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                          vocab_size=128, qkv_bias=True)
+        params = lm.init_params(jax.random.PRNGKey(0), cfg)
+        stf = StampConfig(num_hi_tokens=8, execution="fused")
+        pf = lm.prepare_fused_weights(params, stf)
+        counts = self._counted(monkeypatch)
+        toks = jnp.asarray(np.random.default_rng(1).integers(0, 128, (1, 64)),
+                           jnp.int32)
+        logits, _ = lm.prefill(params=pf, batch={"tokens": toks}, cfg=cfg,
+                               serve=lm.ServeConfig(
+                                   stamp=stf,
+                                   kv=KV.KVCacheConfig(quantized=True,
+                                                       num_hi=16),
+                                   cache_capacity=96))
+        assert bool(jnp.isfinite(logits).all())
+        # the scanned period traces the layer body once: one dual call for
+        # the gate/up pair (NOT two singles), three singles for
+        # wqkv / out-proj / down-proj
+        assert counts["dual"] == 1
+        assert counts["single"] == 3
+
+    def test_mamba_layer_all_sites_fused(self, monkeypatch):
+        from repro.models import lm
+        from repro.models.config import ModelConfig
+        from repro.serving import kvcache as KV
+        cfg = ModelConfig(name="count-mamba", family="ssm", num_layers=2,
+                          d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                          vocab_size=128, ssm_state=16, ssm_head_dim=16)
+        params = lm.init_params(jax.random.PRNGKey(2), cfg)
+        stf = StampConfig(num_hi_tokens=8, execution="fused")
+        pf = lm.prepare_fused_weights(params, stf)
+        counts = self._counted(monkeypatch)
+        toks = jnp.asarray(np.random.default_rng(3).integers(0, 128, (1, 64)),
+                           jnp.int32)
+        logits, _ = lm.prefill(params=pf, batch={"tokens": toks}, cfg=cfg,
+                               serve=lm.ServeConfig(
+                                   stamp=stf,
+                                   kv=KV.KVCacheConfig(quantized=False),
+                                   cache_capacity=96))
+        assert bool(jnp.isfinite(logits).all())
+        # pure-SSM layers have no FFN: the two singles are exactly the
+        # mamba in/out projections
+        assert counts["dual"] == 0
+        assert counts["single"] == 2
+
+
+class TestHybridEngineFused:
+    def test_bucketed_engine_mamba_sites_prepared(self):
+        """The bucketed engine (the one covering SSM stacks) prepares the
+        mamba in/out projections and serves with them end-to-end."""
+        from repro.models import lm
+        from repro.models.config import ModelConfig
+        from repro.serving import kvcache as KV
+        from repro.serving.engine import EngineConfig, ServingEngine
+        cfg = ModelConfig(name="hybrid-eng", family="hybrid", num_layers=2,
+                          d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                          vocab_size=128, attn_period=2, ssm_state=16,
+                          ssm_head_dim=16)
+        params = lm.init_params(jax.random.PRNGKey(0), cfg)
+        serve = lm.ServeConfig(
+            stamp=StampConfig(num_hi_tokens=8, execution="fused"),
+            kv=KV.KVCacheConfig(quantized=True, num_hi=16))
+        eng = ServingEngine(params, cfg, serve,
+                            EngineConfig(max_batch=1, bucket=64, max_seq=96))
+        mamba_layer = next(d for d in eng.params["period"]
+                           if "in_proj" in d)
+        for site in ("in_proj", "out_proj"):
+            assert isinstance(mamba_layer[site], dict)
+            assert "iq" in mamba_layer[site]
+        eng.submit(np.arange(12) % 128, max_new_tokens=3)
+        done = eng.run()
+        assert len(done) == 1 and done[0].out_tokens.shape == (3,)
