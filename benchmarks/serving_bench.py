@@ -1,5 +1,14 @@
-"""Serving benchmark: paged continuous batching vs bucketed lockstep on one
-workload, emitting ``BENCH_serving.json``.
+"""Serving benchmark: paged continuous batching (unified ragged step vs the
+two-call step pair) vs bucketed lockstep on one workload, emitting
+``BENCH_serving.json``.
+
+The paged engine is measured twice: ``step_mode="unified"`` (one ragged
+device program per step — prefill chunks + decode batch together) and
+``step_mode="two_call"`` (the PR-3 prefill-then-decode jit pair).  The
+``device_dispatches_per_step`` column makes the 2 → 1 program win visible
+in the committed trajectory (unified is exactly 1.0 by construction —
+asserted), ``recompiles`` pins the bounded shape-bucketing, and the two
+modes must emit identical tokens (asserted).
 
 Wall-clock rows are CPU interpret-mode numbers (relative, not TPU
 latencies); the HBM bytes/token rows are derived analytically from the two
@@ -98,11 +107,20 @@ def run(smoke: bool = True, seed: int = 0) -> dict:
     prompts = [rng.integers(0, cfg.vocab_size, l) for l in prompt_lens]
 
     def workload(engine):
+        # untimed warmup pass over the same request mix: compiles every
+        # shape variant (prefill buckets / unified n_pf buckets / decode)
+        # so the timed pass measures steady-state serving, not jit time
         for p in prompts:
             engine.submit(p, max_new_tokens=max_new)
-        t0 = time.time()
+        engine.run()
+        for key in engine.stats if hasattr(engine, "stats") else ():
+            if key != "recompiles":
+                engine.stats[key] = 0
+        for p in prompts:
+            engine.submit(p, max_new_tokens=max_new)
+        t0 = time.perf_counter()
         done = engine.run()
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         toks = sum(len(r.out_tokens) for r in done)
         return {
             "requests": len(done),
@@ -134,21 +152,48 @@ def run(smoke: bool = True, seed: int = 0) -> dict:
         cfg, serve_bf16.kv, max_seq, 16, final_lens, paged=False))
     results["bucketed_bf16"] = row
 
-    # paged int4 (64@8b sink) through the continuous-batching engine
+    # paged int4 (64@8b sink) through the continuous-batching engine —
+    # once per step mode, so the unified ragged step's 2 → 1
+    # dispatches-per-step win (and its token parity with the two-call
+    # pair) lands in the committed trajectory
     kv_q = KV.KVCacheConfig(quantized=True, num_hi=16 if smoke else 64)
     serve_q = lm.ServeConfig(stamp=None, kv=kv_q)
     block = 16
-    eng = PagedServingEngine(params, cfg, serve_q,
-                             PagedEngineConfig(max_slots=8,
-                                               prefill_chunk=bucket,
-                                               max_seq=max_seq,
-                                               block_size=block))
-    row, _ = workload(eng)
-    row["preemptions"] = eng.stats["preemptions"]
-    row["scheduler_steps"] = eng.stats["steps"]
-    row["hbm_bytes_per_token"] = int(_cache_bytes_per_token(
-        cfg, kv_q, max_seq, block, final_lens, paged=True))
-    results["paged_int4"] = row
+    paged_tokens = {}
+    for mode, key in (("unified", "paged_int4"),
+                      ("two_call", "paged_int4_two_call")):
+        eng = PagedServingEngine(params, cfg, serve_q,
+                                 PagedEngineConfig(max_slots=8,
+                                                   prefill_chunk=bucket,
+                                                   max_seq=max_seq,
+                                                   block_size=block,
+                                                   step_mode=mode))
+        row, done_p = workload(eng)
+        paged_tokens[mode] = {r.uid: r.out_tokens for r in done_p}
+        row["preemptions"] = eng.stats["preemptions"]
+        row["scheduler_steps"] = eng.stats["steps"]
+        row["device_dispatches_per_step"] = round(
+            eng.stats["device_dispatches"] / max(eng.stats["steps"], 1), 3)
+        row["recompiles"] = eng.stats["recompiles"] if mode == "unified" \
+            else None
+        row["hbm_bytes_per_token"] = int(_cache_bytes_per_token(
+            cfg, kv_q, max_seq, block, final_lens, paged=True))
+        results[key] = row
+    assert results["paged_int4"]["device_dispatches_per_step"] == 1.0, \
+        "unified step must dispatch exactly one device program per step"
+    assert results["paged_int4_two_call"]["device_dispatches_per_step"] > \
+        1.0, "two-call baseline should exceed one dispatch per step"
+    # recorded, not asserted: single-shot wall clocks on a shared CI
+    # runner are too noisy for a hard gate — the trajectory JSON carries
+    # the ratio so a real regression shows up in history (the dispatch
+    # and token-parity asserts above are the deterministic guards)
+    results["unified_vs_two_call_tokens_ratio"] = round(
+        results["paged_int4"]["tokens_per_s"] /
+        max(results["paged_int4_two_call"]["tokens_per_s"], 1e-9), 3)
+    for uid, toks in paged_tokens["two_call"].items():
+        np.testing.assert_array_equal(
+            toks, paged_tokens["unified"][uid],
+            err_msg=f"unified/two_call token divergence uid={uid}")
 
     # same quantized cache through the bucketed engine: isolates the
     # continuous-batching scheduling win from the layout win

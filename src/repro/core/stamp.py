@@ -68,6 +68,42 @@ class StampConfig:
         return Q.average_bits(self.bits_vector(seq_len))
 
 
+# ---------------------------------------------------------------------------
+# segment-aware application (the unified ragged serving step)
+# ---------------------------------------------------------------------------
+#
+# The unified prefill+decode step flattens several requests' tokens into one
+# batch.  STaMP's sequence transform is defined per *sequence span* — mixing
+# tokens of different requests through the DWT/WHT butterflies would be
+# numerically meaningless — so every sequence-axis op on the flattened batch
+# must first fold the span structure back into the batch axis.  With the
+# uniform span padding the scheduler produces (each prefill chunk padded to
+# the same ``seg_len``), that fold is a pure reshape: the transform then
+# runs independently per span exactly as it does for a lone chunk, and the
+# fused kernels see spans as batch grid rows (their transform+quantize
+# scratch is per grid row already, so no kernel change is needed beyond the
+# fold).  Decode spans are single tokens — their "transform" is the
+# identity, which is why the decode path applies no sequence transform.
+
+
+def fold_segments(x: Array, seg_len: int) -> Array:
+    """View a flattened ``(b, n·seg_len, …)`` ragged batch as
+    ``(b·n, seg_len, …)`` so sequence-axis ops (the STaMP transform above
+    all) apply per span and never across the flattened batch."""
+    b, t = x.shape[0], x.shape[1]
+    if t % seg_len:
+        raise ValueError(f"flattened length {t} is not a whole number of "
+                         f"{seg_len}-token segments")
+    return x.reshape(b * (t // seg_len), seg_len, *x.shape[2:])
+
+
+def unfold_segments(y: Array, batch: int) -> Array:
+    """Inverse of :func:`fold_segments`: ``(b·n, seg_len, …)`` back to the
+    flattened ``(b, n·seg_len, …)`` layout."""
+    bn, seg_len = y.shape[0], y.shape[1]
+    return y.reshape(batch, (bn // batch) * seg_len, *y.shape[2:])
+
+
 def apply_seq_transform(x: Array, cfg: StampConfig, axis: int = -2,
                         basis: Optional[Array] = None) -> Array:
     if not cfg.enabled or cfg.seq_transform == "none":
@@ -89,12 +125,22 @@ def invert_seq_transform(y: Array, cfg: StampConfig, axis: int = -2,
 
 
 def stamp_fake_quant(x: Array, cfg: StampConfig, axis: int = -2,
-                     basis: Optional[Array] = None) -> Array:
+                     basis: Optional[Array] = None,
+                     seg_len: Optional[int] = None) -> Array:
     """Full STaMP round trip on an activation: ``L⁻¹ Q(L X)`` — used when a
     consumer needs the activation back in the original domain (e.g. KV-cache
-    values feeding non-linear attention math)."""
+    values feeding non-linear attention math).
+
+    ``seg_len`` marks ``x`` as a flattened ragged batch of uniform
+    ``seg_len``-token spans along axis 1: the round trip applies per span
+    (see :func:`fold_segments`), identical to running each span alone."""
     if not cfg.enabled:
         return x
+    if seg_len is not None and seg_len != x.shape[1]:
+        assert axis in (-2, x.ndim - 2), "segments fold along axis 1"
+        return unfold_segments(
+            stamp_fake_quant(fold_segments(x, seg_len), cfg, axis=-2,
+                             basis=basis), x.shape[0])
     # f32 transform + quant statistics: bf16 butterflies perturb the min/max
     # scales enough to flip 4-bit codes, which would make the reference and
     # fused paths (kernel computes in f32) diverge beyond quant tolerance.
@@ -232,6 +278,7 @@ def stamp_linear(
     feature_rot: Optional[Array] = None,
     prepared: Optional[PreparedLinear] = None,
     merge_heads: bool = False,
+    seg_len: Optional[int] = None,
 ) -> Array:
     """STaMP linear layer (Fig. 2a).
 
@@ -250,7 +297,19 @@ def stamp_linear(
     ``merge_heads`` marks ``x`` as the raw head-split attention output
     ``(..., s, nh, hd)`` (out-proj site): the fused kernel merges the head
     axes on its in-VMEM tile, the fallback paths merge up front.
+
+    ``seg_len`` marks ``x`` as a flattened ragged batch of uniform
+    ``seg_len``-token spans (the unified serving step): the sequence
+    transform and its inverse apply per span — spans fold into the batch
+    axis, so the fused kernel sees them as independent grid rows and the
+    reference path as independent batch rows.
     """
+    if seg_len is not None and x.ndim >= 3 and seg_len != x.shape[1]:
+        y = stamp_linear(fold_segments(x, seg_len), w, b, cfg,
+                         w_quant=w_quant, basis=basis,
+                         feature_rot=feature_rot, prepared=prepared,
+                         merge_heads=merge_heads)
+        return unfold_segments(y, x.shape[0])
     if fused_eligible(cfg, feature_rot) and \
             (w_quant is None or w_quant.bits <= 8):
         prep = prepared
@@ -311,6 +370,7 @@ def stamp_dual_linear(
     prepared_gate: Optional[PreparedLinear] = None,
     prepared_up: Optional[PreparedLinear] = None,
     epilogue: str = "silu_mul",
+    seg_len: Optional[int] = None,
 ):
     """STaMP gate/up pair sharing ONE transform+quantize of ``x``.
 
@@ -324,8 +384,18 @@ def stamp_dual_linear(
 
     ``epilogue="silu_mul"`` returns ``silu(gate)·up`` (the SwiGLU front
     half, combined in the original token domain); ``"none"`` the tuple.
+    ``seg_len``: flattened uniform-span ragged batch, transformed per span
+    (see :func:`stamp_linear`).
     """
     assert epilogue in ("silu_mul", "none"), epilogue
+    if seg_len is not None and seg_len != x.shape[1]:
+        y = stamp_dual_linear(fold_segments(x, seg_len), w_gate, w_up, cfg,
+                              b_gate=b_gate, b_up=b_up, basis=basis,
+                              prepared_gate=prepared_gate,
+                              prepared_up=prepared_up, epilogue=epilogue)
+        if epilogue == "silu_mul":
+            return unfold_segments(y, x.shape[0])
+        return tuple(unfold_segments(o, x.shape[0]) for o in y)
     if fused_eligible(cfg):
         prep_g = prepared_gate if prepared_gate is not None else \
             prepare_linear(w_gate, b_gate, bits=cfg.fused_weight_bits)

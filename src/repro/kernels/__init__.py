@@ -48,6 +48,36 @@ Every prefill-path model linear is wired through the fused family
   ``epilogue="none"`` both projections are written (two outputs), still
   off the single shared quantize.
 
+The unified ragged serving step
+-------------------------------
+The paged engine dispatches ONE device program per step
+(`repro.models.lm.paged_unified_step`): up to ``max_prefills`` prefill
+chunk spans plus the decode slot array form a flattened token batch with
+per-span ``(query_start, query_len)`` metadata from the scheduler.  Three
+rules keep the kernels correct inside that program:
+
+* **STaMP segment rule** — the sequence transform applies per sequence
+  span, never across the flattened batch.  Spans are uniform (chunks pad
+  to ``C`` tokens), so the unified step builds the prefill region
+  **span-major** — ``(n_pf, C, d)``, one batch row per span — and the
+  fused kernels see each span as its own grid row (whose
+  transform+quantize scratch is already private).  Callers that do hold
+  a flattened ``(b, n·C, d)`` carrier get the same rule through
+  `repro.core.stamp.fold_segments` / the ``seg_len`` parameter on the
+  stamp linears, and at the kernel level through
+  `stamp_matmul.stamp_quant_segment_matmul_pallas`.  Decode spans are
+  single tokens — their transform is the identity, which is why the
+  decode region applies none.
+* **Ragged attention grid** — `paged_attention.paged_ragged_attention`
+  walks query spans: decode spans take the existing online-softmax path,
+  prefill spans add causal masking within the chunk against their own
+  block-table prefix (one mask rule, ``kv_pos <= q_pos AND kv_pos <
+  length``).  See the paged layout section below.
+* **Decode-matmul dispatch by shape** — both regions share one trace, so
+  the single-token integer matmul (below) keys on the token dim being 1:
+  decode sub-tensors ``(S, 1, d)`` take it, chunk rows ``(n_pf, C>1, d)``
+  cannot, and the all-decode step (n_pf = 0) IS the old decode graph.
+
 Decode-shaped execution
 -----------------------
 Decode has no sequence axis, so its two kernels drop the transform and keep
@@ -94,4 +124,7 @@ from repro.kernels.ops import (  # noqa: F401
     walsh_hadamard,
 )
 from repro.kernels.cache_attention import cache_decode_attention  # noqa: F401
-from repro.kernels.paged_attention import paged_decode_attention  # noqa: F401
+from repro.kernels.paged_attention import (  # noqa: F401
+    paged_decode_attention,
+    paged_ragged_attention,
+)

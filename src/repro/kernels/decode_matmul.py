@@ -20,6 +20,14 @@ Grid: ``(N / block_n,)``.  The (B, K) token batch is VMEM-resident across
 all output blocks; quantization runs once (first grid step) into scratch.
 HBM per step: B·K activation + K·N **int8** weight + B·N output — vs the
 dequant path's extra K·N bf16 write + read every call.
+
+Place in the unified ragged step: the single compiled step program
+contains both regions, and `_linear`'s token-dim shape guard routes only
+the decode sub-tensors ``(S, 1, d)`` here — chunk rows (C > 1) never
+match, so the sequence transform can't be skipped on prefill work.  The
+all-decode steady-state step (n_pf = 0) delegates to the plain decode
+graph, where this kernel serves every prepared-weight linear exactly as
+it did for the two-call engine.
 """
 
 from __future__ import annotations

@@ -27,6 +27,27 @@ step fetches only the page its branch consumes and HBM traffic per layer
 step is proportional to **allocated pages** (0.52 B/value average at the
 64@8b + int4 setting), not to the engine-wide ``max_seq`` reservation the
 contiguous layout streams.
+
+**Ragged variant** (`paged_ragged_attention`) — the unified serving step
+runs prefill chunks and the decode batch as ONE program, so the grid walks
+*query spans* instead of slots: span i < n_pf is a prefill chunk (query
+tile ``(C·rep, hd)``, per-row global positions ``start + row``), span
+i ≥ n_pf a decode slot (the existing ``(rep, hd)`` tile).  One mask rule
+covers both: ``kv_pos <= q_pos AND kv_pos < length`` — for the 1-token
+decode span (``q_pos = length−1``) it reduces to the old ``kv_pos <
+length``; for a chunk span it is causal masking within the chunk against
+the span's own block-table prefix.  The page walk, in-VMEM dequant and
+online-softmax merge are shared with the decode kernel.  The inactive
+span type's query/output blocks clamp their index maps to a fully
+constant block — span axis AND kv-head axis (outputs need both: a
+cycling j would flush the stale VMEM buffer over already-written HBM
+blocks; see the spec comment in `paged_ragged_attention`) — so the
+inactive phase keeps one resident block whose eventual flush is
+harmless.  Note the numerics choice: a chunk span
+attends to its own tokens through the **just-written quantized pages**
+(one layout, no raw re-read), where the XLA fallback attends to the raw
+bf16 chunk — kernel-vs-oracle tests pin the kernel against its own
+quantized-self reference.
 """
 
 from __future__ import annotations
@@ -40,6 +61,24 @@ from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 
+def _dequant_hi_page(qref, sref, zref):
+    codes = qref[0, :, 0].astype(jnp.float32)              # (bs, hd)
+    s = sref[0, :, 0].astype(jnp.float32)[:, None]
+    z = zref[0, :, 0].astype(jnp.float32)[:, None]
+    return (codes - z) * s
+
+
+def _dequant_lo_page(qref, sref, zref, hd: int):
+    packed = qref[0, :, 0]                                 # (bs, hd/2)
+    hi_nib = (packed >> 4).astype(jnp.float32)
+    lo_nib = (packed & 0xF).astype(jnp.float32)
+    vals = jnp.stack([hi_nib, lo_nib], axis=-1).reshape(
+        packed.shape[0], hd)
+    s = sref[0, :, 0].astype(jnp.float32)[:, None]
+    z = zref[0, :, 0].astype(jnp.float32)[:, None]
+    return (vals - z) * s
+
+
 def _kernel(ht_ref, lt_ref, len_ref, q_ref,
             khi_ref, vhi_ref, kshi_ref, kzhi_ref, vshi_ref, vzhi_ref,
             klo_ref, vlo_ref, kslo_ref, kzlo_ref, vslo_ref, vzlo_ref,
@@ -51,20 +90,10 @@ def _kernel(ht_ref, lt_ref, len_ref, q_ref,
     length = len_ref[slot]
 
     def dequant_hi(qref, sref, zref):
-        codes = qref[0, :, 0].astype(jnp.float32)          # (bs, hd)
-        s = sref[0, :, 0].astype(jnp.float32)[:, None]
-        z = zref[0, :, 0].astype(jnp.float32)[:, None]
-        return (codes - z) * s
+        return _dequant_hi_page(qref, sref, zref)
 
     def dequant_lo(qref, sref, zref):
-        packed = qref[0, :, 0]                             # (bs, hd/2)
-        hi_nib = (packed >> 4).astype(jnp.float32)
-        lo_nib = (packed & 0xF).astype(jnp.float32)
-        vals = jnp.stack([hi_nib, lo_nib], axis=-1).reshape(
-            packed.shape[0], hd)
-        s = sref[0, :, 0].astype(jnp.float32)[:, None]
-        z = zref[0, :, 0].astype(jnp.float32)[:, None]
-        return (vals - z) * s
+        return _dequant_lo_page(qref, sref, zref, hd)
 
     def block_stats(k_pg, v_pg, pos):
         s_blk = q @ k_pg.T                                 # (rep, bs)
@@ -195,3 +224,229 @@ def paged_decode_attention(entry: dict, q: jax.Array, lengths: jax.Array,
     o = stats[..., 2:]
     out = o / jnp.maximum(l, 1e-30)[..., None]
     return out.reshape(s_slots, 1, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# ragged variant: one grid walks prefill-chunk spans AND decode spans
+# ---------------------------------------------------------------------------
+
+
+def _merge_block(o_ref, blk, q, k_pg, v_pg, mask):
+    """Masked block scores + online-softmax merge into the revisited output
+    ref.  ``q``: (rows, hd) — rows is ``rep`` for a decode span and
+    ``C·rep`` for a prefill span; ``mask``: (rows, bs)."""
+    hd = q.shape[-1]
+    s_blk = q @ k_pg.T                                     # (rows, bs)
+    s_blk = jnp.where(mask, s_blk, -1e30)
+    m_blk = jnp.max(s_blk, axis=-1)
+    p_blk = jnp.exp(s_blk - m_blk[:, None])
+    l_blk = jnp.sum(p_blk, axis=-1)
+    o_blk = p_blk @ v_pg                                   # (rows, hd)
+
+    @pl.when(blk == 0)
+    def _init():
+        neg = jnp.full((q.shape[0], 1), -1e30, jnp.float32)
+        o_ref[0, 0] = jnp.concatenate(
+            [neg, jnp.zeros((q.shape[0], hd + 1), jnp.float32)], axis=-1
+        ).astype(o_ref.dtype)
+
+    prev = o_ref[0, 0].astype(jnp.float32)
+    m_prev, l_prev, o_prev = prev[:, 0], prev[:, 1], prev[:, 2:]
+    m_new = jnp.maximum(m_prev, m_blk)
+    c_prev = jnp.exp(m_prev - m_new)
+    c_blk = jnp.exp(m_blk - m_new)
+    l_new = l_prev * c_prev + l_blk * c_blk
+    o_new = o_prev * c_prev[:, None] + o_blk * c_blk[:, None]
+    o_ref[0, 0] = jnp.concatenate(
+        [m_new[:, None], l_new[:, None], o_new], axis=-1
+    ).astype(o_ref.dtype)
+
+
+def _ragged_kernel(ht_ref, lt_ref, len_ref, qs_ref, q_pf_ref, q_dec_ref,
+                   khi_ref, vhi_ref, kshi_ref, kzhi_ref, vshi_ref, vzhi_ref,
+                   klo_ref, vlo_ref, kslo_ref, kzlo_ref, vslo_ref, vzlo_ref,
+                   o_pf_ref, o_dec_ref, *, n_pf: int, rep: int, nh: int,
+                   block_s: int, num_hi: int, scale: float):
+    span = pl.program_id(0)
+    blk = pl.program_id(2)
+    length = len_ref[span]
+    qstart = qs_ref[span]
+    hd = q_dec_ref.shape[-1]
+
+    def process(k_pg, v_pg, pos):
+        in_len = pos < length                              # (bs,)
+
+        @pl.when(span < n_pf)
+        def _prefill_span():
+            # chunk span: every query row has its own global position
+            # qstart + row; causal within the chunk falls out of the same
+            # rule that admits the block-table prefix (kv_pos <= q_pos)
+            q = q_pf_ref[0, 0].astype(jnp.float32) * scale  # (C·rep, hd)
+            row = jax.lax.broadcasted_iota(jnp.int32, (q.shape[0], 1), 0)
+            qpos = qstart + row // rep                      # (C·rep, 1)
+            mask = (pos[None, :] <= qpos) & in_len[None, :]
+            _merge_block(o_pf_ref, blk, q, k_pg, v_pg, mask)
+
+        @pl.when(span >= n_pf)
+        def _decode_span():
+            # 1-token span: the existing online-softmax decode path
+            q = q_dec_ref[0, 0].astype(jnp.float32) * scale  # (rep, hd)
+            mask = jnp.broadcast_to(in_len[None, :], (q.shape[0], block_s))
+            _merge_block(o_dec_ref, blk, q, k_pg, v_pg, mask)
+
+    @pl.when(blk < nh)
+    def _hi_page():
+        pos = blk * block_s + jnp.arange(block_s)
+        process(_dequant_hi_page(khi_ref, kshi_ref, kzhi_ref),
+                _dequant_hi_page(vhi_ref, vshi_ref, vzhi_ref), pos)
+
+    @pl.when(blk >= nh)
+    def _lo_page():
+        pos = num_hi + (blk - nh) * block_s + jnp.arange(block_s)
+        process(_dequant_lo_page(klo_ref, kslo_ref, kzlo_ref, hd),
+                _dequant_lo_page(vlo_ref, vslo_ref, vzlo_ref, hd), pos)
+
+
+def paged_ragged_attention(entry: dict, q_pf: jax.Array, q_dec: jax.Array,
+                           q_starts: jax.Array, lengths: jax.Array,
+                           hi_table: jax.Array, lo_table: jax.Array,
+                           block_size: int,
+                           interpret: bool | None = None) -> tuple:
+    """Fused attention for one **unified ragged step**: ``n_pf`` prefill
+    chunk spans followed by ``S`` decode spans share one grid, one
+    scalar-prefetched table walk and one online-softmax structure.
+
+    ``q_pf``: (n_pf, C, h, hd) — chunk queries, row padded to C;
+    ``q_dec``: (S, 1, h, hd) — one query per decode slot;
+    ``q_starts``: (n_pf+S,) int32 — global position of each span's first
+    query row (decode spans: ``length-1``, informational);
+    ``lengths``: (n_pf+S,) int32 — tokens materialized for the span's
+    request *including this step's writes* (prefill: ``start + valid``);
+    ``hi_table``/``lo_table``: (n_pf+S, ·) — span-ordered block tables.
+
+    Grid ``(n_pf+S, G, NH+NL)``: per span the page fetch and dequant are
+    the decode kernel's; the span type only changes the query tile and the
+    mask, ``kv_pos <= q_pos  AND  kv_pos < length`` — for a decode span
+    (``q_pos = length-1``) that reduces to the old ``kv_pos < length``,
+    for a prefill span it is causal masking within the chunk against the
+    request's own block-table prefix.  Prefill spans attend to their own
+    chunk **through the just-written quantized pages** (the XLA fallback
+    attends to the raw bf16 chunk instead — the kernel path trades that
+    exactness for never re-reading the raw chunk; see the module notes).
+    Pad query rows (beyond a chunk's valid length) attend to the full
+    prefix and are discarded by the caller.
+
+    Returns ``(out_pf (n_pf, C, h, hd), out_dec (S, 1, h, hd))``.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n_pf, c_len, h, hd = q_pf.shape
+    s_slots = q_dec.shape[0]
+    assert s_slots >= 1, "the unified step always carries the decode slots"
+    if n_pf == 0:
+        out_dec = paged_decode_attention(entry, q_dec, lengths, hi_table,
+                                         lo_table, block_size,
+                                         interpret=interpret)
+        return q_pf, out_dec
+    g = entry["k_lo"].shape[2]
+    rep = h // g
+    bs = block_size
+    nh = hi_table.shape[1]
+    nl = lo_table.shape[1]
+    num_hi = nh * bs
+    n_spans = n_pf + s_slots
+    if nh == 0:
+        hi_table = jnp.zeros((n_spans, 1), jnp.int32)
+    scale = float(1.0 / np.sqrt(hd))
+    qg_pf = q_pf.reshape(n_pf, c_len, g, rep, hd).transpose(
+        0, 2, 1, 3, 4).reshape(n_pf, g, c_len * rep, hd)
+    qg_dec = q_dec.reshape(s_slots, h, hd).reshape(s_slots, g, rep, hd)
+
+    def hi_idx(i, k, ht):
+        return ht[i, jnp.clip(k, 0, max(nh - 1, 0))]
+
+    def lo_idx(i, k, lt):
+        return lt[i, jnp.clip(k - nh, 0, nl - 1)]
+
+    hi_spec = pl.BlockSpec((1, bs, 1, hd),
+                           lambda i, j, k, ht, lt, ln, qs:
+                           (hi_idx(i, k, ht), 0, j, 0))
+    lo_spec = pl.BlockSpec((1, bs, 1, hd // 2),
+                           lambda i, j, k, ht, lt, ln, qs:
+                           (lo_idx(i, k, lt), 0, j, 0))
+    shi_spec = pl.BlockSpec((1, bs, 1),
+                            lambda i, j, k, ht, lt, ln, qs:
+                            (hi_idx(i, k, ht), 0, j))
+    slo_spec = pl.BlockSpec((1, bs, 1),
+                            lambda i, j, k, ht, lt, ln, qs:
+                            (lo_idx(i, k, lt), 0, j))
+    # The span type selects which query tile / output the kernel touches;
+    # the inactive operand's index map CLAMPS to a fully CONSTANT block —
+    # on BOTH axes.  Clamping only the span axis (the hi/lo page-spec
+    # precedent) is not enough for outputs: the kv-head axis j still
+    # cycles during the other span type's steps, and every index change
+    # flushes the (unwritten, stale) VMEM buffer over an already-written
+    # HBM block.  Pinning j as well means the inactive phase holds exactly
+    # one resident block — the last one its own phase wrote (o_pf) or the
+    # first one it is about to write (o_dec) — so the extra flush rewrites
+    # correct data (o_pf) or bytes the active phase overwrites before any
+    # read (o_dec).  Queries get the same pin purely to avoid redundant
+    # fetches.
+    def pf_idx(i, j):
+        return jnp.minimum(i, n_pf - 1), jnp.where(i < n_pf, j, g - 1)
+
+    def dec_idx(i, j):
+        return (jnp.clip(i - n_pf, 0, s_slots - 1),
+                jnp.where(i >= n_pf, j, 0))
+
+    qpf_spec = pl.BlockSpec((1, 1, c_len * rep, hd),
+                            lambda i, j, k, ht, lt, ln, qs:
+                            (*pf_idx(i, j), 0, 0))
+    qdec_spec = pl.BlockSpec((1, 1, rep, hd),
+                             lambda i, j, k, ht, lt, ln, qs:
+                             (*dec_idx(i, j), 0, 0))
+    opf_spec = pl.BlockSpec((1, 1, c_len * rep, hd + 2),
+                            lambda i, j, k, ht, lt, ln, qs:
+                            (*pf_idx(i, j), 0, 0))
+    odec_spec = pl.BlockSpec((1, 1, rep, hd + 2),
+                             lambda i, j, k, ht, lt, ln, qs:
+                             (*dec_idx(i, j), 0, 0))
+
+    kernel = functools.partial(_ragged_kernel, n_pf=n_pf, rep=rep, nh=nh,
+                               block_s=bs, num_hi=num_hi, scale=scale)
+    stats_pf, stats_dec = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=(n_spans, g, nh + nl),
+            in_specs=[
+                qpf_spec, qdec_spec,
+                hi_spec, hi_spec, shi_spec, shi_spec, shi_spec, shi_spec,
+                lo_spec, lo_spec, slo_spec, slo_spec, slo_spec, slo_spec,
+            ],
+            out_specs=(opf_spec, odec_spec),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((n_pf, g, c_len * rep, hd + 2),
+                                 jnp.float32),
+            jax.ShapeDtypeStruct((s_slots, g, rep, hd + 2), jnp.float32),
+        ),
+        interpret=interpret,
+    )(hi_table, lo_table, lengths, q_starts, qg_pf, qg_dec,
+      entry["k_hi"], entry["v_hi"],
+      entry["k_hi_scale"], entry["k_hi_zp"],
+      entry["v_hi_scale"], entry["v_hi_zp"],
+      entry["k_lo"], entry["v_lo"],
+      entry["k_lo_scale"], entry["k_lo_zp"],
+      entry["v_lo_scale"], entry["v_lo_zp"])
+
+    def finalize(stats):
+        l = stats[..., 1]
+        o = stats[..., 2:]
+        return o / jnp.maximum(l, 1e-30)[..., None]
+
+    out_pf = finalize(stats_pf).reshape(n_pf, g, c_len, rep, hd).transpose(
+        0, 2, 1, 3, 4).reshape(n_pf, c_len, h, hd).astype(q_pf.dtype)
+    out_dec = finalize(stats_dec).reshape(
+        s_slots, 1, h, hd).astype(q_dec.dtype)
+    return out_pf, out_dec

@@ -100,6 +100,70 @@ def paged_attention_ref(entry, q, lengths, hi_table, lo_table, block_size,
                                      length=lengths)
 
 
+def paged_ragged_attention_ref(entry, q_pf, q_dec, q_starts, lengths,
+                               hi_table, lo_table):
+    """Dense oracle for `paged_ragged_attention`: densify each span's mapped
+    pages and compute a direct (non-online) masked softmax per query row
+    with the unified rule ``kv_pos <= q_pos AND kv_pos < length``."""
+    from repro.serving import kvcache as KV
+
+    n_pf, c_len, h, hd = q_pf.shape
+    s_slots = q_dec.shape[0]
+    g = entry["k_lo"].shape[2]
+    rep = h // g
+
+    def dense(codes, table):
+        gathered = codes[table]
+        return gathered.reshape(gathered.shape[0],
+                                gathered.shape[1] * gathered.shape[2],
+                                *gathered.shape[3:])
+
+    def span_kv(table_row_hi, table_row_lo):
+        pair = []
+        for name in ("k", "v"):
+            parts = []
+            for region, row in (("hi", table_row_hi), ("lo", table_row_lo)):
+                if row.shape[0] == 0:
+                    continue
+                codes = dense(entry[f"{name}_{region}"], row[None])
+                sc = dense(entry[f"{name}_{region}_scale"], row[None])
+                zp = dense(entry[f"{name}_{region}_zp"], row[None])
+                vals = codes.astype(jnp.float32) if region == "hi" \
+                    else KV.unpack_nibbles(codes)
+                parts.append(KV.dequant_tokens(vals, sc, zp, jnp.float32)[0])
+            pair.append(jnp.concatenate(parts, axis=0))    # (n_tok, g, hd)
+        return pair
+
+    def attend(q_rows, qpos, kd, vd, length):              # q_rows (r, g, hd)
+        kv_pos = jnp.arange(kd.shape[0])
+        scale = 1.0 / np.sqrt(hd)
+        qg = q_rows.reshape(-1, g, rep, hd).astype(jnp.float32) * scale
+        sc = jnp.einsum("rgpd,sgd->rgps", qg, kd.astype(jnp.float32))
+        mask = (kv_pos[None, :] <= qpos[:, None]) & \
+            (kv_pos[None, :] < length)
+        sc = jnp.where(mask[:, None, None], sc, -1e30)
+        m = jnp.max(sc, axis=-1, keepdims=True)
+        p = jnp.exp(sc - m)
+        o = jnp.einsum("rgps,sgd->rgpd", p, vd.astype(jnp.float32))
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        return (o / jnp.maximum(l, 1e-30)).reshape(-1, h, hd)
+
+    outs_pf = []
+    for i in range(n_pf):
+        kd, vd = span_kv(hi_table[i], lo_table[i])
+        qpos = q_starts[i] + jnp.arange(c_len)
+        outs_pf.append(attend(q_pf[i], qpos, kd, vd, lengths[i]))
+    outs_dec = []
+    for j in range(s_slots):
+        i = n_pf + j
+        kd, vd = span_kv(hi_table[i], lo_table[i])
+        qpos = jnp.asarray([lengths[i] - 1])
+        outs_dec.append(attend(q_dec[j], qpos, kd, vd, lengths[i]))
+    out_pf = jnp.stack(outs_pf) if outs_pf else \
+        jnp.zeros((0, c_len, h, hd), jnp.float32)
+    return out_pf, jnp.stack(outs_dec)                     # (S, 1, h, hd)
+
+
 def stamp_quant_matmul_ref(x, qw, sw, zw, bias=None, *, transform="dwt",
                            levels=3, skip_first=True, num_hi=64, hi_bits=8,
                            lo_bits=4, out_dtype=jnp.float32):

@@ -321,3 +321,31 @@ def stamp_quant_dual_matmul_pallas(
         interpret=interpret,
     )(x, qw_g, sw_g, zw_g, bias_g, qw_u, sw_u, zw_u, bias_u)
     return out
+
+
+def stamp_quant_segment_matmul_pallas(
+    x: jax.Array,            # (b, n_seg·seg_len, K) flattened uniform spans
+    qw: jax.Array,
+    sw: jax.Array,
+    zw: jax.Array,
+    bias: jax.Array,
+    *,
+    seg_len: int,
+    **kwargs,
+) -> jax.Array:
+    """Segment-aware fused STaMP linear for the unified ragged serving step.
+
+    ``x`` is a flattened batch of uniform ``seg_len``-token sequence spans
+    (several requests' prefill chunks concatenated along axis 1).  The
+    sequence transform must run **per span, never across the flattened
+    batch** — so spans fold into the kernel's batch grid axis (each grid
+    row's transform+quantize scratch is private), and the output unfolds
+    back to the flattened layout.  Identical math to calling
+    `stamp_quant_matmul_pallas` once per span."""
+    b, t = x.shape[0], x.shape[1]
+    if t % seg_len:
+        raise ValueError(f"flattened length {t} is not a whole number of "
+                         f"{seg_len}-token segments")
+    xf = x.reshape(b * (t // seg_len), seg_len, *x.shape[2:])
+    y = stamp_quant_matmul_pallas(xf, qw, sw, zw, bias, **kwargs)
+    return y.reshape(b, t, y.shape[-1])

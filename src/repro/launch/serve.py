@@ -50,7 +50,14 @@ def main():
     ap.add_argument("--block-size", type=int, default=16,
                     help="tokens per cache page (paged engine)")
     ap.add_argument("--prefill-chunk", type=int, default=128,
-                    help="prompt tokens prefilled per engine step (paged)")
+                    help="prompt tokens per prefill chunk row (paged)")
+    ap.add_argument("--step-mode", choices=("unified", "two_call"),
+                    default="unified",
+                    help="unified = ONE ragged device program per step "
+                         "(prefill chunks + decode batch); two_call = the "
+                         "old prefill-then-decode jit pair (parity/A-B)")
+    ap.add_argument("--max-prefills", type=int, default=2,
+                    help="prefill chunk rows per unified step")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -84,7 +91,9 @@ def main():
         engine = PagedServingEngine(
             sparams, cfg, serve,
             PagedEngineConfig(max_slots=8, prefill_chunk=args.prefill_chunk,
-                              max_seq=max_seq, block_size=bs))
+                              max_seq=max_seq, block_size=bs,
+                              step_mode=args.step_mode,
+                              max_prefills=args.max_prefills))
     else:
         engine = BucketedEngine(sparams, cfg, serve,
                                 EngineConfig(max_batch=8, bucket=128,
@@ -102,9 +111,13 @@ def main():
           f"in {dt:.2f}s ({total_new / dt:.1f} tok/s on CPU), "
           f"ttft p50={ttfts[len(ttfts) // 2]:.2f}s")
     if args.engine == "paged":
-        print(f"[serve:paged] steps={engine.stats['steps']} "
-              f"prefill_chunks={engine.stats['prefill_chunks']} "
-              f"preemptions={engine.stats['preemptions']}")
+        st = engine.stats
+        print(f"[serve:paged:{args.step_mode}] steps={st['steps']} "
+              f"prefill_chunks={st['prefill_chunks']} "
+              f"preemptions={st['preemptions']} "
+              f"dispatches/step="
+              f"{st['device_dispatches'] / max(st['steps'], 1):.2f} "
+              f"recompiles={st['recompiles']}")
     for r in done[:3]:
         print(f"  req {r.uid}: {r.out_tokens[:10]}")
 

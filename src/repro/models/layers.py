@@ -259,7 +259,7 @@ def chunked_prefill_attention(
     segments: list,                # [(k, v, position_offset), ...] cached
     k_self: Array,                 # (b, c, kv, hd) — this chunk's raw K
     v_self: Array,
-    start: Array,                  # scalar int32: tokens already cached
+    start: Array,                  # scalar or (b,) int32: tokens cached
 ) -> Array:
     """Attention for one continuous-batching prefill chunk: queries at
     global positions ``start + i`` attend to the **cached prefix** (the
@@ -268,20 +268,25 @@ def chunked_prefill_attention(
     **causally to the raw chunk itself**.  Same per-segment online-softmax
     merge as `decode_attention_segments`, generalized to multiple query
     rows; a fully-masked segment's ``m = −1e30`` correction underflows to
-    exactly zero."""
+    exactly zero.
+
+    ``start`` may be a scalar (one chunk, the two-call engine) or a ``(b,)``
+    vector (the unified ragged step batches several requests' chunks as
+    rows, each with its own cached-prefix length)."""
     b, c, h, hd = q.shape
     g = k_self.shape[2]
     rep = h // g
     scale = 1.0 / np.sqrt(hd)
     qg = q.reshape(b, c, g, rep, hd).astype(jnp.float32) * scale
-    qpos = start + jnp.arange(c)
+    start = jnp.broadcast_to(jnp.asarray(start, jnp.int32).reshape(-1), (b,))
+    qpos = start[:, None] + jnp.arange(c)[None, :]           # (b, c)
 
     parts = []
 
-    def score_part(k_seg, v_seg, mask):          # mask: (c, s_seg) bool
+    def score_part(k_seg, v_seg, mask):          # mask: (b, c, s_seg) bool
         sc = jnp.einsum("bcgrd,bsgd->bgrcs", qg,
                         k_seg.astype(jnp.float32))
-        sc = jnp.where(mask[None, None, None], sc, -1e30)
+        sc = jnp.where(mask[:, None, None], sc, -1e30)
         m = jnp.max(sc, axis=-1)                 # (b, g, rep, c)
         p = jnp.exp(sc - m[..., None])
         l = jnp.sum(p, axis=-1)
@@ -291,10 +296,12 @@ def chunked_prefill_attention(
     for k_seg, v_seg, offset in segments:
         kpos = offset + jnp.arange(k_seg.shape[1])
         score_part(k_seg, v_seg,
-                   jnp.broadcast_to((kpos < start)[None, :],
-                                    (c, k_seg.shape[1])))
-    kpos_self = start + jnp.arange(k_self.shape[1])
-    score_part(k_self, v_self, kpos_self[None, :] <= qpos[:, None])
+                   jnp.broadcast_to(
+                       (kpos[None, None, :] < start[:, None, None]),
+                       (b, c, k_seg.shape[1])))
+    kpos_self = start[:, None] + jnp.arange(k_self.shape[1])  # (b, c_kv)
+    score_part(k_self, v_self,
+               kpos_self[:, None, :] <= qpos[:, :, None])
 
     m_tot = parts[0][0]
     for m, _, _ in parts[1:]:

@@ -380,16 +380,10 @@ def _merge_heads(x: Array) -> Array:
     return x.reshape(*x.shape[:-2], x.shape[-2] * x.shape[-1])
 
 
-def attn_block(
-    p: dict, x: Array, cfg: ModelConfig, *,
-    mode: str, positions: Array, policy: Optional[ShardingPolicy],
-    stamp: Optional[StampConfig], kv_cfg: KV.KVCacheConfig,
-    cache_entry: Optional[dict] = None, pos_scalar: Optional[Array] = None,
-    enc_out: Optional[Array] = None, causal: bool = True,
-    cache_capacity: Optional[int] = None, paged: Optional[dict] = None,
-) -> tuple[Array, Optional[dict]]:
-    hd, nh, kvh = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
-    h = L.rms_norm(x, p["ln1"].astype(x.dtype), cfg.norm_eps)
+def _attn_qkv(p: dict, h: Array, cfg: ModelConfig,
+              stamp: Optional[StampConfig]) -> tuple[Array, Array, Array]:
+    """QKV projections off the normed input (shared by the prefill, decode
+    and unified paths so their dispatch rules cannot diverge)."""
     if "wqkv" in p:
         # merged prepared int8 QKV (prepare_fused_weights): the merged
         # "bqkv" bias was concatenated there too — once at prepare time,
@@ -408,11 +402,37 @@ def attn_block(
             qkv = _linear(_maybe_stamp(h, stamp), p["wqkv"], bqkv)
         q, k, v = jnp.split(
             qkv, [cfg.q_dim, cfg.q_dim + cfg.kv_dim], axis=-1)
-    else:
-        h = _maybe_stamp(h, stamp)
-        q = _linear(h, p["wq"], p.get("bq"))
-        k = _linear(h, p["wk"], p.get("bk"))
-        v = _linear(h, p["wv"], p.get("bv"))
+        return q, k, v
+    h = _maybe_stamp(h, stamp)
+    return (_linear(h, p["wq"], p.get("bq")),
+            _linear(h, p["wk"], p.get("bk")),
+            _linear(h, p["wv"], p.get("bv")))
+
+
+def _attn_out(p: dict, attn: Array, x: Array,
+              stamp: Optional[StampConfig]) -> Array:
+    """Out-projection + residual (shared across paths)."""
+    if _use_fused(stamp, p["wo"]):
+        # fused out-proj: the raw head-split attention output goes straight
+        # into the kernel — its stamped quantize fuses with the head-merge
+        # reshape, so no merged (b, s, nh·hd) activation round-trips HBM
+        return x + L.stamp_fused_linear(attn, p["wo"], None, stamp,
+                                        merge_heads=True)
+    out = _maybe_stamp(_merge_heads(attn), stamp)
+    return x + _linear(out, p["wo"])
+
+
+def attn_block(
+    p: dict, x: Array, cfg: ModelConfig, *,
+    mode: str, positions: Array, policy: Optional[ShardingPolicy],
+    stamp: Optional[StampConfig], kv_cfg: KV.KVCacheConfig,
+    cache_entry: Optional[dict] = None, pos_scalar: Optional[Array] = None,
+    enc_out: Optional[Array] = None, causal: bool = True,
+    cache_capacity: Optional[int] = None, paged: Optional[dict] = None,
+) -> tuple[Array, Optional[dict]]:
+    hd, nh, kvh = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
+    h = L.rms_norm(x, p["ln1"].astype(x.dtype), cfg.norm_eps)
+    q, k, v = _attn_qkv(p, h, cfg, stamp)
     q = apply_rope_heads(q, positions, cfg, nh, hd)
     k = apply_rope_heads(k, positions, cfg, kvh, hd)
     v = _split_heads(v, kvh, hd)
@@ -480,15 +500,7 @@ def attn_block(
         attn = L.flash_attention(q, k, v, causal=causal)
         if mode == "prefill":
             new_entry = KV.quantize_full(k, v, kv_cfg, capacity=cache_capacity)
-    if _use_fused(stamp, p["wo"]):
-        # fused out-proj: the raw head-split attention output goes straight
-        # into the kernel — its stamped quantize fuses with the head-merge
-        # reshape, so no merged (b, s, nh·hd) activation round-trips HBM
-        x = x + L.stamp_fused_linear(attn, p["wo"], None, stamp,
-                                     merge_heads=True)
-    else:
-        out = _maybe_stamp(_merge_heads(attn), stamp)
-        x = x + _linear(out, p["wo"])
+    x = _attn_out(p, attn, x, stamp)
 
     if enc_out is not None and "xwq" in p:   # cross-attention (enc-dec)
         hx = L.rms_norm(x, p["lnx"].astype(x.dtype), cfg.norm_eps)
@@ -522,6 +534,82 @@ def attn_block(
 def apply_rope_heads(flat: Array, positions: Array, cfg: ModelConfig,
                      nh: int, hd: int) -> Array:
     return L.apply_rope(_split_heads(flat, nh, hd), positions, cfg.rope_theta)
+
+
+def attn_block_unified(
+    p: dict, x: tuple, cfg: ModelConfig, *,
+    stamp: Optional[StampConfig], kv_cfg: KV.KVCacheConfig,
+    cache_entry: dict, paged: dict,
+) -> tuple[tuple, dict]:
+    """One attention block of the **unified ragged step**: the prefill
+    chunk rows ``(n_pf, C, d)`` and the decode slots ``(S, 1, d)`` run in
+    one program — QKV per region (prefill under STaMP, decode transform
+    free, exactly the two-call dispatch), ONE combined K/V scatter over the
+    flattened token stream, then attention per span: decode spans over
+    their mapped pages, prefill spans causally within the chunk against
+    their own block-table prefix.  The XLA fallback computes both the
+    no-prefix flash path and the cached-prefix path for the chunk rows and
+    selects per row by ``pf_first`` — a traced mask, so first/continuation
+    chunks share one compiled program, and each row's math is bit-identical
+    to the two-call engine's dedicated jit variant (the parity contract).
+    With the Pallas path enabled both regions go through ONE
+    `paged_ragged_attention` grid instead.
+    """
+    x_pf, x_dec = x
+    hd, nh, kvh = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
+    pcfg = paged["cfg"]
+    n_pf, c_len = x_pf.shape[:2]
+    s_slots = x_dec.shape[0]
+
+    h_pf = L.rms_norm(x_pf, p["ln1"].astype(x_pf.dtype), cfg.norm_eps)
+    h_dec = L.rms_norm(x_dec, p["ln1"].astype(x_dec.dtype), cfg.norm_eps)
+    q_pf, k_pf, v_pf = _attn_qkv(p, h_pf, cfg, stamp)
+    q_dec, k_dec, v_dec = _attn_qkv(p, h_dec, cfg, None)
+    pos_pf = paged["pf_positions"]                     # (n_pf, C)
+    pos_dec = paged["dec_positions"][:, None]          # (S, 1)
+    q_pf = apply_rope_heads(q_pf, pos_pf, cfg, nh, hd)
+    k_pf = apply_rope_heads(k_pf, pos_pf, cfg, kvh, hd)
+    v_pf = _split_heads(v_pf, kvh, hd)
+    q_dec = apply_rope_heads(q_dec, pos_dec, cfg, nh, hd)
+    k_dec = apply_rope_heads(k_dec, pos_dec, cfg, kvh, hd)
+    v_dec = _split_heads(v_dec, kvh, hd)
+
+    # ONE scatter covers every token this step writes: all chunk tokens in
+    # span order, then one token per decode slot (pads/inactive slots are
+    # routed to the null page by the host-built index arrays)
+    k_flat = jnp.concatenate([k_pf.reshape(n_pf * c_len, kvh, hd),
+                              k_dec.reshape(s_slots, kvh, hd)], axis=0)
+    v_flat = jnp.concatenate([v_pf.reshape(n_pf * c_len, kvh, hd),
+                              v_dec.reshape(s_slots, kvh, hd)], axis=0)
+    new_entry = PKV.write_ragged(cache_entry, k_flat, v_flat,
+                                 paged["pages"], paged["offsets"],
+                                 paged["is_hi"], pcfg)
+
+    if pcfg.quant.quantized and kw_fused(kv_cfg):
+        from repro.kernels.paged_attention import paged_ragged_attention
+        attn_pf, attn_dec = paged_ragged_attention(
+            new_entry, q_pf, q_dec, paged["span_starts"],
+            paged["span_lengths"], paged["span_ht"], paged["span_lt"],
+            pcfg.block_size)
+    else:
+        segs_dec = PKV.gather_segments(new_entry, paged["dec_ht"],
+                                       paged["dec_lt"], pcfg, x_dec.dtype)
+        attn_dec = L.decode_attention_segments(q_dec, segs_dec,
+                                               length=paged["dec_lengths"])
+        # chunk rows: both prefill variants, row-selected by the traced
+        # first-chunk mask (XLA computes both branches of a where anyway;
+        # this buys one compiled program over the two-call engine's
+        # first/continuation jit pair at the cost of the smaller branch)
+        attn_flash = L.flash_attention(q_pf, k_pf, v_pf, causal=True)
+        segs_pf = PKV.gather_segments(new_entry, paged["pf_ht"],
+                                      paged["pf_lt"], pcfg, x_pf.dtype)
+        attn_cont = L.chunked_prefill_attention(q_pf, segs_pf, k_pf, v_pf,
+                                                paged["pf_start"])
+        first = paged["pf_first"][:, None, None, None]
+        attn_pf = jnp.where(first, attn_flash, attn_cont)
+
+    return (_attn_out(p, attn_pf, x_pf, stamp),
+            _attn_out(p, attn_dec, x_dec, None)), new_entry
 
 
 def mamba_block(
@@ -631,6 +719,21 @@ def _expert_w(w, dtype):
 def apply_block(spec: LayerSpec, p: dict, x: Array, cfg: ModelConfig, **kw
                 ) -> tuple[Array, Optional[dict]]:
     stamp = kw.get("stamp")
+    if kw["mode"] == "unified":
+        # unified ragged step: x is the (prefill_rows, decode_slots) pair;
+        # prefill keeps the STaMP path, decode the transform-free one —
+        # per region, inside one program
+        if spec.mixer != "attn":
+            raise NotImplementedError(
+                "unified step covers attention-only decoder stacks "
+                "(matching init_paged_cache)")
+        x, entry = attn_block_unified(p, x, cfg, stamp=stamp,
+                                      kv_cfg=kw["kv_cfg"],
+                                      cache_entry=kw["cache_entry"],
+                                      paged=kw["paged"])
+        x_pf = ffn_block(p, x[0], spec, cfg, stamp=stamp)
+        x_dec = ffn_block(p, x[1], spec, cfg, stamp=None)
+        return (x_pf, x_dec), entry
     if spec.mixer == "attn":
         x, entry = attn_block(p, x, cfg, mode=kw["mode"],
                               positions=kw["positions"], policy=kw.get("policy"),
@@ -735,7 +838,7 @@ def run_stack(
     xs = (params["period"], cache_per)
     x, period_cache = jax.lax.scan(body, x, xs)
     new_cache = None
-    if mode in ("prefill", "decode"):
+    if mode in ("prefill", "decode", "unified"):
         new_cache = dict(period_cache)
         new_cache.update(new_pro_cache)
     return x, new_cache
@@ -970,6 +1073,12 @@ def paged_prefill_chunk(params, pools: dict, tokens: Array, start: Array,
                         ) -> tuple[Array, dict]:
     """One prefill chunk of one request into the paged cache.
 
+    **Two-call parity path**: the unified engine runs prefill and decode
+    through one `paged_unified_step` program; this entry (and
+    `paged_decode_step`) is kept as the PR-3 step pair —
+    ``PagedEngineConfig(step_mode="two_call")`` — so the parity tests can
+    pin the unified step bit-for-bit against it.
+
     ``tokens``: (1, C) right-padded chunk; ``start``: scalar int32 tokens
     already cached; ``pages/offsets/is_hi``: (C,) host-computed write
     targets (pad tokens routed to the null page); ``last_index``: scalar
@@ -1004,6 +1113,99 @@ def paged_prefill_chunk(params, pools: dict, tokens: Array, start: Array,
     return logits.astype(jnp.float32), new_pools
 
 
+def paged_unified_step(params, pools: dict, pf_tokens: Array,
+                       pf_start: Array, pf_length: Array, pf_first: Array,
+                       pf_last_index: Array, dec_tokens: Array,
+                       dec_positions: Array, hi_table: Array,
+                       lo_table: Array, pages: Array, offsets: Array,
+                       is_hi: Array, cfg: ModelConfig, serve: ServeConfig,
+                       policy: Optional[ShardingPolicy] = None
+                       ) -> tuple[Array, Array, dict]:
+    """ONE device program per engine step: every planned prefill chunk and
+    the whole decode slot array run as a single ragged batch.
+
+    The flattened token stream is ``n_pf`` chunk spans of ``C`` tokens
+    (right-padded rows of ``pf_tokens``) followed by one 1-token span per
+    decode slot; the scheduler's per-span ``(query_start, query_len)``
+    metadata arrives here as the span-ordered arrays below.  Inside the
+    program the prefill region is built **span-major** — ``(n_pf, C, d)``,
+    one batch row per span — so every sequence-axis op (the STaMP
+    transform above all) applies per span and never across the flattened
+    batch: the segment rule `repro.core.stamp.fold_segments` defines,
+    satisfied here by construction rather than by a runtime fold (the
+    ``seg_len`` stamp APIs serve callers that do hold a flattened
+    carrier).  The decode region keeps the two-call path's exact
+    ``(S, 1, d)`` shapes.
+
+    ``pf_tokens``: (n_pf, C) int32 right-padded chunks (n_pf may be 0 —
+    the all-decode fast case delegates to the `paged_decode_step` graph,
+    single-token integer matmuls included);
+    ``pf_start``: (n_pf,) tokens already cached per chunk row;
+    ``pf_length``: (n_pf,) materialized length after this chunk
+    (= start + valid tokens);
+    ``pf_first``: (n_pf,) bool — no-prefix rows take the flash-attention
+    path (traced: first and continuation chunks share one compiled
+    program);
+    ``pf_last_index``: (n_pf,) chunk-local index whose logits are the
+    request's next-token distribution (meaningful on final chunks);
+    ``dec_tokens / dec_positions``: (S,) as in `paged_decode_step`;
+    ``hi_table / lo_table``: (n_pf + S, ·) span-ordered block tables —
+    chunk spans first (each row is that request's own table), then the
+    slot array;
+    ``pages / offsets / is_hi``: (n_pf·C + S,) write targets for the
+    flattened token stream (pads and inactive slots → null page).
+
+    Returns ``(pf_logits (n_pf, V), dec_logits (S, V), new_pools)``.
+    """
+    n_pf, c_len = pf_tokens.shape
+    if n_pf == 0:
+        dec_logits, new_pools = paged_decode_step(
+            params, pools, dec_tokens, dec_positions, hi_table, lo_table,
+            pages, offsets, is_hi, cfg, serve, policy)
+        return (jnp.zeros((0, dec_logits.shape[-1]), jnp.float32),
+                dec_logits, new_pools)
+    assert policy is None, "unified step is single-device for now"
+    set_fused_cache_attention(serve.fused_cache_attention)
+    # both regions live in ONE trace, so the decode-matmul dispatch relies
+    # on `_linear`'s token-dim shape guard: the (S, 1, d) decode
+    # sub-tensors may take the single-token integer kernel, the (n_pf, C,
+    # d) chunk rows never match it.  C == 1 would alias the two — keep the
+    # transform path in that corner.
+    set_fused_decode_matmul(serve.fused_decode_matmul and c_len > 1)
+    compute_dtype = jnp.bfloat16
+    # span-major from the start: embedding is per-token, so the (n_pf, C,
+    # d) per-span view of the flattened batch is built directly
+    x_pf = _embed(params, pf_tokens, compute_dtype)
+    x_dec = _embed(params, dec_tokens[:, None], compute_dtype)
+    pos_pf = pf_start[:, None] + jnp.arange(c_len)[None, :]
+    paged = {"cfg": serve.paged,
+             "span_ht": hi_table, "span_lt": lo_table,
+             "span_starts": jnp.concatenate([pf_start, dec_positions]),
+             "span_lengths": jnp.concatenate([pf_length,
+                                              dec_positions + 1]),
+             "pf_ht": hi_table[:n_pf], "pf_lt": lo_table[:n_pf],
+             "dec_ht": hi_table[n_pf:], "dec_lt": lo_table[n_pf:],
+             "pf_positions": pos_pf, "pf_start": pf_start,
+             "pf_first": pf_first, "dec_positions": dec_positions,
+             "dec_lengths": dec_positions + 1,
+             "pages": pages, "offsets": offsets, "is_hi": is_hi}
+    x, new_pools = run_stack(params, (x_pf, x_dec), cfg, mode="unified",
+                             positions=None, policy=policy,
+                             stamp=serve.stamp, kv_cfg=serve.kv,
+                             cache=pools, paged=paged, remat=False)
+    x_pf, x_dec = x
+    head = _head_weight(params)
+    x_pf = L.rms_norm(x_pf, params["final_norm"].astype(x_pf.dtype),
+                      cfg.norm_eps)
+    x_last = jnp.take_along_axis(x_pf, pf_last_index[:, None, None], axis=1)
+    pf_logits = _linear(x_last, head)[:, 0]
+    x_dec = L.rms_norm(x_dec, params["final_norm"].astype(x_dec.dtype),
+                       cfg.norm_eps)
+    dec_logits = _linear(x_dec[:, 0], head)
+    return (pf_logits.astype(jnp.float32), dec_logits.astype(jnp.float32),
+            new_pools)
+
+
 def paged_decode_step(params, pools: dict, tokens: Array, positions: Array,
                       hi_table: Array, lo_table: Array, pages: Array,
                       offsets: Array, is_hi: Array,
@@ -1011,6 +1213,10 @@ def paged_decode_step(params, pools: dict, tokens: Array, positions: Array,
                       policy: Optional[ShardingPolicy] = None
                       ) -> tuple[Array, dict]:
     """One decode step for the whole slot array against the paged cache.
+
+    **Two-call parity path** (see `paged_prefill_chunk`) — and the graph
+    the unified step delegates to for its all-decode fast case (n_pf = 0),
+    single-token integer matmuls (`kernels/decode_matmul.py`) included.
 
     ``tokens``: (S,) int32 last token per slot; ``positions``: (S,) int32
     per-slot lengths (the incoming token's position); ``pages/offsets/

@@ -25,6 +25,7 @@ token-identical greedy output, which the parity tests pin.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Dict, List, Optional
@@ -36,8 +37,20 @@ import numpy as np
 from repro.models import lm
 from repro.models.config import ModelConfig
 from repro.serving import paged_kvcache as PKV
-from repro.serving.scheduler import (RUNNING, SchedRequest, Scheduler,
-                                     SchedulerConfig)
+from repro.serving.scheduler import (RUNNING, PrefillWork, SchedRequest,
+                                     Scheduler, SchedulerConfig)
+
+
+def _transform_window(stamp, chunk: int) -> int:
+    """Transform-aware chunk-boundary window: a Haar DWT / WHT at L levels
+    mixes tokens in blocks of 2^L, so non-final chunk ends align to that
+    multiple (scheduler satellite).  Window > chunk cannot be aligned — the
+    per-chunk transform spans the whole chunk, so there is no intra-chunk
+    window to preserve (the documented fallback: no alignment)."""
+    if stamp is None or not stamp.enabled or stamp.seq_transform == "none":
+        return 1
+    w = 2 ** stamp.resolved_levels(chunk)
+    return w if w <= chunk else 1
 
 
 @dataclasses.dataclass
@@ -63,12 +76,17 @@ class EngineConfig:
 @dataclasses.dataclass
 class PagedEngineConfig:
     max_slots: int = 8            # decode batch width (static jit shape)
-    prefill_chunk: int = 128      # tokens prefilled per engine step
+    prefill_chunk: int = 128      # tokens per prefill chunk row
     max_seq: int = 256            # per-request length cap (table width)
     block_size: int = 16          # tokens per cache page
     num_hi_blocks: Optional[int] = None   # pool sizes; None = enough for
     num_lo_blocks: Optional[int] = None   # max_slots full-length requests
     eos_id: int = -1
+    max_prefills: int = 2         # chunk spans per unified step (≥ 1)
+    step_mode: str = "unified"    # "unified" (one program per step) |
+    # "two_call" (the PR-3 prefill-then-decode pair, kept for parity tests
+    # and A/B benchmarking — schedules exactly like the old engine)
+    max_events: int = 4096        # event-trace ring buffer (0 = unbounded)
 
 
 class _EngineBase:
@@ -94,8 +112,10 @@ class _EngineBase:
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> int:
         self._uid += 1
+        # perf_counter, not time.time: TTFT / latency are *intervals*, and
+        # wall-clock steps (NTP slew) would skew the bench percentiles
         req = Request(self._uid, np.asarray(prompt, np.int32),
-                      max_new_tokens, submit_t=time.time())
+                      max_new_tokens, submit_t=time.perf_counter())
         self._enqueue(req)
         return self._uid
 
@@ -138,7 +158,7 @@ class BucketedEngine(_EngineBase):
         return done
 
     def _run_batch(self, reqs: List[Request]) -> List[Request]:
-        t0 = time.time()
+        t0 = time.perf_counter()
         b = len(reqs)
         bucket = self.ecfg.bucket
         prompts = np.zeros((b, bucket), np.int32)
@@ -163,7 +183,7 @@ class BucketedEngine(_EngineBase):
         # force the async-dispatched prefill before timestamping, so TTFT
         # measures execution (as the paged engine's np.argmax does)
         jax.block_until_ready(tok)
-        t_first = time.time()
+        t_first = time.perf_counter()
         for r in reqs:
             r.ttft_s = t_first - r.submit_t
         alive = np.ones(b, bool)
@@ -177,7 +197,7 @@ class BucketedEngine(_EngineBase):
             logits, cache = self._decode(self.params, cache, tok,
                                          jnp.asarray(lens + step))
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         for i, r in enumerate(reqs):
             r.out_tokens = outs[i][: r.max_new_tokens]
             r.latency_s = dt
@@ -191,14 +211,22 @@ ServingEngine = BucketedEngine
 class PagedServingEngine(_EngineBase):
     """Continuous batching over the block-paged mixed-precision cache.
 
-    Each engine step: (1) the scheduler admits waiting requests into free
-    slots and reserves pages (preempting later arrivals on exhaustion),
-    (2) at most one prefill chunk runs for the earliest admitted request
-    still holding uncached prompt tokens, (3) every RUNNING slot decodes
-    one token through `lm.paged_decode_step` — a single fixed-shape jit
-    call whose membership changes step to step via the host-built block
-    tables and per-slot lengths.  ``events`` records the full admission /
-    join / leave / preemption trace for tests and the benchmark.
+    Each engine step the scheduler admits waiting requests into free slots
+    and reserves pages (preempting later arrivals on exhaustion), then the
+    whole step's work — up to ``max_prefills`` prefill chunks AND the
+    decode slot array — runs as **one ragged batched forward**
+    (`lm.paged_unified_step`): every step dispatches exactly one device
+    program and streams the weights once, where the two-call design paid
+    two dispatches and two cold weight passes on every mixed step while
+    decode slots idled during prefill.  Shapes are bucketed on the number
+    of chunk rows (0, 1, 2, 4, … up to ``max_prefills``), so the compile
+    count per engine lifetime is fixed (``stats["recompiles"]`` /
+    :meth:`compile_count`; the first/continuation-chunk distinction is a
+    traced mask, not a shape).  ``step_mode="two_call"`` keeps the PR-3
+    prefill-then-decode pair — scheduling-identical (one chunk per step,
+    no boundary alignment) — as the parity oracle and A/B baseline.
+    ``events`` records the admission / join / leave / preemption trace in
+    a ring buffer capped at ``max_events``.
     """
 
     def __init__(self, params, cfg: ModelConfig, serve: lm.ServeConfig,
@@ -223,29 +251,67 @@ class PagedServingEngine(_EngineBase):
         self.serve = dataclasses.replace(self.serve, paged=self.pcfg,
                                          cache_capacity=None)
         self.pools = lm.init_paged_cache(cfg, self.pcfg)
+        if e.step_mode not in ("unified", "two_call"):
+            raise ValueError(f"unknown step_mode {e.step_mode!r}")
+        unified = e.step_mode == "unified"
         self.sched = Scheduler(
-            SchedulerConfig(max_slots=e.max_slots,
-                            prefill_chunk=e.prefill_chunk),
+            SchedulerConfig(
+                max_slots=e.max_slots, prefill_chunk=e.prefill_chunk,
+                max_prefills=max(e.max_prefills, 1) if unified else 1,
+                transform_window=_transform_window(
+                    self.serve.stamp, e.prefill_chunk) if unified else 1),
             self.pcfg, swap_out=self._swap_out, swap_in=self._swap_in)
         self._requests: Dict[int, Request] = {}
-        self.events: List[tuple] = []     # (step, kind, payload)
+        # (step, kind, payload) ring buffer — unbounded growth over a long
+        # serving run is a memory leak, so the trace keeps the newest
+        # max_events entries
+        self.events: collections.deque = collections.deque(
+            maxlen=e.max_events if e.max_events > 0 else None)
         self.stats = {"steps": 0, "decode_tokens": 0, "prefill_chunks": 0,
-                      "preemptions": 0}
+                      "preemptions": 0, "device_dispatches": 0,
+                      "recompiles": 0}
         self._step_i = 0
+        # shape buckets for the chunk-row count: 0 (all-decode), powers of
+        # two, and max_prefills — the full set of compiled variants
+        mp = max(e.max_prefills, 1) if unified else 1
+        buckets = {0, mp}
+        b = 1
+        while b < mp:
+            buckets.add(b)
+            b *= 2
+        self._npf_buckets = sorted(buckets)
+        self._compiled_keys: set = set()
 
         cfgm, serve_p = self.cfg, self.serve
-        self._prefill_first = jax.jit(
-            lambda p, pools, t, s, ht, lt, pg, off, ih, li:
-            lm.paged_prefill_chunk(p, pools, t, s, ht, lt, pg, off, ih, li,
-                                   cfgm, serve_p, first=True))
-        self._prefill_cont = jax.jit(
-            lambda p, pools, t, s, ht, lt, pg, off, ih, li:
-            lm.paged_prefill_chunk(p, pools, t, s, ht, lt, pg, off, ih, li,
-                                   cfgm, serve_p, first=False))
-        self._decode = jax.jit(
-            lambda p, pools, t, pos, ht, lt, pg, off, ih:
-            lm.paged_decode_step(p, pools, t, pos, ht, lt, pg, off, ih,
-                                 cfgm, serve_p))
+        if unified:
+            self._unified = jax.jit(
+                lambda p, pools, pt, ps, pln, pf, pli, dt, dp, ht, lt, pg,
+                off, ih:
+                lm.paged_unified_step(p, pools, pt, ps, pln, pf, pli, dt,
+                                      dp, ht, lt, pg, off, ih, cfgm,
+                                      serve_p))
+        else:
+            self._prefill_first = jax.jit(
+                lambda p, pools, t, s, ht, lt, pg, off, ih, li:
+                lm.paged_prefill_chunk(p, pools, t, s, ht, lt, pg, off, ih,
+                                       li, cfgm, serve_p, first=True))
+            self._prefill_cont = jax.jit(
+                lambda p, pools, t, s, ht, lt, pg, off, ih, li:
+                lm.paged_prefill_chunk(p, pools, t, s, ht, lt, pg, off, ih,
+                                       li, cfgm, serve_p, first=False))
+            self._decode = jax.jit(
+                lambda p, pools, t, pos, ht, lt, pg, off, ih:
+                lm.paged_decode_step(p, pools, t, pos, ht, lt, pg, off, ih,
+                                     cfgm, serve_p))
+
+    def compile_count(self) -> int:
+        """Compiled variants of the unified step this engine has built
+        (shape-bucketed chunk-row counts).  Prefers jit's own lowering
+        cache; falls back to the host-side bucket set."""
+        fn = getattr(self, "_unified", None)
+        if fn is not None and hasattr(fn, "_cache_size"):
+            return fn._cache_size()
+        return len(self._compiled_keys)
 
     # ------------------------------------------------------------------
     def _enqueue(self, req: Request) -> None:
@@ -267,17 +333,17 @@ class PagedServingEngine(_EngineBase):
 
     # ------------------------------------------------------------------
     def run(self) -> List[Request]:
-        t0 = time.time()
+        t0 = time.perf_counter()
         done: List[Request] = []
         while self.sched.has_work():
             self._step(done)
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         for r in done:
             r.latency_s = r.latency_s or dt
         return done
 
     # ------------------------------------------------------------------
-    def _tables(self, sreqs: List[SchedRequest]) -> tuple:
+    def _tables_np(self, sreqs: List[SchedRequest]) -> tuple:
         """Host-built block tables over the full slot array (unmapped → 0)."""
         e, pc = self.ecfg, self.pcfg
         ht = np.zeros((e.max_slots, max(pc.hi_blocks_per_seq, 1)), np.int32)
@@ -289,12 +355,22 @@ class PagedServingEngine(_EngineBase):
             lt[sreq.slot, : len(sreq.lo_pages)] = sreq.lo_pages
         if pc.hi_blocks_per_seq == 0:
             ht = ht[:, :0]
+        return ht, lt
+
+    def _tables(self, sreqs: List[SchedRequest]) -> tuple:
+        ht, lt = self._tables_np(sreqs)
         return jnp.asarray(ht), jnp.asarray(lt)
 
     def _write_target(self, sreq: SchedRequest, pos: int) -> tuple:
         is_hi, pidx, off = PKV.token_page_index(pos, self.pcfg)
         page = (sreq.hi_pages if is_hi else sreq.lo_pages)[pidx]
         return page, off, is_hi
+
+    def _bucket_npf(self, n: int) -> int:
+        for b in self._npf_buckets:
+            if b >= n:
+                return b
+        return self._npf_buckets[-1]
 
     def _step(self, done: List[Request]) -> None:
         self._step_i += 1
@@ -303,16 +379,108 @@ class PagedServingEngine(_EngineBase):
         for sreq in plan.admitted:
             self.events.append((self._step_i, "admit", sreq.uid))
 
-        if plan.prefill is not None:
-            self._run_prefill_chunk(plan.prefill, done)
-        if plan.decode:
-            self._run_decode(plan.decode, done)
+        if self.ecfg.step_mode == "two_call":
+            if plan.prefills:
+                self._run_prefill_chunk(plan.prefills[0], done)
+            if plan.decode:
+                self._run_decode(plan.decode, done)
+            return
+        if plan.prefills or plan.decode:
+            self._run_unified(plan, done)
 
-    def _run_prefill_chunk(self, sreq: SchedRequest,
+    def _run_unified(self, plan, done: List[Request]) -> None:
+        """Build the flattened ragged batch the scheduler planned and run
+        it as ONE device program: ``n_pf`` chunk rows (bucketed; unused
+        rows are null-page dummies) + the decode slot array."""
+        e = self.ecfg
+        c_len, s = e.prefill_chunk, e.max_slots
+        works = plan.prefills
+        n_pf = self._bucket_npf(len(works))
+        pf_tokens = np.zeros((n_pf, c_len), np.int32)
+        pf_start = np.zeros((n_pf,), np.int32)
+        pf_length = np.zeros((n_pf,), np.int32)
+        pf_first = np.zeros((n_pf,), bool)
+        pf_last = np.zeros((n_pf,), np.int32)
+        pages = np.zeros((n_pf * c_len + s,), np.int32)
+        offs = np.zeros((n_pf * c_len + s,), np.int32)
+        ishi = np.zeros((n_pf * c_len + s,), bool)
+        for i, w in enumerate(works):
+            sreq, start, end = w.sreq, w.start, w.end
+            valid = end - start
+            pf_tokens[i, :valid] = sreq.prompt[start:end]
+            pf_start[i] = start
+            pf_length[i] = end
+            pf_first[i] = start == 0
+            # the chunk's last valid row — on a final chunk that is the
+            # prompt's last token, whose logits are the first-token
+            # distribution (pf_logits of non-final chunks are discarded)
+            pf_last[i] = valid - 1
+            base = i * c_len
+            for t in range(valid):
+                pages[base + t], offs[base + t], ishi[base + t] = \
+                    self._write_target(sreq, start + t)
+        dec_tokens = np.zeros((s,), np.int32)
+        dec_pos = np.zeros((s,), np.int32)
+        base = n_pf * c_len
+        for sreq in plan.decode:
+            dec_tokens[sreq.slot] = sreq.generated[-1]
+            dec_pos[sreq.slot] = sreq.pos
+            pages[base + sreq.slot], offs[base + sreq.slot], \
+                ishi[base + sreq.slot] = self._write_target(sreq, sreq.pos)
+        # span-ordered tables: one row per chunk span (that request's own
+        # table), then the whole slot array for the decode spans
+        ht_np, lt_np = self._tables_np([w.sreq for w in works] + plan.decode)
+        pf_ht = np.zeros((n_pf, ht_np.shape[1]), np.int32)
+        pf_lt = np.zeros((n_pf, lt_np.shape[1]), np.int32)
+        for i, w in enumerate(works):
+            pf_ht[i] = ht_np[w.sreq.slot]
+            pf_lt[i] = lt_np[w.sreq.slot]
+        span_ht = np.concatenate([pf_ht, ht_np], axis=0)
+        span_lt = np.concatenate([pf_lt, lt_np], axis=0)
+
+        if n_pf not in self._compiled_keys:
+            self._compiled_keys.add(n_pf)
+            self.stats["recompiles"] += 1
+        pf_logits, dec_logits, self.pools = self._unified(
+            self.params, self.pools, jnp.asarray(pf_tokens),
+            jnp.asarray(pf_start), jnp.asarray(pf_length),
+            jnp.asarray(pf_first), jnp.asarray(pf_last),
+            jnp.asarray(dec_tokens), jnp.asarray(dec_pos),
+            jnp.asarray(span_ht), jnp.asarray(span_lt),
+            jnp.asarray(pages), jnp.asarray(offs), jnp.asarray(ishi))
+        self.stats["device_dispatches"] += 1
+        pf_logits = np.asarray(pf_logits)
+        dec_logits = np.asarray(dec_logits)
+
+        for i, w in enumerate(works):
+            sreq = w.sreq
+            sreq.pos = w.end
+            self.stats["prefill_chunks"] += 1
+            self.events.append((self._step_i, "prefill_chunk",
+                                (sreq.uid, w.start, w.end)))
+            if w.end == sreq.prompt_len:
+                tok = int(np.argmax(pf_logits[i]))
+                sreq.generated.append(tok)
+                sreq.state = RUNNING
+                req = self._requests[sreq.uid]
+                req.ttft_s = time.perf_counter() - req.submit_t
+                self.events.append((self._step_i, "first_token", sreq.uid))
+                self._maybe_finish(sreq, done)
+        if plan.decode:
+            self.events.append((self._step_i, "decode",
+                                tuple(sorted(r.uid for r in plan.decode))))
+            for sreq in plan.decode:
+                sreq.pos += 1              # last token is now cached
+                tok = int(np.argmax(dec_logits[sreq.slot]))
+                sreq.generated.append(tok)
+                self.stats["decode_tokens"] += 1
+                self._maybe_finish(sreq, done)
+
+    # -- two_call mode (the PR-3 step pair, kept for parity/AB) ---------
+    def _run_prefill_chunk(self, work: PrefillWork,
                            done: List[Request]) -> None:
         e = self.ecfg
-        start = sreq.pos
-        end = min(start + e.prefill_chunk, sreq.prompt_len)
+        sreq, start, end = work.sreq, work.start, work.end
         valid = end - start
         chunk = np.zeros((1, e.prefill_chunk), np.int32)
         chunk[0, :valid] = sreq.prompt[start:end]
@@ -331,6 +499,7 @@ class PagedServingEngine(_EngineBase):
             self.params, self.pools, jnp.asarray(chunk),
             jnp.int32(start), ht, lt, jnp.asarray(pages), jnp.asarray(offs),
             jnp.asarray(ishi), jnp.int32(last_index))
+        self.stats["device_dispatches"] += 1
         sreq.pos = end
         self.stats["prefill_chunks"] += 1
         self.events.append((self._step_i, "prefill_chunk",
@@ -340,7 +509,7 @@ class PagedServingEngine(_EngineBase):
             sreq.generated.append(tok)
             sreq.state = RUNNING
             req = self._requests[sreq.uid]
-            req.ttft_s = time.time() - req.submit_t
+            req.ttft_s = time.perf_counter() - req.submit_t
             self.events.append((self._step_i, "first_token", sreq.uid))
             self._maybe_finish(sreq, done)
 
@@ -363,6 +532,7 @@ class PagedServingEngine(_EngineBase):
             self.params, self.pools, jnp.asarray(tokens),
             jnp.asarray(positions), ht, lt, jnp.asarray(pages),
             jnp.asarray(offs), jnp.asarray(ishi))
+        self.stats["device_dispatches"] += 1
         logits = np.asarray(logits)
         self.events.append((self._step_i, "decode",
                             tuple(sorted(r.uid for r in running))))
@@ -382,7 +552,7 @@ class PagedServingEngine(_EngineBase):
             out = sreq.generated[: sreq.max_new_tokens]
             req = self._requests[sreq.uid]
             req.out_tokens = np.asarray(out, np.int32)
-            req.latency_s = time.time() - req.submit_t
+            req.latency_s = time.perf_counter() - req.submit_t
             req.preemptions = sreq.preemptions
             self.sched.finish(sreq)
             self.events.append((self._step_i, "finish", sreq.uid))

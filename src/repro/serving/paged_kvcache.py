@@ -270,6 +270,19 @@ def write_chunk(entry: dict, k: Array, v: Array,
     return _scatter_tokens(entry, k[0], v[0], pages, offsets, is_hi, cfg)
 
 
+def write_ragged(entry: dict, k: Array, v: Array,
+                 pages: Array, offsets: Array, is_hi: Array,
+                 cfg: PagedCacheConfig) -> dict:
+    """Unified-step path: scatter the whole flattened token stream — every
+    prefill chunk's tokens followed by one token per decode slot — in ONE
+    device scatter.  ``k / v``: (T, kv, hd); pad / inactive entries arrive
+    with ``pages == 0`` (the null page).  Real writes always target
+    disjoint (page, offset) pairs (requests own disjoint pages), so the
+    combined scatter is order-independent except on the never-read null
+    page."""
+    return _scatter_tokens(entry, k, v, pages, offsets, is_hi, cfg)
+
+
 def gather_segments(entry: dict, hi_table: Array, lo_table: Array,
                     cfg: PagedCacheConfig, dtype=jnp.bfloat16):
     """Block tables -> dense dequantized segments for the XLA attention path.

@@ -8,13 +8,29 @@ produces a :class:`StepPlan`:
 * **admissions** — FCFS by arrival.  A request is admitted when a slot is
   free and (for a preempted request resuming) every page it held can be
   re-allocated; the engine then swaps its saved pages back in.
-* **one prefill chunk** — the earliest admitted request that still has
-  prompt tokens uncached gets its next ``prefill_chunk`` tokens.  Prefill is
-  chunked *between* decode steps rather than bucket-padded up front, so a
-  long prompt never stalls the running batch for more than one chunk.
+* **prefill chunks** — up to ``max_prefills`` requests that still have
+  prompt tokens uncached each get their next ``prefill_chunk`` tokens, in
+  strict ``(arrival, uid)`` order (the one-prefill-per-step FCFS limit of
+  the two-call engine is lifted; the first candidate that cannot reserve
+  pages stops the scan so later arrivals never prefill past it).  Prefill
+  is chunked *between* decode steps rather than bucket-padded up front, so
+  a long prompt never stalls the running batch for more than one chunk.
+  Non-final chunk ends are aligned down to multiples of
+  ``transform_window`` so a chunk never splits a STaMP transform block
+  mid-window (window ≤ chunk; a window larger than the chunk cannot be
+  aligned — the per-chunk sequence transform spans the whole chunk anyway,
+  so there is no intra-chunk window to preserve and the chunk is scheduled
+  unaligned).
 * **the decode batch** — every RUNNING slot decodes one token.  Requests
   join and leave this batch at step granularity; there is no lockstep
   bucket.
+
+Together these form one **ragged step**: each planned prefill chunk is a
+query span of ``end - start`` tokens and each RUNNING slot a span of one
+token; :meth:`Scheduler.plan_step` returns the per-span ``(query_start,
+query_len)`` metadata (`StepPlan.spans`) over the flattened token batch
+that `serving/engine.py` hands to `models/lm.paged_unified_step` as a
+single device program.
 
 Preemption: when a decode step needs a fresh page and the pools are
 exhausted, the victim is the **latest-admitted** active request (vLLM's
@@ -32,6 +48,7 @@ evicted with (bit-identical, no recompute).
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Callable, List, Optional
 
 import numpy as np
@@ -76,18 +93,49 @@ class SchedRequest:
 
 
 @dataclasses.dataclass
+class PrefillWork:
+    """One planned prefill chunk: ``sreq.prompt[start:end]`` runs this step
+    (pages for [0, end) are already reserved)."""
+
+    sreq: SchedRequest
+    start: int
+    end: int
+
+
+@dataclasses.dataclass
 class StepPlan:
     admitted: List[SchedRequest]
     resumed: List[SchedRequest]      # subset of admitted that swapped back in
-    prefill: Optional[SchedRequest]  # next chunk is prompt[pos : pos+chunk]
+    prefills: List[PrefillWork]      # FCFS-ordered chunks, ≤ max_prefills
     decode: List[SchedRequest]       # RUNNING slots, slot-index order
     preempted: List[SchedRequest]    # evicted (already swapped out + freed)
+
+    @property
+    def prefill(self) -> Optional[SchedRequest]:
+        """Two-call compatibility view: the single FCFS prefill candidate."""
+        return self.prefills[0].sreq if self.prefills else None
+
+    def spans(self) -> List[tuple]:
+        """Ragged metadata for the flattened unified batch:
+        ``(uid, query_start, query_len)`` per span — prefill chunks first
+        (in plan order), then one 1-token span per decode slot.  Offsets are
+        cumulative over the flattened token stream."""
+        out, off = [], 0
+        for w in self.prefills:
+            out.append((w.sreq.uid, off, w.end - w.start))
+            off += w.end - w.start
+        for sreq in self.decode:
+            out.append((sreq.uid, off, 1))
+            off += 1
+        return out
 
 
 @dataclasses.dataclass
 class SchedulerConfig:
     max_slots: int = 8
     prefill_chunk: int = 64
+    max_prefills: int = 1            # prefill chunks per (unified) step
+    transform_window: int = 1        # align non-final chunk ends to this
 
 
 class Scheduler:
@@ -99,8 +147,11 @@ class Scheduler:
         self.alloc = BlockAllocator(cache_cfg)
         self._swap_out = swap_out
         self._swap_in = swap_in
-        self.waiting: List[SchedRequest] = []    # sorted by arrival
+        self.waiting: List[SchedRequest] = []    # sorted by (arrival, uid)
         self.active: List[SchedRequest] = []     # PREFILLING | RUNNING
+        # min-heap: O(log n) admission instead of pop(0) + sort(), and the
+        # lowest-free-slot-first placement stays deterministic at high slot
+        # counts (an ascending range is already a valid heap)
         self._free_slots = list(range(cfg.max_slots))
         self._admit_counter = 0
         self.num_preemptions = 0
@@ -109,7 +160,9 @@ class Scheduler:
     # ------------------------------------------------------------------
     def submit(self, sreq: SchedRequest) -> None:
         self.waiting.append(sreq)
-        self.waiting.sort(key=lambda r: r.arrival)
+        # (arrival, uid): equal-arrival submissions keep a reproducible
+        # order instead of whatever the sort happens to preserve
+        self.waiting.sort(key=lambda r: (r.arrival, r.uid))
 
     def has_work(self) -> bool:
         return bool(self.waiting or self.active)
@@ -118,20 +171,20 @@ class Scheduler:
     def plan_step(self) -> StepPlan:
         self._step_preempted: List[SchedRequest] = []
         admitted, resumed = self._admit()
-        prefill = self._pick_prefill()
+        prefills = self._pick_prefills()
         self._ensure_decode_capacity()
         decode = sorted((r for r in self.active if r.state == RUNNING),
                         key=lambda r: r.slot)
-        if prefill is not None and prefill.state != PREFILLING:
-            prefill = None           # lost its pages to a decode preemption
-        return StepPlan(admitted=admitted, resumed=resumed, prefill=prefill,
-                        decode=decode, preempted=self._step_preempted)
+        # a decode-capacity preemption can evict a planned prefill candidate
+        prefills = [w for w in prefills if w.sreq.state == PREFILLING]
+        return StepPlan(admitted=admitted, resumed=resumed,
+                        prefills=prefills, decode=decode,
+                        preempted=self._step_preempted)
 
     def finish(self, sreq: SchedRequest) -> None:
         sreq.state = FINISHED
         self.active.remove(sreq)
-        self._free_slots.append(sreq.slot)
-        self._free_slots.sort()
+        heapq.heappush(self._free_slots, sreq.slot)
         self.alloc.free(sreq.hi_pages, sreq.lo_pages)
         sreq.hi_pages, sreq.lo_pages = [], []
         sreq.slot = -1
@@ -162,22 +215,44 @@ class Scheduler:
         return admitted, resumed
 
     def _place(self, sreq: SchedRequest) -> None:
-        sreq.slot = self._free_slots.pop(0)
+        sreq.slot = heapq.heappop(self._free_slots)
         sreq.admit_seq = self._admit_counter
         self._admit_counter += 1
         self.active.append(sreq)
 
-    def _pick_prefill(self) -> Optional[SchedRequest]:
-        """Strict FCFS: only the earliest-arrival request with prompt tokens
-        left may prefill; reserve pages for its next chunk (preempting only
-        requests that arrived after it)."""
+    def _align_chunk_end(self, sreq: SchedRequest, end: int) -> int:
+        """Transform-aware chunk boundary: align a *non-final* chunk end
+        down to a multiple of ``transform_window`` tokens from the chunk
+        start, so the per-chunk STaMP sequence transform never operates on
+        a split transform block.  Chunk starts stay aligned by induction
+        (every earlier non-final chunk had aligned length).  The final
+        chunk keeps the exact prompt end.  window > chunk budget cannot be
+        aligned — the per-chunk transform covers the whole chunk, so there
+        is no intra-chunk window to preserve and the end is kept as is
+        (the documented fallback)."""
+        w = self.cfg.transform_window
+        if w <= 1 or end >= sreq.prompt_len:
+            return end
+        span = (end - sreq.pos) // w * w
+        return sreq.pos + span if span > 0 else end
+
+    def _pick_prefills(self) -> List[PrefillWork]:
+        """Strict FCFS over PREFILLING requests, ``(arrival, uid)`` order:
+        up to ``max_prefills`` of them get a chunk this step.  The first
+        candidate that cannot reserve its pages stops the scan — a later
+        arrival never prefills past an earlier blocked one."""
         cands = sorted((r for r in self.active if r.state == PREFILLING),
-                       key=lambda r: r.arrival)
-        if not cands:
-            return None
-        sreq = cands[0]
-        end = min(sreq.pos + self.cfg.prefill_chunk, sreq.prompt_len)
-        return sreq if self._reserve(sreq, end) else None
+                       key=lambda r: (r.arrival, r.uid))
+        out: List[PrefillWork] = []
+        for sreq in cands[: self.cfg.max_prefills]:
+            if sreq.state != PREFILLING:
+                continue             # preempted by an earlier reservation
+            end = min(sreq.pos + self.cfg.prefill_chunk, sreq.prompt_len)
+            end = self._align_chunk_end(sreq, end)
+            if not self._reserve(sreq, end):
+                break
+            out.append(PrefillWork(sreq, sreq.pos, end))
+        return out
 
     def _ensure_decode_capacity(self) -> None:
         """Every RUNNING slot writes one token this step; make sure the page
@@ -222,7 +297,10 @@ class Scheduler:
             cands = [r for r in cands if r.arrival > after]
         if not cands:
             return None
-        return max(cands, key=lambda r: r.arrival)
+        # (arrival, uid): equal-arrival candidates evict reproducibly —
+        # `max` alone would pick whichever tied request came first in the
+        # active list, an artifact of admission history
+        return max(cands, key=lambda r: (r.arrival, r.uid))
 
     def _preempt(self, victim: SchedRequest) -> None:
         # A prefill reservation runs ahead of execution (`_pick_prefill`
@@ -241,8 +319,7 @@ class Scheduler:
         self.alloc.free(victim.hi_pages, victim.lo_pages)
         victim.hi_pages, victim.lo_pages = [], []
         self.active.remove(victim)
-        self._free_slots.append(victim.slot)
-        self._free_slots.sort()
+        heapq.heappush(self._free_slots, victim.slot)
         victim.slot = -1
         victim.state = WAITING
         victim.preemptions += 1

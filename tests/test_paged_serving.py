@@ -430,9 +430,15 @@ class TestScheduling:
             PagedServingEngine(params, CFG, serve,
                                paged_cfg(max_slots=2, prefill_chunk=16)),
             reqs, max_new)
+        # max_prefills=1 pins the PR-3 one-chunk-per-step schedule: with
+        # the unified default (2) both prompts prefill concurrently and the
+        # long one finishes before decode growth exhausts the pool, so the
+        # over-reservation scenario this regression test constructs never
+        # arises (tokens are schedule-invariant either way)
         pe = PagedServingEngine(
             params, CFG, serve,
-            paged_cfg(max_slots=2, prefill_chunk=16, num_lo_blocks=3))
+            paged_cfg(max_slots=2, prefill_chunk=16, num_lo_blocks=3,
+                      max_prefills=1))
         tight = run_engine(pe, reqs, max_new)
         assert pe.stats["preemptions"] > 0
         # the long prompt (uid 2) was evicted mid-prefill: it still had
