@@ -1,7 +1,11 @@
 """Jamba-1.5-Large 398B [arXiv:2403.19887; hf] — hybrid Mamba+attention
 1:7 interleave (1 attention layer per period of 8), MoE 16e top-2 every
 other layer.  The Mamba branch is implemented as Mamba2/SSD (state 128,
-headdim 64) — see DESIGN.md §Arch-applicability for the substitution note."""
+headdim 64) — see DESIGN.md §Arch-applicability for the substitution note.
+
+Serves first-class under `PagedServingEngine`: paged mixed-precision K/V
+for the attention layers + the slot-dense per-slot SSM state pool for the
+Mamba layers (`reduced()` is the hybrid row in BENCH_serving.json)."""
 import dataclasses
 from repro.models.config import ModelConfig
 

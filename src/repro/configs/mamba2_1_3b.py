@@ -1,5 +1,7 @@
 """Mamba2-1.3B [arXiv:2405.21060; unverified] — attention-free SSD
-(state-space duality), ssm_state=128."""
+(state-space duality), ssm_state=128.  Serves under `PagedServingEngine`
+pageless: the slot-dense SSM state pool is the whole cache, so slots are
+the only capacity dimension (no page reservation, no preemption)."""
 import dataclasses
 from repro.models.config import ModelConfig
 

@@ -112,6 +112,27 @@ accumulated across the logical-block axis in the revisited output ref.
 Unmapped blocks clamp to page 0 (the null page) and mask out via the
 per-slot length; HBM traffic per step is proportional to *allocated* pages,
 not the engine-wide ``max_seq`` reservation.
+
+Hybrid dense + paged layout
+---------------------------
+Hybrid stacks (Jamba-style Mamba + attention) split their serving state
+across two layouts inside one engine step:
+
+* **attention layers** — the paged pools above, written through the
+  combined ragged scatter and read by `paged_ragged_attention` /
+  `paged_decode_attention` exactly as in the attention-only case;
+* **Mamba layers** — a **slot-dense** state pool
+  (`serving/paged_kvcache.init_ssm_slots`): per slot, one f32
+  ``(heads, head_dim, ssm_state)`` state matrix and a bf16 conv tail.
+  Recurrent state is fixed-size per request, so paging buys nothing —
+  there is nothing proportional to sequence length to reclaim — and the
+  pool indexes by *slot*, with row ``num_slots`` as the null slot (the
+  scatter target for unused prefill chunk rows, mirroring the null page).
+  The SSM mixer itself stays XLA (`models/layers.ssd_chunked` carries
+  ``init_state`` across chunk spans; decode is a batched one-token
+  recurrence with inactive slots masked) — it reads no pages, so it needs
+  no Pallas treatment; the Mamba in/out projections still route through
+  the fused STaMP kernels above.
 """
 
 from repro.kernels.ops import (  # noqa: F401

@@ -38,8 +38,9 @@ def main():
     ap.add_argument("--engine", choices=("paged", "bucketed"),
                     default="paged",
                     help="paged = continuous batching over the block-paged "
-                         "cache; bucketed = lockstep slot batching "
-                         "(required for mamba/enc-dec stacks)")
+                         "cache + slot-dense SSM state pool (dense, MoE, "
+                         "hybrid and pure-SSM stacks); bucketed = lockstep "
+                         "slot batching (required for enc-dec stacks)")
     ap.add_argument("--execution", choices=("reference", "fused"),
                     default="reference",
                     help="STaMP linear path: pure-jnp reference or the "
@@ -62,6 +63,13 @@ def main():
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    if args.engine == "paged" and cfg.encoder_layers:
+        # fail at the CLI boundary with the fix in hand, not five frames
+        # deep in cache init: enc-dec cross-attention K/V is computed once
+        # from the encoder output and held dense per request — not paged.
+        ap.error(f"--engine paged does not support encoder-decoder stacks "
+                 f"({cfg.name}: encoder_layers={cfg.encoder_layers}); "
+                 f"run with --engine bucketed")
     params = lm.init_params(jax.random.PRNGKey(args.seed), cfg)
 
     dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=128, global_batch=4,

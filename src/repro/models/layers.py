@@ -468,14 +468,32 @@ def ssd_chunked(
     return y.astype(x.dtype), state
 
 
-def causal_conv1d(x: Array, w: Array, cache: Optional[Array] = None
-                  ) -> tuple[Array, Array]:
+def causal_conv1d(x: Array, w: Array, cache: Optional[Array] = None,
+                  lengths: Optional[Array] = None) -> tuple[Array, Array]:
     """Depthwise causal conv along seq.  x: (b, s, d); w: (width, d).
-    Returns (y, new_cache) where cache holds the last (width-1) inputs."""
+    Returns (y, new_cache) where cache holds the last (width-1) inputs.
+
+    ``lengths`` (b,) int32 marks each row's valid token count when ``x`` is
+    right-padded: the returned cache is then the (width-1) inputs ending at
+    the *valid* boundary, not the padded tail — the conv state a decode
+    step must continue from.  Outputs past a row's length are garbage the
+    caller discards (causality keeps valid outputs exact either way), and
+    ``lengths=None`` (or full rows) reproduces the unsliced tail
+    bit-for-bit."""
     width = w.shape[0]
     if cache is None:
         cache = jnp.zeros((x.shape[0], width - 1, x.shape[-1]), x.dtype)
     xp = jnp.concatenate([cache, x], axis=1)
     y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(width))
-    new_cache = xp[:, -(width - 1):] if width > 1 else cache
+    if width <= 1:
+        new_cache = cache
+    elif lengths is None:
+        new_cache = xp[:, -(width - 1):]
+    else:
+        # row r's tail = xp[r, lengths[r] : lengths[r] + width - 1]
+        # (xp coordinates: the cache prefix shifts x by width-1, so index
+        # `lengths` is the first of the last width-1 *valid* inputs);
+        # lengths <= s keeps the gather in range without clamping
+        idx = lengths[:, None] + jnp.arange(width - 1)[None, :]
+        new_cache = jnp.take_along_axis(xp, idx[:, :, None], axis=1)
     return jax.nn.silu(y), new_cache

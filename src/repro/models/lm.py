@@ -612,13 +612,11 @@ def attn_block_unified(
             _attn_out(p, attn_dec, x_dec, None)), new_entry
 
 
-def mamba_block(
-    p: dict, x: Array, cfg: ModelConfig, *,
-    mode: str, policy: Optional[ShardingPolicy],
-    stamp: Optional[StampConfig],
-    cache_entry: Optional[dict] = None,
-) -> tuple[Array, Optional[dict]]:
-    di, n, nh, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+def _mamba_in(p: dict, x: Array, cfg: ModelConfig,
+              stamp: Optional[StampConfig]) -> tuple[Array, Array, Array]:
+    """Norm + in-projection + split (shared by the prefill, decode and
+    unified paths so their dispatch rules cannot diverge)."""
+    di, n = cfg.d_inner, cfg.ssm_state
     h = L.rms_norm(x, p["ln1"].astype(x.dtype), cfg.norm_eps)
     if _use_fused(stamp, p["in_proj"]):
         # single-output fused kernel on the pre-mixer projection
@@ -627,47 +625,207 @@ def mamba_block(
         proj = _linear(_maybe_stamp(h, stamp), p["in_proj"])
     z, xbc, dt_raw = jnp.split(proj, [di, 2 * di + 2 * n], axis=-1)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    return z, xbc, dt
 
-    new_entry: Optional[dict] = None
-    if mode == "decode":
-        assert cache_entry is not None
-        conv_cache = cache_entry["conv"]
-        xp = jnp.concatenate([conv_cache.astype(x.dtype), xbc], axis=1)
-        w = p["conv_w"].astype(x.dtype)
-        y = sum(xp[:, i:i + 1] * w[i][None, None] for i in range(w.shape[0]))
-        xbc_c = jax.nn.silu(y)
-        new_conv = xp[:, 1:]
-        x_ssm, b_mat, c_mat = jnp.split(xbc_c, [di, di + n], axis=-1)
-        xh = x_ssm.reshape(*x_ssm.shape[:-1], nh, pd)
-        state = cache_entry["state"]
-        a = -jnp.exp(p["a_log"])
-        da = jnp.exp(dt[:, 0] * a[None])                      # (b, h)
-        upd = jnp.einsum("bhp,bn,bh->bhpn", xh[:, 0].astype(jnp.float32),
-                         b_mat[:, 0].astype(jnp.float32), dt[:, 0])
-        state = state * da[..., None, None] + upd
-        yh = jnp.einsum("bn,bhpn->bhp", c_mat[:, 0].astype(jnp.float32), state)
-        yh = yh[:, None] + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
-        new_entry = {"state": state, "conv": new_conv.astype(conv_cache.dtype)}
-    else:
-        xbc_c, conv_tail = L.causal_conv1d(xbc, p["conv_w"].astype(x.dtype))
-        x_ssm, b_mat, c_mat = jnp.split(xbc_c, [di, di + n], axis=-1)
-        xh = x_ssm.reshape(*x_ssm.shape[:-1], nh, pd)
-        yh, state = L.ssd_chunked(xh, dt, p["a_log"], b_mat, c_mat)
-        yh = yh.astype(jnp.float32) + p["d_skip"][None, None, :, None] * \
-            xh.astype(jnp.float32)
-        if mode == "prefill":
-            new_entry = {"state": state, "conv": conv_tail.astype(jnp.bfloat16)}
-    y = yh.reshape(*yh.shape[:-2], di).astype(x.dtype)
+
+def _mamba_out(p: dict, yh: Array, z: Array, x: Array, cfg: ModelConfig,
+               stamp: Optional[StampConfig], decode: bool) -> Array:
+    """Gate + norm + out-projection + residual (shared across paths)."""
+    y = yh.reshape(*yh.shape[:-2], cfg.d_inner).astype(x.dtype)
     y = y * jax.nn.silu(z)
     y = L.rms_norm(y, p["ssm_norm"].astype(x.dtype), cfg.norm_eps)
     # decode always passes stamp=None, so _use_fused is False there — the
     # same contract that keeps the in_proj dispatch above off the
     # sequence-transform kernel during decode
     if _use_fused(stamp, p["out_proj"]):
-        return x + L.stamp_fused_linear(y, p["out_proj"], None,
-                                        stamp), new_entry
-    y = _maybe_stamp(y, stamp) if mode != "decode" else y
-    return x + _linear(y, p["out_proj"]), new_entry
+        return x + L.stamp_fused_linear(y, p["out_proj"], None, stamp)
+    y = _maybe_stamp(y, stamp) if not decode else y
+    return x + _linear(y, p["out_proj"])
+
+
+def _mamba_step(p: dict, xbc: Array, dt: Array, state: Array,
+                conv_cache: Array, cfg: ModelConfig, dtype
+                ) -> tuple[Array, Array, Array]:
+    """One-token recurrence: ``xbc`` (b, 1, conv_dim), ``dt`` (b, 1, h),
+    ``state`` (b, h, p, n) f32, ``conv_cache`` (b, width-1, conv_dim).
+    Returns (yh (b, 1, h, p) f32, new_state, new_conv)."""
+    di, n, nh, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    xp = jnp.concatenate([conv_cache.astype(dtype), xbc], axis=1)
+    w = p["conv_w"].astype(dtype)
+    y = sum(xp[:, i:i + 1] * w[i][None, None] for i in range(w.shape[0]))
+    xbc_c = jax.nn.silu(y)
+    new_conv = xp[:, 1:]
+    x_ssm, b_mat, c_mat = jnp.split(xbc_c, [di, di + n], axis=-1)
+    xh = x_ssm.reshape(*x_ssm.shape[:-1], nh, pd)
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt[:, 0] * a[None])                          # (b, h)
+    upd = jnp.einsum("bhp,bn,bh->bhpn", xh[:, 0].astype(jnp.float32),
+                     b_mat[:, 0].astype(jnp.float32), dt[:, 0])
+    state = state * da[..., None, None] + upd
+    yh = jnp.einsum("bn,bhpn->bhp", c_mat[:, 0].astype(jnp.float32), state)
+    yh = yh[:, None] + p["d_skip"][None, None, :, None] * \
+        xh.astype(jnp.float32)
+    return yh, state, new_conv
+
+
+def _mamba_masked_step(p: dict, xbc: Array, dt: Array, state_all: Array,
+                       conv_all: Array, act: Array, cfg: ModelConfig, dtype
+                       ) -> tuple[Array, Array, Array]:
+    """Masked one-token recurrence over the slot-dense pool: compute the
+    update for every real slot row (``state_all``/``conv_all`` carry the
+    extra null-slot row, excluded here), then keep inactive rows' state
+    bit-for-bit — a slot with no RUNNING request (its token is a null pad)
+    must not advance the recurrence with garbage.  Shared by the two-call
+    decode step and the unified step's decode region so the parity tests
+    compare one implementation with itself."""
+    s_slots = act.shape[0]
+    state, conv_cache = state_all[:s_slots], conv_all[:s_slots]
+    yh, state_new, conv_new = _mamba_step(p, xbc, dt, state, conv_cache,
+                                          cfg, dtype)
+    state_new = jnp.where(act[:, None, None, None], state_new, state)
+    conv_new = jnp.where(act[:, None, None], conv_new,
+                         conv_cache.astype(dtype))
+    return yh, state_new, conv_new
+
+
+def _mamba_scan(p: dict, xbc: Array, dt: Array, cfg: ModelConfig, *,
+                conv_cache: Optional[Array], init_state: Optional[Array],
+                lengths: Optional[Array], dtype
+                ) -> tuple[Array, Array, Array]:
+    """Multi-token conv + SSD over a (possibly right-padded) span, stateful
+    across calls: ``conv_cache`` / ``init_state`` carry the recurrence in
+    from the previous chunk, ``lengths`` (b,) marks each row's valid token
+    count.  Masking ``dt`` to zero past the valid length makes the SSD
+    recurrence a *no-op* there (decay ``exp(0·a) = 1``, update weight 0),
+    so the returned ``state`` is exactly the state after the last valid
+    token — pad tokens never advance the recurrence (full rows multiply
+    ``dt`` by 1.0: bit-identical to the unmasked path).  ``conv_tail`` is
+    likewise sliced at the valid boundary.  Outputs past a row's length are
+    garbage the caller discards."""
+    di, n, nh, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    if lengths is not None:
+        mask = jnp.arange(xbc.shape[1])[None, :] < lengths[:, None]
+        dt = dt * mask[..., None].astype(dt.dtype)
+    xbc_c, conv_tail = L.causal_conv1d(xbc, p["conv_w"].astype(dtype),
+                                       cache=conv_cache, lengths=lengths)
+    x_ssm, b_mat, c_mat = jnp.split(xbc_c, [di, di + n], axis=-1)
+    xh = x_ssm.reshape(*x_ssm.shape[:-1], nh, pd)
+    yh, state = L.ssd_chunked(xh, dt, p["a_log"], b_mat, c_mat,
+                              init_state=init_state)
+    yh = yh.astype(jnp.float32) + p["d_skip"][None, None, :, None] * \
+        xh.astype(jnp.float32)
+    return yh, state, conv_tail
+
+
+def mamba_block(
+    p: dict, x: Array, cfg: ModelConfig, *,
+    mode: str, policy: Optional[ShardingPolicy],
+    stamp: Optional[StampConfig],
+    cache_entry: Optional[dict] = None, paged: Optional[dict] = None,
+    seq_lengths: Optional[Array] = None,
+) -> tuple[Array, Optional[dict]]:
+    z, xbc, dt = _mamba_in(p, x, cfg, stamp)
+
+    new_entry: Optional[dict] = None
+    if mode == "decode" and paged is not None:
+        # continuous batching: the cache entry is the slot-dense pool
+        # (num_slots + 1 rows; the last is the null slot)
+        assert cache_entry is not None
+        state_all, conv_all = cache_entry["state"], cache_entry["conv"]
+        yh, state_new, conv_new = _mamba_masked_step(
+            p, xbc, dt, state_all, conv_all, paged["dec_active"], cfg,
+            x.dtype)
+        s_slots = x.shape[0]
+        new_entry = {
+            "state": state_all.at[:s_slots].set(state_new),
+            "conv": conv_all.at[:s_slots].set(
+                conv_new.astype(conv_all.dtype)),
+        }
+    elif mode == "decode":
+        assert cache_entry is not None
+        yh, state, new_conv = _mamba_step(p, xbc, dt, cache_entry["state"],
+                                          cache_entry["conv"], cfg, x.dtype)
+        new_entry = {"state": state,
+                     "conv": new_conv.astype(cache_entry["conv"].dtype)}
+    elif mode == "prefill" and paged is not None:
+        # chunked prefill into the slot pool: the scan is *stateful* across
+        # chunk boundaries — conv tail + SSM state of the previous chunk
+        # come from this request's slot row, the chunk's final state goes
+        # back to it (two-call parity path; the unified step runs the same
+        # math in `mamba_block_unified`).
+        assert cache_entry is not None
+        state_all, conv_all = cache_entry["state"], cache_entry["conv"]
+        slot, valid = paged["slot"], paged["valid"]
+        if paged["first"]:           # static in the two-call pair
+            conv0 = jnp.zeros((1,) + conv_all.shape[1:], x.dtype)
+            state0 = jnp.zeros((1,) + state_all.shape[1:], jnp.float32)
+        else:
+            conv0 = conv_all[slot][None].astype(x.dtype)
+            state0 = state_all[slot][None]
+        yh, state_f, conv_tail = _mamba_scan(
+            p, xbc, dt, cfg, conv_cache=conv0, init_state=state0,
+            lengths=jnp.reshape(valid, (1,)), dtype=x.dtype)
+        new_entry = {
+            "state": state_all.at[slot].set(state_f[0]),
+            "conv": conv_all.at[slot].set(conv_tail[0].astype(conv_all.dtype)),
+        }
+    else:
+        yh, state, conv_tail = _mamba_scan(
+            p, xbc, dt, cfg, conv_cache=None, init_state=None,
+            lengths=seq_lengths, dtype=x.dtype)
+        if mode == "prefill":
+            new_entry = {"state": state, "conv": conv_tail.astype(jnp.bfloat16)}
+    return _mamba_out(p, yh, z, x, cfg, stamp, decode=mode == "decode"), \
+        new_entry
+
+
+def mamba_block_unified(
+    p: dict, x: tuple, cfg: ModelConfig, *,
+    stamp: Optional[StampConfig], cache_entry: dict, paged: dict,
+) -> tuple[tuple, dict]:
+    """One Mamba block of the **unified ragged step** over the slot-dense
+    state pool: the prefill chunk rows ``(n_pf, C, d)`` run the stateful
+    chunked scan (per span — conv tail + SSM state gathered from each
+    span's slot row, first chunks start from zeros via the traced
+    ``pf_first`` mask, ``dt`` masked past the valid length so pads never
+    advance the recurrence) and the decode slots ``(S, 1, d)`` advance the
+    one-token recurrence with inactive slots masked — in one program, with
+    ONE write per state array: the masked decode update covers the slot
+    array, then the chunk rows scatter their final state at their own slot
+    (a request is either prefilling or running, never both, so the writes
+    are disjoint; unused chunk rows scatter to the null slot — row ``S`` —
+    exactly as masked K/V writes route to the null page)."""
+    x_pf, x_dec = x
+    state_all, conv_all = cache_entry["state"], cache_entry["conv"]
+    s_slots = x_dec.shape[0]
+
+    # ---- prefill region: STaMP path, stateful per-span scan ----
+    z_pf, xbc_pf, dt_pf = _mamba_in(p, x_pf, cfg, stamp)
+    pf_slots = paged["pf_slots"]                   # (n_pf,), dummies -> S
+    first = paged["pf_first"]
+    conv0 = jnp.where(first[:, None, None], 0.0,
+                      conv_all[pf_slots].astype(x_pf.dtype)
+                      ).astype(x_pf.dtype)
+    state0 = jnp.where(first[:, None, None, None], 0.0, state_all[pf_slots])
+    yh_pf, state_f, conv_tail = _mamba_scan(
+        p, xbc_pf, dt_pf, cfg, conv_cache=conv0, init_state=state0,
+        lengths=paged["pf_valid"], dtype=x_pf.dtype)
+
+    # ---- decode region: transform-free one-token recurrence, masked ----
+    z_dec, xbc_dec, dt_dec = _mamba_in(p, x_dec, cfg, None)
+    yh_dec, state_new, conv_new = _mamba_masked_step(
+        p, xbc_dec, dt_dec, state_all, conv_all, paged["dec_active"], cfg,
+        x_dec.dtype)
+
+    st = state_all.at[:s_slots].set(state_new)
+    st = st.at[pf_slots].set(state_f)
+    cv = conv_all.at[:s_slots].set(conv_new.astype(conv_all.dtype))
+    cv = cv.at[pf_slots].set(conv_tail.astype(conv_all.dtype))
+    new_entry = {"state": st, "conv": cv}
+
+    return (_mamba_out(p, yh_pf, z_pf, x_pf, cfg, stamp, decode=False),
+            _mamba_out(p, yh_dec, z_dec, x_dec, cfg, None, decode=True)), \
+        new_entry
 
 
 def ffn_block(p: dict, x: Array, spec: LayerSpec, cfg: ModelConfig, *,
@@ -722,15 +880,19 @@ def apply_block(spec: LayerSpec, p: dict, x: Array, cfg: ModelConfig, **kw
     if kw["mode"] == "unified":
         # unified ragged step: x is the (prefill_rows, decode_slots) pair;
         # prefill keeps the STaMP path, decode the transform-free one —
-        # per region, inside one program
-        if spec.mixer != "attn":
-            raise NotImplementedError(
-                "unified step covers attention-only decoder stacks "
-                "(matching init_paged_cache)")
-        x, entry = attn_block_unified(p, x, cfg, stamp=stamp,
-                                      kv_cfg=kw["kv_cfg"],
-                                      cache_entry=kw["cache_entry"],
-                                      paged=kw["paged"])
+        # per region, inside one program.  Attention mixes through the
+        # paged pools, Mamba through the slot-dense state pool.
+        if spec.mixer == "attn":
+            x, entry = attn_block_unified(p, x, cfg, stamp=stamp,
+                                          kv_cfg=kw["kv_cfg"],
+                                          cache_entry=kw["cache_entry"],
+                                          paged=kw["paged"])
+        elif spec.mixer == "mamba":
+            x, entry = mamba_block_unified(p, x, cfg, stamp=stamp,
+                                           cache_entry=kw["cache_entry"],
+                                           paged=kw["paged"])
+        else:
+            entry = None
         x_pf = ffn_block(p, x[0], spec, cfg, stamp=stamp)
         x_dec = ffn_block(p, x[1], spec, cfg, stamp=None)
         return (x_pf, x_dec), entry
@@ -747,7 +909,9 @@ def apply_block(spec: LayerSpec, p: dict, x: Array, cfg: ModelConfig, **kw
     elif spec.mixer == "mamba":
         x, entry = mamba_block(p, x, cfg, mode=kw["mode"],
                                policy=kw.get("policy"), stamp=stamp,
-                               cache_entry=kw.get("cache_entry"))
+                               cache_entry=kw.get("cache_entry"),
+                               paged=kw.get("paged"),
+                               seq_lengths=kw.get("seq_lengths"))
     else:
         entry = None
     x = ffn_block(p, x, spec, cfg, stamp=stamp)
@@ -767,12 +931,20 @@ def run_stack(
     cache: Optional[dict] = None, pos_scalar: Optional[Array] = None,
     enc_out: Optional[Array] = None, causal: bool = True, remat: bool = True,
     cache_capacity: Optional[int] = None, paged: Optional[dict] = None,
+    seq_lengths: Optional[Array] = None,
 ) -> tuple[Array, Optional[dict]]:
-    """Run prologue (unrolled) + periods (scanned).  Returns (x, cache)."""
+    """Run prologue (unrolled) + periods (scanned).  Returns (x, cache).
+
+    ``seq_lengths`` (b,) marks per-row valid prompt lengths for
+    right-padded prefill: attention is pad-safe by construction (causal
+    mask + per-slot logit reads), but the Mamba recurrence is sequential —
+    without the mask, pad tokens after a short prompt would keep advancing
+    the SSM state the decode steps then continue from."""
     pro, period, nper = cfg.layer_plan()
     kw = dict(mode=mode, positions=positions, policy=policy, stamp=stamp,
               kv_cfg=kv_cfg, pos_scalar=pos_scalar, enc_out=enc_out,
-              causal=causal, cache_capacity=cache_capacity, paged=paged)
+              causal=causal, cache_capacity=cache_capacity, paged=paged,
+              seq_lengths=seq_lengths)
 
     new_pro_cache = {}
     for i, spec in enumerate(pro):
@@ -915,7 +1087,8 @@ def model_hidden(params, batch: dict, cfg: ModelConfig, *,
                  mode: str, policy, stamp=None,
                  kv_cfg=KV.KVCacheConfig(quantized=False),
                  remat: bool = True,
-                 cache_capacity: Optional[int] = None
+                 cache_capacity: Optional[int] = None,
+                 seq_lengths: Optional[Array] = None
                  ) -> tuple[Array, Optional[dict], Array]:
     """Shared train/prefill forward.  Returns (hidden, cache, labels)."""
     # non-decode entry: clear the process-global decode-matmul flag so a
@@ -940,7 +1113,8 @@ def model_hidden(params, batch: dict, cfg: ModelConfig, *,
     x, cache = run_stack(params, x, cfg, mode=mode, positions=positions,
                          policy=policy, stamp=stamp, kv_cfg=kv_cfg,
                          enc_out=enc_out, remat=remat,
-                         cache_capacity=cache_capacity)
+                         cache_capacity=cache_capacity,
+                         seq_lengths=seq_lengths)
     x = L.rms_norm(x, params["final_norm"].astype(x.dtype), cfg.norm_eps)
     return x, cache, labels
 
@@ -961,12 +1135,19 @@ def prefill(params, batch: dict, cfg: ModelConfig,
 
     ``last_pos`` (b,) selects each row's logit position — right-padded
     batches read the logits at their true last prompt token instead of the
-    final (pad) column.  Default: the last position for every row.
+    final (pad) column.  Default: the last position for every row.  When
+    given, it also masks the Mamba recurrence past each row's length
+    (``seq_lengths = last_pos + 1``): attention never sees pad tokens
+    (causal), but an SSM state *would* keep absorbing them — decode must
+    continue from the state at the true last token.
     """
+    seq_lengths = None if last_pos is None else \
+        jnp.asarray(last_pos, jnp.int32) + 1
     x, cache, _ = model_hidden(params, batch, cfg, mode="prefill",
                                policy=policy, stamp=serve.stamp,
                                kv_cfg=serve.kv, remat=False,
-                               cache_capacity=serve.cache_capacity)
+                               cache_capacity=serve.cache_capacity,
+                               seq_lengths=seq_lengths)
     if last_pos is None:
         x_last = x[:, -1:]
     else:
@@ -1041,26 +1222,48 @@ def init_cache(cfg: ModelConfig, batch: int, seq: int,
 # ---------------------------------------------------------------------------
 
 
-def init_paged_cache(cfg: ModelConfig, pcfg: "PKV.PagedCacheConfig") -> dict:
-    """Zero page pools for every attention position.  Block ids are shared
-    across layer positions (one allocation covers the whole stack), so each
-    position gets its own pool arrays but the same geometry."""
+def init_paged_cache(cfg: ModelConfig, pcfg: "PKV.PagedCacheConfig",
+                     num_slots: Optional[int] = None) -> dict:
+    """Zero cache state for every stateful layer position: page pools for
+    attention (block ids shared across layer positions — one allocation
+    covers the whole stack, so each position gets its own pool arrays but
+    the same geometry) and, for hybrid / pure-SSM stacks, slot-dense
+    per-slot conv + SSM state (``num_slots`` = the engine's decode slot
+    count; row ``num_slots`` is the null slot — see
+    `PKV.init_ssm_slots`)."""
     pro, period, nper = cfg.layer_plan()
     hd, kvh = cfg.resolved_head_dim, cfg.num_kv_heads
-    for spec in list(period) + list(pro):
-        if spec.mixer == "mamba" or cfg.encoder_layers:
-            raise NotImplementedError(
-                "paged serving covers attention-only decoder stacks; "
-                "mamba/enc-dec states are slot-dense (use the bucketed "
-                "engine)")
+    if cfg.encoder_layers:
+        raise NotImplementedError(
+            "paged serving does not cover encoder-decoder stacks: the "
+            "cross-attention K/V is computed once from the encoder output "
+            "and held dense per request — serve these through "
+            "BucketedEngine (--engine bucketed)")
+    specs = list(period) + list(pro)
+    if any(s.mixer == "mamba" for s in specs) and num_slots is None:
+        raise ValueError(
+            "hybrid/SSM stacks hold slot-dense SSM state: init_paged_cache "
+            "needs num_slots (the engine's max_slots) to size the per-slot "
+            "state pool")
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+
+    def ssm_pool(periods):
+        return PKV.init_ssm_slots(periods, num_slots, cfg.conv_width,
+                                  conv_dim, cfg.ssm_heads,
+                                  cfg.ssm_head_dim, cfg.ssm_state)
+
     cache: dict = {}
     for j, spec in enumerate(period):
         if spec.mixer == "attn":
             cache[str(j)] = PKV.init_pools(nper, kvh, hd, pcfg)
+        elif spec.mixer == "mamba":
+            cache[str(j)] = ssm_pool(nper)
     for i, spec in enumerate(pro):
         if spec.mixer == "attn":
             cache[f"pro{i}"] = jax.tree.map(
                 lambda a: a[0], PKV.init_pools(1, kvh, hd, pcfg))
+        elif spec.mixer == "mamba":
+            cache[f"pro{i}"] = jax.tree.map(lambda a: a[0], ssm_pool(1))
     return cache
 
 
@@ -1068,7 +1271,7 @@ def paged_prefill_chunk(params, pools: dict, tokens: Array, start: Array,
                         hi_table: Array, lo_table: Array, pages: Array,
                         offsets: Array, is_hi: Array, last_index: Array,
                         cfg: ModelConfig, serve: ServeConfig,
-                        first: bool,
+                        first: bool, slot: Optional[Array] = None,
                         policy: Optional[ShardingPolicy] = None
                         ) -> tuple[Array, dict]:
     """One prefill chunk of one request into the paged cache.
@@ -1085,7 +1288,10 @@ def paged_prefill_chunk(params, pools: dict, tokens: Array, start: Array,
     chunk-local index of the prompt's final token (its logits are the
     request's first-token distribution — only meaningful on the last
     chunk); ``first``: static — the no-prefix chunk takes the same
-    flash-attention path as the bucketed prefill.
+    flash-attention path as the bucketed prefill; ``slot``: scalar int32
+    decode-slot index of the request — Mamba layers carry their conv/SSM
+    state across chunk boundaries through that row of the slot-dense state
+    pool (required for hybrid/SSM stacks, ignored by attention-only ones).
 
     STaMP's sequence transform is applied per chunk (the transform window
     is the chunk, not the whole prompt): identical to the bucketed engine
@@ -1102,7 +1308,11 @@ def paged_prefill_chunk(params, pools: dict, tokens: Array, start: Array,
     positions = (start + jnp.arange(c))[None, :]
     paged = {"cfg": serve.paged, "hi_table": hi_table, "lo_table": lo_table,
              "pages": pages, "offsets": offsets, "is_hi": is_hi,
-             "start": start, "first": first}
+             "start": start, "first": first,
+             # slot-dense SSM state routing (hybrid stacks): the chunk's
+             # valid token count is last_index + 1 on every chunk (final
+             # chunks end at the prompt's last token by construction)
+             "slot": slot, "valid": last_index + 1}
     x, new_pools = run_stack(params, x, cfg, mode="prefill",
                              positions=positions, policy=policy,
                              stamp=serve.stamp, kv_cfg=serve.kv,
@@ -1115,8 +1325,9 @@ def paged_prefill_chunk(params, pools: dict, tokens: Array, start: Array,
 
 def paged_unified_step(params, pools: dict, pf_tokens: Array,
                        pf_start: Array, pf_length: Array, pf_first: Array,
-                       pf_last_index: Array, dec_tokens: Array,
-                       dec_positions: Array, hi_table: Array,
+                       pf_last_index: Array, pf_slots: Array,
+                       dec_tokens: Array, dec_positions: Array,
+                       dec_active: Array, hi_table: Array,
                        lo_table: Array, pages: Array, offsets: Array,
                        is_hi: Array, cfg: ModelConfig, serve: ServeConfig,
                        policy: Optional[ShardingPolicy] = None
@@ -1148,7 +1359,15 @@ def paged_unified_step(params, pools: dict, pf_tokens: Array,
     program);
     ``pf_last_index``: (n_pf,) chunk-local index whose logits are the
     request's next-token distribution (meaningful on final chunks);
+    ``pf_slots``: (n_pf,) decode-slot index per chunk row — Mamba layers
+    carry conv/SSM state across chunk boundaries through that row of the
+    slot-dense state pool (unused dummy rows point at the null slot, index
+    ``S``);
     ``dec_tokens / dec_positions``: (S,) as in `paged_decode_step`;
+    ``dec_active``: (S,) bool — True where a RUNNING request occupies the
+    slot; where False the slot's (null) token must leave the per-slot
+    conv/SSM state untouched (attention needs no mask: its null-page
+    writes are never read);
     ``hi_table / lo_table``: (n_pf + S, ·) span-ordered block tables —
     chunk spans first (each row is that request's own table), then the
     slot array;
@@ -1161,7 +1380,7 @@ def paged_unified_step(params, pools: dict, pf_tokens: Array,
     if n_pf == 0:
         dec_logits, new_pools = paged_decode_step(
             params, pools, dec_tokens, dec_positions, hi_table, lo_table,
-            pages, offsets, is_hi, cfg, serve, policy)
+            pages, offsets, is_hi, cfg, serve, dec_active, policy)
         return (jnp.zeros((0, dec_logits.shape[-1]), jnp.float32),
                 dec_logits, new_pools)
     assert policy is None, "unified step is single-device for now"
@@ -1188,7 +1407,10 @@ def paged_unified_step(params, pools: dict, pf_tokens: Array,
              "pf_positions": pos_pf, "pf_start": pf_start,
              "pf_first": pf_first, "dec_positions": dec_positions,
              "dec_lengths": dec_positions + 1,
-             "pages": pages, "offsets": offsets, "is_hi": is_hi}
+             "pages": pages, "offsets": offsets, "is_hi": is_hi,
+             # slot-dense SSM state routing (hybrid stacks)
+             "pf_slots": pf_slots, "pf_valid": pf_length - pf_start,
+             "dec_active": dec_active}
     x, new_pools = run_stack(params, (x_pf, x_dec), cfg, mode="unified",
                              positions=None, policy=policy,
                              stamp=serve.stamp, kv_cfg=serve.kv,
@@ -1210,6 +1432,7 @@ def paged_decode_step(params, pools: dict, tokens: Array, positions: Array,
                       hi_table: Array, lo_table: Array, pages: Array,
                       offsets: Array, is_hi: Array,
                       cfg: ModelConfig, serve: ServeConfig,
+                      active: Optional[Array] = None,
                       policy: Optional[ShardingPolicy] = None
                       ) -> tuple[Array, dict]:
     """One decode step for the whole slot array against the paged cache.
@@ -1223,15 +1446,21 @@ def paged_decode_step(params, pools: dict, tokens: Array, positions: Array,
     is_hi``: (S,) write targets (inactive slots routed to the null page).
     Requests join and leave the slot array between steps — shapes stay
     static, inactivity is expressed entirely through the host-built index
-    arrays and the per-slot lengths.
+    arrays and the per-slot lengths — except for Mamba layers, whose
+    recurrence has no null page to hide behind: ``active`` (S,) bool masks
+    the per-slot conv/SSM state update so an inactive slot's state is
+    left untouched rather than advanced with a garbage token (defaults to
+    all-active for the attention-only callers that predate it).
     """
     set_fused_cache_attention(serve.fused_cache_attention)
     set_fused_decode_matmul(serve.fused_decode_matmul)
     compute_dtype = jnp.bfloat16
     x = _embed(params, tokens[:, None], compute_dtype)
+    if active is None:
+        active = jnp.ones(tokens.shape, bool)
     paged = {"cfg": serve.paged, "hi_table": hi_table, "lo_table": lo_table,
              "pages": pages, "offsets": offsets, "is_hi": is_hi,
-             "lengths": positions + 1}
+             "lengths": positions + 1, "dec_active": active}
     x, new_pools = run_stack(params, x, cfg, mode="decode",
                              positions=positions[:, None], policy=policy,
                              stamp=None, kv_cfg=serve.kv, cache=pools,

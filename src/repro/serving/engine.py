@@ -125,7 +125,8 @@ class _EngineBase:
 
 class BucketedEngine(_EngineBase):
     """Lockstep slot-batching (the pre-paging design, kept as the simple
-    baseline and for stateful mixers the paged engine doesn't cover)."""
+    baseline, the numerics oracle, and the only engine covering enc-dec
+    cross-attention caches)."""
 
     def __init__(self, params, cfg: ModelConfig, serve: lm.ServeConfig,
                  ecfg: Optional[EngineConfig] = None):
@@ -227,6 +228,17 @@ class PagedServingEngine(_EngineBase):
     no boundary alignment) — as the parity oracle and A/B baseline.
     ``events`` records the admission / join / leave / preemption trace in
     a ring buffer capped at ``max_events``.
+
+    **Hybrid and pure-SSM stacks are first-class**: Mamba layers keep
+    their recurrent state in a slot-dense pool next to the paged K/V
+    (fixed bytes per slot — `stats` surface it via the scheduler's
+    ``state_bytes_per_slot``), prefill chunks carry conv/SSM state across
+    chunk boundaries through the request's slot row, decode advances the
+    recurrence with inactive slots masked, and preemption swaps the slot
+    state to host together with the victim's pages (bit-identical
+    resume).  A stack with no attention layers skips page reservation
+    entirely — slots are then the only capacity dimension.  Enc-dec
+    stacks still need :class:`BucketedEngine`.
     """
 
     def __init__(self, params, cfg: ModelConfig, serve: lm.ServeConfig,
@@ -250,7 +262,17 @@ class PagedServingEngine(_EngineBase):
             quant=quant)
         self.serve = dataclasses.replace(self.serve, paged=self.pcfg,
                                          cache_capacity=None)
-        self.pools = lm.init_paged_cache(cfg, self.pcfg)
+        # stack composition decides the state families: attention layers
+        # read/write the page pools, mamba layers the slot-dense SSM pool
+        # (fixed-size per slot, no paging — its null slot is row max_slots).
+        # Enc-dec stacks are the one remaining gap (init_paged_cache raises
+        # the actionable NotImplementedError before any device allocation).
+        pro, period, _ = cfg.layer_plan()
+        specs = list(period) + list(pro)
+        self._has_attn = any(s.mixer == "attn" for s in specs)
+        self._has_mamba = any(s.mixer == "mamba" for s in specs)
+        self.pools = lm.init_paged_cache(cfg, self.pcfg,
+                                         num_slots=e.max_slots)
         if e.step_mode not in ("unified", "two_call"):
             raise ValueError(f"unknown step_mode {e.step_mode!r}")
         unified = e.step_mode == "unified"
@@ -259,7 +281,10 @@ class PagedServingEngine(_EngineBase):
                 max_slots=e.max_slots, prefill_chunk=e.prefill_chunk,
                 max_prefills=max(e.max_prefills, 1) if unified else 1,
                 transform_window=_transform_window(
-                    self.serve.stamp, e.prefill_chunk) if unified else 1),
+                    self.serve.stamp, e.prefill_chunk) if unified else 1,
+                state_bytes_per_slot=PKV.ssm_state_bytes_per_slot(
+                    self.pools),
+                needs_kv_pages=self._has_attn),
             self.pcfg, swap_out=self._swap_out, swap_in=self._swap_in)
         self._requests: Dict[int, Request] = {}
         # (step, kind, payload) ring buffer — unbounded growth over a long
@@ -269,7 +294,7 @@ class PagedServingEngine(_EngineBase):
             maxlen=e.max_events if e.max_events > 0 else None)
         self.stats = {"steps": 0, "decode_tokens": 0, "prefill_chunks": 0,
                       "preemptions": 0, "device_dispatches": 0,
-                      "recompiles": 0}
+                      "recompiles": 0, "swap_bytes": 0}
         self._step_i = 0
         # shape buckets for the chunk-row count: 0 (all-decode), powers of
         # two, and max_prefills — the full set of compiled variants
@@ -285,24 +310,26 @@ class PagedServingEngine(_EngineBase):
         cfgm, serve_p = self.cfg, self.serve
         if unified:
             self._unified = jax.jit(
-                lambda p, pools, pt, ps, pln, pf, pli, dt, dp, ht, lt, pg,
-                off, ih:
-                lm.paged_unified_step(p, pools, pt, ps, pln, pf, pli, dt,
-                                      dp, ht, lt, pg, off, ih, cfgm,
-                                      serve_p))
+                lambda p, pools, pt, ps, pln, pf, pli, psl, dt, dp, da, ht,
+                lt, pg, off, ih:
+                lm.paged_unified_step(p, pools, pt, ps, pln, pf, pli, psl,
+                                      dt, dp, da, ht, lt, pg, off, ih,
+                                      cfgm, serve_p))
         else:
             self._prefill_first = jax.jit(
-                lambda p, pools, t, s, ht, lt, pg, off, ih, li:
+                lambda p, pools, t, s, ht, lt, pg, off, ih, li, sl:
                 lm.paged_prefill_chunk(p, pools, t, s, ht, lt, pg, off, ih,
-                                       li, cfgm, serve_p, first=True))
+                                       li, cfgm, serve_p, first=True,
+                                       slot=sl))
             self._prefill_cont = jax.jit(
-                lambda p, pools, t, s, ht, lt, pg, off, ih, li:
+                lambda p, pools, t, s, ht, lt, pg, off, ih, li, sl:
                 lm.paged_prefill_chunk(p, pools, t, s, ht, lt, pg, off, ih,
-                                       li, cfgm, serve_p, first=False))
+                                       li, cfgm, serve_p, first=False,
+                                       slot=sl))
             self._decode = jax.jit(
-                lambda p, pools, t, pos, ht, lt, pg, off, ih:
+                lambda p, pools, t, pos, ht, lt, pg, off, ih, act:
                 lm.paged_decode_step(p, pools, t, pos, ht, lt, pg, off, ih,
-                                     cfgm, serve_p))
+                                     cfgm, serve_p, active=act))
 
     def compile_count(self) -> int:
         """Compiled variants of the unified step this engine has built
@@ -321,14 +348,20 @@ class PagedServingEngine(_EngineBase):
             max_new_tokens=req.max_new_tokens, arrival=req.uid))
 
     def _swap_out(self, sreq: SchedRequest) -> None:
+        # slot still assigned here (the scheduler swaps before it frees),
+        # so the per-slot SSM state rides along with the pages
         sreq.swapped = PKV.extract_pages(self.pools, sreq.hi_pages,
-                                         sreq.lo_pages)
+                                         sreq.lo_pages, slot=sreq.slot)
         self.events.append((self._step_i, "preempt", sreq.uid))
         self.stats["preemptions"] += 1
+        self.stats["swap_bytes"] += PKV.swapped_bytes(sreq.swapped)
 
     def _swap_in(self, sreq: SchedRequest) -> None:
+        # sreq.slot is the NEW placement — SSM state restores there, pages
+        # at whatever ids the allocator handed back (tables indirect)
         self.pools = PKV.insert_pages(self.pools, sreq.swapped,
-                                      sreq.hi_pages, sreq.lo_pages)
+                                      sreq.hi_pages, sreq.lo_pages,
+                                      slot=sreq.slot)
         self.events.append((self._step_i, "resume", sreq.uid))
 
     # ------------------------------------------------------------------
@@ -401,6 +434,10 @@ class PagedServingEngine(_EngineBase):
         pf_length = np.zeros((n_pf,), np.int32)
         pf_first = np.zeros((n_pf,), bool)
         pf_last = np.zeros((n_pf,), np.int32)
+        # dummy chunk rows park on the null slot (index max_slots): their
+        # SSM-state scatter lands there the way masked K/V writes land on
+        # the null page
+        pf_slots = np.full((n_pf,), s, np.int32)
         pages = np.zeros((n_pf * c_len + s,), np.int32)
         offs = np.zeros((n_pf * c_len + s,), np.int32)
         ishi = np.zeros((n_pf * c_len + s,), bool)
@@ -411,22 +448,28 @@ class PagedServingEngine(_EngineBase):
             pf_start[i] = start
             pf_length[i] = end
             pf_first[i] = start == 0
+            pf_slots[i] = sreq.slot
             # the chunk's last valid row — on a final chunk that is the
             # prompt's last token, whose logits are the first-token
             # distribution (pf_logits of non-final chunks are discarded)
             pf_last[i] = valid - 1
             base = i * c_len
-            for t in range(valid):
-                pages[base + t], offs[base + t], ishi[base + t] = \
-                    self._write_target(sreq, start + t)
+            if self._has_attn:
+                for t in range(valid):
+                    pages[base + t], offs[base + t], ishi[base + t] = \
+                        self._write_target(sreq, start + t)
         dec_tokens = np.zeros((s,), np.int32)
         dec_pos = np.zeros((s,), np.int32)
+        dec_active = np.zeros((s,), bool)
         base = n_pf * c_len
         for sreq in plan.decode:
             dec_tokens[sreq.slot] = sreq.generated[-1]
             dec_pos[sreq.slot] = sreq.pos
-            pages[base + sreq.slot], offs[base + sreq.slot], \
-                ishi[base + sreq.slot] = self._write_target(sreq, sreq.pos)
+            dec_active[sreq.slot] = True
+            if self._has_attn:
+                pages[base + sreq.slot], offs[base + sreq.slot], \
+                    ishi[base + sreq.slot] = \
+                    self._write_target(sreq, sreq.pos)
         # span-ordered tables: one row per chunk span (that request's own
         # table), then the whole slot array for the decode spans
         ht_np, lt_np = self._tables_np([w.sreq for w in works] + plan.decode)
@@ -445,7 +488,8 @@ class PagedServingEngine(_EngineBase):
             self.params, self.pools, jnp.asarray(pf_tokens),
             jnp.asarray(pf_start), jnp.asarray(pf_length),
             jnp.asarray(pf_first), jnp.asarray(pf_last),
-            jnp.asarray(dec_tokens), jnp.asarray(dec_pos),
+            jnp.asarray(pf_slots), jnp.asarray(dec_tokens),
+            jnp.asarray(dec_pos), jnp.asarray(dec_active),
             jnp.asarray(span_ht), jnp.asarray(span_lt),
             jnp.asarray(pages), jnp.asarray(offs), jnp.asarray(ishi))
         self.stats["device_dispatches"] += 1
@@ -487,8 +531,10 @@ class PagedServingEngine(_EngineBase):
         pages = np.zeros((e.prefill_chunk,), np.int32)
         offs = np.zeros((e.prefill_chunk,), np.int32)
         ishi = np.zeros((e.prefill_chunk,), bool)
-        for i in range(valid):
-            pages[i], offs[i], ishi[i] = self._write_target(sreq, start + i)
+        if self._has_attn:
+            for i in range(valid):
+                pages[i], offs[i], ishi[i] = \
+                    self._write_target(sreq, start + i)
         ht_all, lt_all = self._tables([sreq])
         slot_sel = np.asarray([sreq.slot], np.int32)
         ht, lt = ht_all[slot_sel], lt_all[slot_sel]
@@ -498,7 +544,7 @@ class PagedServingEngine(_EngineBase):
         logits, self.pools = fn(
             self.params, self.pools, jnp.asarray(chunk),
             jnp.int32(start), ht, lt, jnp.asarray(pages), jnp.asarray(offs),
-            jnp.asarray(ishi), jnp.int32(last_index))
+            jnp.asarray(ishi), jnp.int32(last_index), jnp.int32(sreq.slot))
         self.stats["device_dispatches"] += 1
         sreq.pos = end
         self.stats["prefill_chunks"] += 1
@@ -519,19 +565,22 @@ class PagedServingEngine(_EngineBase):
         s = e.max_slots
         tokens = np.zeros((s,), np.int32)
         positions = np.zeros((s,), np.int32)
+        active = np.zeros((s,), bool)
         pages = np.zeros((s,), np.int32)
         offs = np.zeros((s,), np.int32)
         ishi = np.zeros((s,), bool)
         for sreq in running:
             tokens[sreq.slot] = sreq.generated[-1]
             positions[sreq.slot] = sreq.pos
-            pages[sreq.slot], offs[sreq.slot], ishi[sreq.slot] = \
-                self._write_target(sreq, sreq.pos)
+            active[sreq.slot] = True
+            if self._has_attn:
+                pages[sreq.slot], offs[sreq.slot], ishi[sreq.slot] = \
+                    self._write_target(sreq, sreq.pos)
         ht, lt = self._tables(running)
         logits, self.pools = self._decode(
             self.params, self.pools, jnp.asarray(tokens),
             jnp.asarray(positions), ht, lt, jnp.asarray(pages),
-            jnp.asarray(offs), jnp.asarray(ishi))
+            jnp.asarray(offs), jnp.asarray(ishi), jnp.asarray(active))
         self.stats["device_dispatches"] += 1
         logits = np.asarray(logits)
         self.events.append((self._step_i, "decode",

@@ -39,6 +39,17 @@ whole stack, vLLM-style), which keeps the allocator — a host-side numpy free
 list — out of the jit'd step entirely: the engine turns (slot, position) into
 (page, offset) arrays on the host and the device code only ever sees dense
 int32 indices.
+
+**Hybrid stacks (Mamba + attention)** add a second, *slot-dense* state
+family next to the page pools: a Mamba layer's recurrent state is
+fixed-size per request — one ``(heads, head_dim, ssm_state)`` f32 state
+matrix plus a ``(conv_width - 1, conv_dim)`` bf16 conv tail — so it needs
+no paging at all.  :func:`init_ssm_slots` allocates it per *slot*
+(``num_slots + 1`` rows; the extra row is the **null slot**, the scatter
+target for unused prefill chunk rows — the slot-indexed twin of the null
+page).  Preemption swaps the per-slot state with the victim's pages
+(`extract_pages` / `insert_pages` take the slot), so a hybrid resume is
+bit-identical end to end: pages AND recurrence state restored exactly.
 """
 
 from __future__ import annotations
@@ -117,6 +128,56 @@ def init_pools(periods: int, kv_heads: int, head_dim: int,
 
 def pool_bytes(entry: dict) -> int:
     return sum(int(a.size) * a.dtype.itemsize for a in entry.values())
+
+
+# ---------------------------------------------------------------------------
+# slot-dense SSM state pool (hybrid / pure-SSM stacks)
+# ---------------------------------------------------------------------------
+
+
+def init_ssm_slots(periods: int, num_slots: int, conv_width: int,
+                   conv_dim: int, heads: int, head_dim: int,
+                   state: int) -> dict:
+    """Per-slot recurrent state for one Mamba position in the period
+    pattern.  Unlike K/V, SSM state is **fixed-size per request** — one
+    ``(heads, head_dim, state)`` matrix and a ``(conv_width - 1,
+    conv_dim)`` conv tail — so it lives slot-dense, not paged.  Row
+    ``num_slots`` (the last one) is the **null slot**: never assigned to a
+    request, it absorbs the scatter from unused prefill chunk rows the way
+    the null page absorbs masked K/V writes, so the unified step needs no
+    validity branch on its state write either."""
+    return {
+        "state": jnp.zeros((periods, num_slots + 1, heads, head_dim, state),
+                           jnp.float32),
+        "conv": jnp.zeros((periods, num_slots + 1, conv_width - 1, conv_dim),
+                          jnp.bfloat16),
+    }
+
+
+def is_ssm_entry(entry: dict) -> bool:
+    return "state" in entry
+
+
+def ssm_state_bytes_per_slot(pools: dict) -> int:
+    """Fixed HBM bytes ONE slot pins across every Mamba layer (the
+    admission-time cost of a hybrid request, independent of its length —
+    the scheduler's slot gate is the capacity check for this family)."""
+    total = 0
+    for entry in pools.values():
+        if not is_ssm_entry(entry):
+            continue
+        slots_axis = 1 if _ssm_has_periods(entry) else 0
+        for arr in entry.values():
+            total += (int(arr.size) // arr.shape[slots_axis]) * \
+                arr.dtype.itemsize
+    return total
+
+
+def _ssm_has_periods(entry: dict) -> bool:
+    """Scanned-period SSM entries are state ``(P, S+1, h, p, n)`` / conv
+    ``(P, S+1, w-1, cd)``; prologue entries come period-stripped (one axis
+    fewer) — mirror of :func:`_has_periods_axis` for the page pools."""
+    return entry["state"].ndim == 5
 
 
 # ---------------------------------------------------------------------------
@@ -339,16 +400,29 @@ def _has_periods_axis(entry: dict) -> bool:
     return probe.ndim == 5
 
 
-def extract_pages(pools: dict, hi_ids: list[int], lo_ids: list[int]) -> dict:
-    """Copy a request's pages to host memory (vLLM-style swap-out).  The
-    result maps each layer key to {array_name: np.ndarray of the selected
-    pages} and restores bit-identically via :func:`insert_pages`, so a
-    preempted request resumes from the exact cache state it was evicted
-    with — no recompute, no numeric drift."""
+def extract_pages(pools: dict, hi_ids: list[int], lo_ids: list[int],
+                  slot: int | None = None) -> dict:
+    """Copy a request's pages — and, for hybrid stacks, its per-slot SSM
+    state — to host memory (vLLM-style swap-out).  The result maps each
+    layer key to {array_name: np.ndarray of the selected pages / slot row}
+    and restores bit-identically via :func:`insert_pages`, so a preempted
+    request resumes from the exact cache state it was evicted with — no
+    recompute, no numeric drift.  ``slot`` selects the SSM row for
+    slot-dense entries; it is required when the pools contain any."""
     hi = np.asarray(hi_ids, np.int32)
     lo = np.asarray(lo_ids, np.int32)
     swapped = {}
     for layer_key, entry in pools.items():
+        if is_ssm_entry(entry):
+            if slot is None:
+                raise ValueError(
+                    "pools hold slot-dense SSM state; extract_pages needs "
+                    "the request's slot to swap it out")
+            periods = _ssm_has_periods(entry)
+            swapped[layer_key] = {
+                name: np.asarray(arr[:, slot] if periods else arr[slot])
+                for name, arr in entry.items()}
+            continue
         periods = _has_periods_axis(entry)
         layer = {}
         for name, arr in entry.items():
@@ -359,12 +433,27 @@ def extract_pages(pools: dict, hi_ids: list[int], lo_ids: list[int]) -> dict:
 
 
 def insert_pages(pools: dict, swapped: dict, hi_ids: list[int],
-                 lo_ids: list[int]) -> dict:
-    """Swap-in: place saved pages at (possibly different) page ids."""
+                 lo_ids: list[int], slot: int | None = None) -> dict:
+    """Swap-in: place saved pages at (possibly different) page ids — and
+    saved SSM state at the (possibly different) ``slot`` the scheduler
+    re-admitted the request into."""
     hi = jnp.asarray(np.asarray(hi_ids, np.int32))
     lo = jnp.asarray(np.asarray(lo_ids, np.int32))
     out = {}
     for layer_key, entry in pools.items():
+        if is_ssm_entry(entry):
+            if slot is None:
+                raise ValueError(
+                    "pools hold slot-dense SSM state; insert_pages needs "
+                    "the resumed request's slot to swap it back in")
+            periods = _ssm_has_periods(entry)
+            layer = dict(entry)
+            for name, arr in entry.items():
+                saved = jnp.asarray(swapped[layer_key][name])
+                layer[name] = arr.at[:, slot].set(saved) if periods \
+                    else arr.at[slot].set(saved)
+            out[layer_key] = layer
+            continue
         periods = _has_periods_axis(entry)
         layer = dict(entry)
         for name, arr in entry.items():
@@ -375,3 +464,10 @@ def insert_pages(pools: dict, swapped: dict, hi_ids: list[int],
                     else arr.at[ids].set(saved)
         out[layer_key] = layer
     return out
+
+
+def swapped_bytes(swapped: dict) -> int:
+    """Host bytes one swap-out moved (pages + SSM state) — the
+    ``swap_bytes`` stat the serving bench reports per preemption."""
+    return sum(int(arr.nbytes) for layer in swapped.values()
+               for arr in layer.values())

@@ -32,6 +32,17 @@ query_len)`` metadata (`StepPlan.spans`) over the flattened token batch
 that `serving/engine.py` hands to `models/lm.paged_unified_step` as a
 single device program.
 
+Hybrid stacks (Mamba + attention) add a second state family: per-slot
+conv/SSM state, fixed-size per request (``SchedulerConfig.
+state_bytes_per_slot``).  Admission already gates on a free slot, which is
+exactly the capacity unit of that family — so admission needs no extra
+arithmetic, and a preemption victim's SSM state swaps to host *together
+with* its pages (the engine's swap callbacks read ``sreq.slot``, which is
+still assigned at swap-out time and re-assigned before swap-in).  A stack
+with no attention layers (``needs_kv_pages=False``) skips page reservation
+entirely — decode can then never be preempted, because a running request's
+footprint stops growing once its slot is held.
+
 Preemption: when a decode step needs a fresh page and the pools are
 exhausted, the victim is the **latest-admitted** active request (vLLM's
 priority rule — earlier arrivals are never starved by later ones).  Pages
@@ -136,6 +147,19 @@ class SchedulerConfig:
     prefill_chunk: int = 64
     max_prefills: int = 1            # prefill chunks per (unified) step
     transform_window: int = 1        # align non-final chunk ends to this
+    # Hybrid / SSM accounting: a slot pins `state_bytes_per_slot` of HBM the
+    # moment a request is admitted (per-slot conv + SSM state across every
+    # Mamba layer) — a *fixed* cost, independent of request length, so the
+    # free-slot gate in `_admit` IS the capacity check for this state
+    # family and no admission arithmetic consumes the number: it is
+    # recorded here (set by the engine from the allocated pools) purely
+    # for observability — stats and the serving bench report it.  Pages
+    # only ever cover the attention layers; a stack with none at all
+    # (pure SSM) sets `needs_kv_pages=False`: reservation and
+    # preemption-by-page-exhaustion are then no-ops — the only capacity
+    # dimension is the slot count.
+    state_bytes_per_slot: int = 0
+    needs_kv_pages: bool = True
 
 
 class Scheduler:
@@ -195,7 +219,7 @@ class Scheduler:
         while self.waiting and self._free_slots:
             sreq = self.waiting[0]
             if sreq.swapped is not None:
-                nh, nl = sreq.pages_for(sreq.pos, self.cache_cfg)
+                nh, nl = self._pages_for(sreq, sreq.pos)
                 if not self.alloc.can_allocate(nh, nl):
                     break            # resume needs every page back at once
                 self.waiting.pop(0)
@@ -268,10 +292,18 @@ class Scheduler:
                 # swap itself out rather than rob an earlier arrival
                 self._preempt(sreq)
 
+    def _pages_for(self, sreq: SchedRequest, pos: int) -> tuple[int, int]:
+        """Page demand for positions [0, pos) — zero for a pageless stack
+        (pure SSM: the per-slot state is the whole cache and is already
+        accounted by the slot the request holds)."""
+        if not self.cfg.needs_kv_pages:
+            return 0, 0
+        return sreq.pages_for(pos, self.cache_cfg)
+
     def _reserve(self, sreq: SchedRequest, upto: int) -> bool:
         """Grow the request's page lists to cover positions [0, upto),
         preempting later arrivals as needed."""
-        nh, nl = sreq.pages_for(upto, self.cache_cfg)
+        nh, nl = self._pages_for(sreq, upto)
         need_hi = nh - len(sreq.hi_pages)
         need_lo = nl - len(sreq.lo_pages)
         if need_hi <= 0 and need_lo <= 0:
@@ -309,7 +341,7 @@ class Scheduler:
         # Those extra pages carry no data: release them before the swap so
         # the saved page set always equals the pages_for(pos) re-allocation
         # at resume (extract/insert page counts must agree).
-        nh, nl = victim.pages_for(victim.pos, self.cache_cfg)
+        nh, nl = self._pages_for(victim, victim.pos)
         extra_hi, extra_lo = victim.hi_pages[nh:], victim.lo_pages[nl:]
         if extra_hi or extra_lo:
             victim.hi_pages = victim.hi_pages[:nh]
