@@ -31,6 +31,11 @@ swap traffic (pages + per-slot conv/SSM state) and
 ``ssm_state_bytes_per_slot`` land in the trajectory; token parity against
 the bucketed oracle and one-dispatch-per-unified-step are asserted.
 
+The ``degraded`` row runs the same smoke model deliberately overloaded
+(tiny page pool, bounded waiting queue, per-request deadlines on a virtual
+clock) and reports goodput, shed rate, and deadline misses — the
+graceful-degradation contract from the robustness PR.
+
     PYTHONPATH=src:. python benchmarks/serving_bench.py --smoke \
         --out BENCH_serving.json
 """
@@ -232,7 +237,77 @@ def run(smoke: bool = True, seed: int = 0) -> dict:
         max(results["paged_int4"]["hbm_bytes_per_token"], 1)
     results["paged_vs_bf16_hbm_ratio"] = round(ratio, 2)
     results["hybrid_jamba"] = run_hybrid(seed)
+    results["degraded"] = run_degraded(seed)
     return results
+
+
+def run_degraded(seed: int = 0) -> dict:
+    """Graceful-degradation row: the same smoke model on a deliberately
+    under-provisioned engine — tiny page pool (watermark preemption
+    active), bounded waiting queue, and per-request deadlines driven by an
+    injected virtual clock (2 virtual ms per clock read, so the row is
+    machine-independent and deterministic).  Reports **goodput** (tokens
+    of *finished* requests per real second), the shed rate, and the
+    deadline-miss count alongside raw tokens/s — the load-shedding
+    contract: under overload the engine degrades by plan (reject / shed /
+    fail-at-deadline), never by exception, and releases every page/slot
+    (asserted)."""
+    cfg = ModelConfig(name="bench-degraded", family="dense", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=128)
+    params = lm.init_params(jax.random.PRNGKey(seed), cfg)
+    rng = np.random.default_rng(seed)
+    prompt_lens = tuple(12 + (i * 17) % 40 for i in range(10))
+    prompts = [rng.integers(0, cfg.vocab_size, l) for l in prompt_lens]
+    max_new = 8
+    tick = 0.02                       # virtual seconds per clock read
+    deadline_s, ttft_deadline_s = 0.6, 0.35
+    max_waiting, shed_policy, watermark = 5, "reject_newest", 0.75
+    clk = {"t": 0.0}
+
+    def clock() -> float:
+        clk["t"] += tick
+        return clk["t"]
+
+    serve = lm.ServeConfig(stamp=None,
+                           kv=KV.KVCacheConfig(quantized=True, num_hi=16))
+    eng = PagedServingEngine(
+        params, cfg, serve,
+        PagedEngineConfig(max_slots=3, prefill_chunk=32, max_seq=96,
+                          block_size=16, num_lo_blocks=5,
+                          max_waiting=max_waiting, shed_policy=shed_policy,
+                          preempt_watermark=watermark),
+        clock=clock)
+    uids = [eng.submit(p, max_new_tokens=max_new, deadline_s=deadline_s,
+                       ttft_deadline_s=ttft_deadline_s) for p in prompts]
+    t0 = time.perf_counter()
+    done = eng.run()
+    wall = time.perf_counter() - t0
+    assert sorted(r.uid for r in done) == sorted(uids), \
+        "degraded run lost a request"
+    assert eng.sched.quiescent(), "degraded run leaked pages/slots"
+    st = eng.stats
+    assert st["finished"] > 0, "overload must not starve every request"
+    good_tokens = sum(len(r.out_tokens) for r in done
+                      if r.status == "finished")
+    all_tokens = sum(len(r.out_tokens) for r in done)
+    return {
+        "model": cfg.name, "requests": len(prompts),
+        "virtual_s_per_clock_read": tick,
+        "virtual_wall_s": round(clk["t"], 3),
+        "deadline_s": deadline_s, "ttft_deadline_s": ttft_deadline_s,
+        "max_waiting": max_waiting, "shed_policy": shed_policy,
+        "preempt_watermark": watermark,
+        "wall_s": round(wall, 3),
+        "tokens_per_s": round(all_tokens / wall, 2),
+        "goodput_tokens_per_s": round(good_tokens / wall, 2),
+        "finished": st["finished"], "failed": st["failed"],
+        "shed": st["shed"], "rejected": st["rejected"],
+        "shed_rate": round(st["shed"] / len(prompts), 3),
+        "deadline_misses": st["deadline_misses"],
+        "preemptions": st["preemptions"],
+        "watchdog_trips": st["watchdog_trips"],
+    }
 
 
 def run_hybrid(seed: int = 0) -> dict:

@@ -3,7 +3,10 @@ batched requests through a STaMP-quantized engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --reduced \
         --requests 16 --prompt-len 96 --max-new 16 \
-        [--engine paged|bucketed] [--no-stamp] [--execution fused]
+        [--engine paged|bucketed] [--no-stamp] [--execution fused] \
+        [--deadline-s 2.0 --ttft-deadline-s 0.5 --max-waiting 32 \
+         --shed-policy reject_newest --watermark 0.9 --numerics-guard \
+         --chaos SEED]
 
 ``--engine bucketed`` is the lockstep slot-batching engine; ``--engine
 paged`` (default) is the continuous-batching engine over the block-paged
@@ -60,6 +63,29 @@ def main():
     ap.add_argument("--max-prefills", type=int, default=2,
                     help="prefill chunk rows per unified step")
     ap.add_argument("--seed", type=int, default=0)
+    # -- robustness / admission control (paged engine) ------------------
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request total latency budget in seconds; "
+                         "requests past it FAIL at plan time")
+    ap.add_argument("--ttft-deadline-s", type=float, default=None,
+                    help="per-request first-token budget in seconds")
+    ap.add_argument("--max-waiting", type=int, default=None,
+                    help="bounded waiting queue: beyond this depth the "
+                         "shed policy decides who is turned away")
+    ap.add_argument("--shed-policy", choices=("reject_newest",
+                                              "shed_oldest"),
+                    default="reject_newest")
+    ap.add_argument("--watermark", type=float, default=1.0,
+                    help="page-pool occupancy fraction that triggers early "
+                         "preemption (1.0 = only on true exhaustion)")
+    ap.add_argument("--numerics-guard", action="store_true",
+                    help="check step outputs for NaN/Inf and quarantine "
+                         "the offending request (fused STaMP engines also "
+                         "demote to reference execution)")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="inject seeded faults (page exhaustion, swap "
+                         "corruption, NaN) via a FaultPlan — a smoke of "
+                         "the degradation machinery, not a benchmark")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -88,6 +114,8 @@ def main():
                                              execution=args.execution))
     if args.fused_cache_attention:
         serve = dataclasses.replace(serve, fused_cache_attention=True)
+    if args.numerics_guard:
+        serve = dataclasses.replace(serve, numerics_guard=True)
 
     max_seq = 128 + args.max_new
     if args.engine == "paged":
@@ -96,12 +124,21 @@ def main():
         if num_hi % bs:
             bs = num_hi      # pages must be single-precision (num_hi % bs == 0)
             print(f"[serve] block_size adjusted to {bs} (num_hi={num_hi})")
+        fault = None
+        if args.chaos is not None:
+            from repro.serving.faults import FaultPlan
+            fault = FaultPlan(seed=args.chaos, exhaust_rate=0.2,
+                              corrupt_rate=0.3, nan_rate=0.005)
         engine = PagedServingEngine(
             sparams, cfg, serve,
             PagedEngineConfig(max_slots=8, prefill_chunk=args.prefill_chunk,
                               max_seq=max_seq, block_size=bs,
                               step_mode=args.step_mode,
-                              max_prefills=args.max_prefills))
+                              max_prefills=args.max_prefills,
+                              max_waiting=args.max_waiting,
+                              shed_policy=args.shed_policy,
+                              preempt_watermark=args.watermark),
+            fault=fault)
     else:
         engine = BucketedEngine(sparams, cfg, serve,
                                 EngineConfig(max_batch=8, bucket=128,
@@ -109,7 +146,9 @@ def main():
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
         engine.submit(rng.integers(0, cfg.vocab_size, args.prompt_len),
-                      max_new_tokens=args.max_new)
+                      max_new_tokens=args.max_new,
+                      deadline_s=args.deadline_s,
+                      ttft_deadline_s=args.ttft_deadline_s)
     t0 = time.time()
     done = engine.run()
     dt = time.time() - t0
@@ -126,6 +165,13 @@ def main():
               f"dispatches/step="
               f"{st['device_dispatches'] / max(st['steps'], 1):.2f} "
               f"recompiles={st['recompiles']}")
+        print(f"[serve:lifecycle] finished={st['finished']} "
+              f"failed={st['failed']} cancelled={st['cancelled']} "
+              f"rejected={st['rejected']} shed={st['shed']} "
+              f"deadline_misses={st['deadline_misses']} "
+              f"nan_quarantines={st['nan_quarantines']} "
+              f"demotions={st['demotions']} "
+              f"watchdog_trips={st['watchdog_trips']}")
     for r in done[:3]:
         print(f"  req {r.uid}: {r.out_tokens[:10]}")
 

@@ -46,6 +46,11 @@ class ServeConfig:
     # per-step bf16 dequant of the same buffers
     paged: Optional["PKV.PagedCacheConfig"] = None   # block-paged cache
     # (continuous-batching engine; None = contiguous per-slot cache)
+    numerics_guard: bool = False  # serving engines check step outputs for
+    # NaN/Inf and quarantine the offending request (engine.py) — the
+    # low-precision escape hatch: sub-8-bit activation formats are one
+    # outlier away from saturation, and one poisoned request must not
+    # take down the batch
 
 
 # ---------------------------------------------------------------------------

@@ -28,7 +28,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,8 +37,10 @@ import numpy as np
 from repro.models import lm
 from repro.models.config import ModelConfig
 from repro.serving import paged_kvcache as PKV
-from repro.serving.scheduler import (RUNNING, PrefillWork, SchedRequest,
-                                     Scheduler, SchedulerConfig)
+from repro.serving.faults import FaultPlan, corrupt_swapped
+from repro.serving.scheduler import (CANCELLED, PREFILLING, REJECTED, RUNNING,
+                                     PrefillWork, SchedRequest, Scheduler,
+                                     SchedulerConfig)
 
 
 def _transform_window(stamp, chunk: int) -> int:
@@ -63,6 +65,14 @@ class Request:
     ttft_s: float = 0.0           # submit → first token
     preemptions: int = 0
     submit_t: float = 0.0
+    # lifecycle: "queued" until the request reaches exactly one terminal
+    # state — "finished" | "failed" | "cancelled" | "rejected".  `error`
+    # says why for the failed/rejected ones.  `out_tokens` carries the
+    # partial generation for failed/cancelled requests (possibly empty).
+    status: str = "queued"
+    error: Optional[str] = None
+    deadline_s: Optional[float] = None       # total submit→finish budget
+    ttft_deadline_s: Optional[float] = None  # submit→first-token budget
 
 
 @dataclasses.dataclass
@@ -87,12 +97,34 @@ class PagedEngineConfig:
     # "two_call" (the PR-3 prefill-then-decode pair, kept for parity tests
     # and A/B benchmarking — schedules exactly like the old engine)
     max_events: int = 4096        # event-trace ring buffer (0 = unbounded)
+    # -- robustness / admission control --------------------------------
+    max_waiting: Optional[int] = None  # bounded waiting queue (None = ∞)
+    shed_policy: str = "reject_newest"  # "reject_newest" | "shed_oldest"
+    # consecutive zero-span steps before the watchdog fails the request at
+    # the head of the line (livelock backstop — 0 disables)
+    watchdog_steps: int = 8
+    # on a NaN/Inf quarantine under a fused STaMP config, demote the whole
+    # engine to reference execution (original bf16 weights, no integer
+    # kernels) — the slow-but-safe escape hatch for saturating activations
+    demote_on_nan: bool = True
+    # forwarded to SchedulerConfig.preempt_watermark (< 1.0 enables)
+    preempt_watermark: float = 1.0
 
 
 class _EngineBase:
-    """Shared request plumbing: fused-weight preparation + submit queue."""
+    """Shared request plumbing: fused-weight preparation + submit queue.
 
-    def __init__(self, params, cfg: ModelConfig, serve: lm.ServeConfig):
+    ``clock`` is the engine's only time source (default
+    ``time.perf_counter``): injectable so deadline tests and the degraded-
+    mode bench advance time deterministically instead of sleeping."""
+
+    def __init__(self, params, cfg: ModelConfig, serve: lm.ServeConfig,
+                 clock: Optional[Callable[[], float]] = None):
+        self._clock = clock if clock is not None else time.perf_counter
+        # the pre-`prepare_fused_weights` weights: fused preparation merges
+        # wq/wk/wv into one int8 wqkv (destructively, per site), so demoting
+        # a misbehaving engine back to reference execution needs this copy
+        self._raw_params = params
         if serve.stamp is not None and serve.stamp.enabled and \
                 serve.stamp.execution == "fused":
             # hoist every fused site's weights into cached int8 buffers once
@@ -110,14 +142,41 @@ class _EngineBase:
         self.serve = serve
         self._uid = 0
 
-    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> int:
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
+               deadline_s: Optional[float] = None,
+               ttft_deadline_s: Optional[float] = None) -> int:
+        """Queue one request; returns its uid.
+
+        Malformed inputs fail fast HERE with an actionable ValueError —
+        an empty prompt, a non-positive token budget, or a prompt the
+        engine's tables cannot hold would otherwise surface as an opaque
+        kernel shape error (or silent truncation) steps later.  Deadlines
+        are budgets in clock seconds from this call; the paged engine
+        fails the request at the first planning step past the budget.
+        """
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("empty prompt: a request needs at least one "
+                             "prompt token")
+        if max_new_tokens <= 0:
+            raise ValueError(f"max_new_tokens must be positive, got "
+                             f"{max_new_tokens}")
+        limit = self._max_prompt_len()
+        if prompt.size > limit:
+            raise ValueError(
+                f"prompt length {prompt.size} exceeds the engine's limit of "
+                f"{limit} tokens (raise max_seq, or chunk the prompt)")
         self._uid += 1
         # perf_counter, not time.time: TTFT / latency are *intervals*, and
         # wall-clock steps (NTP slew) would skew the bench percentiles
-        req = Request(self._uid, np.asarray(prompt, np.int32),
-                      max_new_tokens, submit_t=time.perf_counter())
+        req = Request(self._uid, prompt, max_new_tokens,
+                      submit_t=self._clock(), deadline_s=deadline_s,
+                      ttft_deadline_s=ttft_deadline_s)
         self._enqueue(req)
         return self._uid
+
+    def _max_prompt_len(self) -> int:
+        raise NotImplementedError
 
     def _enqueue(self, req: Request) -> None:
         raise NotImplementedError
@@ -129,8 +188,9 @@ class BucketedEngine(_EngineBase):
     cross-attention caches)."""
 
     def __init__(self, params, cfg: ModelConfig, serve: lm.ServeConfig,
-                 ecfg: Optional[EngineConfig] = None):
-        super().__init__(params, cfg, serve)
+                 ecfg: Optional[EngineConfig] = None,
+                 clock: Optional[Callable[[], float]] = None):
+        super().__init__(params, cfg, serve, clock=clock)
         # NOTE: default constructed per instance — a dataclass default
         # instance in the signature would be shared across engines (mutable
         # default), letting one engine's config edits leak into another.
@@ -144,6 +204,11 @@ class BucketedEngine(_EngineBase):
             lambda p, b, lp: lm.prefill(p, b, cfgm, serve, last_pos=lp))
         self._decode = jax.jit(
             lambda p, c, t, pos: lm.decode_step(p, c, t, pos, cfgm, serve))
+
+    def _max_prompt_len(self) -> int:
+        # the bucket is the prompt capacity; one position must stay free
+        # for the first generated token's K/V write
+        return min(self.ecfg.bucket, self.ecfg.max_seq - 1)
 
     def _enqueue(self, req: Request) -> None:
         self.queue.append(req)
@@ -159,7 +224,7 @@ class BucketedEngine(_EngineBase):
         return done
 
     def _run_batch(self, reqs: List[Request]) -> List[Request]:
-        t0 = time.perf_counter()
+        t0 = self._clock()
         b = len(reqs)
         bucket = self.ecfg.bucket
         prompts = np.zeros((b, bucket), np.int32)
@@ -184,7 +249,7 @@ class BucketedEngine(_EngineBase):
         # force the async-dispatched prefill before timestamping, so TTFT
         # measures execution (as the paged engine's np.argmax does)
         jax.block_until_ready(tok)
-        t_first = time.perf_counter()
+        t_first = self._clock()
         for r in reqs:
             r.ttft_s = t_first - r.submit_t
         alive = np.ones(b, bool)
@@ -198,10 +263,11 @@ class BucketedEngine(_EngineBase):
             logits, cache = self._decode(self.params, cache, tok,
                                          jnp.asarray(lens + step))
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        dt = time.perf_counter() - t0
+        dt = self._clock() - t0
         for i, r in enumerate(reqs):
             r.out_tokens = outs[i][: r.max_new_tokens]
             r.latency_s = dt
+            r.status = "finished"
         return reqs
 
 
@@ -242,10 +308,15 @@ class PagedServingEngine(_EngineBase):
     """
 
     def __init__(self, params, cfg: ModelConfig, serve: lm.ServeConfig,
-                 ecfg: Optional[PagedEngineConfig] = None):
-        super().__init__(params, cfg, serve)
+                 ecfg: Optional[PagedEngineConfig] = None,
+                 fault: Optional[FaultPlan] = None,
+                 clock: Optional[Callable[[], float]] = None):
+        super().__init__(params, cfg, serve, clock=clock)
         self.ecfg = ecfg if ecfg is not None else PagedEngineConfig()
         e = self.ecfg
+        if e.shed_policy not in ("reject_newest", "shed_oldest"):
+            raise ValueError(f"unknown shed_policy {e.shed_policy!r}")
+        self.fault = fault
         quant = self.serve.kv
         num_hi = quant.num_hi if quant.quantized else 0
         if quant.quantized and num_hi % e.block_size:
@@ -284,8 +355,14 @@ class PagedServingEngine(_EngineBase):
                     self.serve.stamp, e.prefill_chunk) if unified else 1,
                 state_bytes_per_slot=PKV.ssm_state_bytes_per_slot(
                     self.pools),
-                needs_kv_pages=self._has_attn),
+                needs_kv_pages=self._has_attn,
+                preempt_watermark=e.preempt_watermark),
             self.pcfg, swap_out=self._swap_out, swap_in=self._swap_in)
+        if fault is not None:
+            # the allocator consults the plan on every probe: injected
+            # exhaustion flows through the REAL preemption/degradation
+            # paths, not a mock
+            self.sched.alloc.fault = fault.exhausted
         self._requests: Dict[int, Request] = {}
         # (step, kind, payload) ring buffer — unbounded growth over a long
         # serving run is a memory leak, so the trace keeps the newest
@@ -294,8 +371,18 @@ class PagedServingEngine(_EngineBase):
             maxlen=e.max_events if e.max_events > 0 else None)
         self.stats = {"steps": 0, "decode_tokens": 0, "prefill_chunks": 0,
                       "preemptions": 0, "device_dispatches": 0,
-                      "recompiles": 0, "swap_bytes": 0}
+                      "recompiles": 0, "swap_bytes": 0,
+                      # lifecycle / robustness counters
+                      "finished": 0, "failed": 0, "cancelled": 0,
+                      "rejected": 0, "shed": 0, "deadline_misses": 0,
+                      "nan_quarantines": 0, "demotions": 0,
+                      "watchdog_trips": 0, "stalled_steps": 0,
+                      "swap_corruptions": 0}
         self._step_i = 0
+        self._stall = 0              # consecutive zero-span steps
+        self._swap_failed: List[tuple] = []   # (sreq, error) from _swap_in
+        self._terminal_done: List[Request] = []  # rejected/cancelled/failed
+        self._demoted = False
         # shape buckets for the chunk-row count: 0 (all-decode), powers of
         # two, and max_prefills — the full set of compiled variants
         mp = max(e.max_prefills, 1) if unified else 1
@@ -306,7 +393,16 @@ class PagedServingEngine(_EngineBase):
             b *= 2
         self._npf_buckets = sorted(buckets)
         self._compiled_keys: set = set()
+        self._build_step_fns()
 
+    def _build_step_fns(self) -> None:
+        """(Re)build the jit'd step entry points from the CURRENT
+        ``self.serve``.  Called at construction and again on fused →
+        reference demotion, which swaps the params/serve config underneath
+        (old compiled variants are dropped; the recompile counter starts
+        over for the new config)."""
+        self._compiled_keys = set()
+        unified = self.ecfg.step_mode == "unified"
         cfgm, serve_p = self.cfg, self.serve
         if unified:
             self._unified = jax.jit(
@@ -341,11 +437,87 @@ class PagedServingEngine(_EngineBase):
         return len(self._compiled_keys)
 
     # ------------------------------------------------------------------
+    def _max_prompt_len(self) -> int:
+        # one position stays free for the first generated token's K/V write
+        return self.ecfg.max_seq - 1
+
+    def _capacity_reason(self, req: Request) -> Optional[str]:
+        """None if the request can EVER run to completion alone on this
+        engine; otherwise why not.  The check mirrors the scheduler's
+        reservation arithmetic: the deepest position it will reserve is
+        ``prompt_len + gen - 1`` (the page for the last generated token's
+        K/V write), so a request whose page demand at that position
+        exceeds the whole pool would previously livelock or crash the
+        step loop — now it never enters the queue."""
+        if not self._has_attn:
+            return None              # pure-SSM: slots are the only capacity
+        plen = int(req.prompt.shape[0])
+        gen = min(req.max_new_tokens, self.ecfg.max_seq - plen)
+        nh, nl = PKV.pages_needed(plen + gen - 1, self.pcfg)
+        cap_hi, cap_lo = self.sched.alloc.capacity()
+        if nh > cap_hi or nl > cap_lo:
+            return (f"capacity-infeasible: needs {nh} hi + {nl} lo pages at "
+                    f"peak but the pools hold only {cap_hi} hi + {cap_lo} "
+                    f"lo — the request could never run even alone")
+        return None
+
     def _enqueue(self, req: Request) -> None:
         self._requests[req.uid] = req
+        reason = self._capacity_reason(req)
+        if reason is not None:
+            self._terminate(req, REJECTED, reason, stat="rejected",
+                            kind="reject")
+            return
+        e = self.ecfg
+        if e.max_waiting is not None and \
+                len(self.sched.waiting) >= e.max_waiting:
+            if e.shed_policy == "shed_oldest":
+                # prefer shedding a queued request that has not run at all
+                # (a preempted one holds real generation progress)
+                fresh = [r for r in self.sched.waiting if r.swapped is None
+                         and r.pos == 0 and not r.generated]
+                if fresh:
+                    victim = fresh[0]
+                    self.sched.cancel(victim.uid, state=REJECTED,
+                                      error="shed: waiting queue full")
+                    vreq = self._requests[victim.uid]
+                    self._terminate(vreq, REJECTED,
+                                    "shed: waiting queue full",
+                                    stat="shed", kind="shed",
+                                    sreq=victim)
+                else:
+                    self._terminate(req, REJECTED,
+                                    "shed: waiting queue full",
+                                    stat="shed", kind="shed")
+                    return
+            else:                    # reject_newest
+                self._terminate(req, REJECTED,
+                                f"waiting queue full "
+                                f"({e.max_waiting} requests)",
+                                stat="shed", kind="shed")
+                return
         self.sched.submit(SchedRequest(
-            uid=req.uid, prompt=req.prompt[-self.ecfg.max_seq + 1:],
+            uid=req.uid, prompt=req.prompt,
             max_new_tokens=req.max_new_tokens, arrival=req.uid))
+
+    def _terminate(self, req: Request, status: str, error: Optional[str],
+                   stat: str, kind: str,
+                   sreq: Optional[SchedRequest] = None) -> None:
+        """Move one Request to a terminal state outside the normal finish
+        path (reject/shed/cancel/fail) and queue it for the caller's done
+        list."""
+        req.status = status
+        req.error = error
+        if req.out_tokens is None:
+            gen = sreq.generated[: sreq.max_new_tokens] if sreq else []
+            req.out_tokens = np.asarray(gen, np.int32)
+        if sreq is not None:
+            req.preemptions = sreq.preemptions
+        req.latency_s = self._clock() - req.submit_t
+        self.stats[stat] += 1
+        self.events.append((self._step_i, kind,
+                            (req.uid, error) if error else req.uid))
+        self._terminal_done.append(req)
 
     def _swap_out(self, sreq: SchedRequest) -> None:
         # slot still assigned here (the scheduler swaps before it frees),
@@ -359,21 +531,160 @@ class PagedServingEngine(_EngineBase):
     def _swap_in(self, sreq: SchedRequest) -> None:
         # sreq.slot is the NEW placement — SSM state restores there, pages
         # at whatever ids the allocator handed back (tables indirect)
-        self.pools = PKV.insert_pages(self.pools, sreq.swapped,
-                                      sreq.hi_pages, sreq.lo_pages,
-                                      slot=sreq.slot)
+        swapped = sreq.swapped
+        if self.fault is not None and self.fault.corrupt_swap(sreq.uid):
+            swapped = corrupt_swapped(swapped, self.fault.seed)
+            self.events.append((self._step_i, "fault_corrupt", sreq.uid))
+        try:
+            self.pools = PKV.insert_pages(self.pools, swapped,
+                                          sreq.hi_pages, sreq.lo_pages,
+                                          slot=sreq.slot)
+        except PKV.SwapCorruption as exc:
+            # insert_pages verifies checksums BEFORE touching the pools, so
+            # nothing was restored.  The scheduler is mid-_admit and will
+            # finish placing this request; _step fails it (releasing the
+            # just-granted slot/pages) right after plan_step returns —
+            # everyone else keeps running.
+            self._swap_failed.append((sreq, str(exc)))
+            return
         self.events.append((self._step_i, "resume", sreq.uid))
 
     # ------------------------------------------------------------------
     def run(self) -> List[Request]:
-        t0 = time.perf_counter()
+        """Drain the engine.  Every submitted request comes back in exactly
+        one terminal state (`Request.status`); per-request problems —
+        rejection, deadline miss, swap corruption, NaN quarantine, livelock
+        — fail THAT request and never raise out of run()."""
+        t0 = self._clock()
         done: List[Request] = []
+        self._drain_terminal(done)   # submit-time rejects / early cancels
         while self.sched.has_work():
             self._step(done)
-        dt = time.perf_counter() - t0
+            self._drain_terminal(done)
+        dt = self._clock() - t0
         for r in done:
             r.latency_s = r.latency_s or dt
         return done
+
+    def _drain_terminal(self, done: List[Request]) -> None:
+        if self._terminal_done:
+            done.extend(self._terminal_done)
+            self._terminal_done = []
+
+    def cancel(self, uid: int) -> bool:
+        """Terminate one request wherever it is — queued, mid-prefill,
+        mid-decode, or preempted — releasing exactly the slot/pages it
+        holds.  Partial tokens are kept on the Request.  Returns False for
+        an unknown or already-terminal uid."""
+        sreq = self.sched.cancel(uid)
+        if sreq is None:
+            return False
+        self._terminate(self._requests[uid], CANCELLED, None,
+                        stat="cancelled", kind="cancel", sreq=sreq)
+        return True
+
+    def request(self, uid: int) -> Optional[Request]:
+        """The Request record for a uid (terminal or not)."""
+        return self._requests.get(uid)
+
+    def _fail(self, sreq: SchedRequest, error: str,
+              kind: str = "fail") -> None:
+        """Quarantine one scheduler request: release its resources, mark
+        the Request failed, keep everyone else running."""
+        self.sched.fail(sreq, error)
+        self._terminate(self._requests[sreq.uid], "failed", error,
+                        stat="failed", kind=kind, sreq=sreq)
+
+    def _check_deadlines(self) -> None:
+        """Plan-time deadline enforcement: a request past its total or
+        TTFT budget fails BEFORE this step plans, so its pages/slot go to
+        requests that can still meet theirs."""
+        now = self._clock()
+        for sreq in list(self.sched.active) + list(self.sched.waiting):
+            req = self._requests[sreq.uid]
+            waited = now - req.submit_t
+            miss = None
+            if req.deadline_s is not None and waited > req.deadline_s:
+                miss = (f"deadline miss: {waited:.3f}s elapsed > "
+                        f"{req.deadline_s:.3f}s total budget")
+            elif req.ttft_deadline_s is not None and not sreq.generated \
+                    and waited > req.ttft_deadline_s:
+                miss = (f"deadline miss: no first token after "
+                        f"{waited:.3f}s > {req.ttft_deadline_s:.3f}s "
+                        f"TTFT budget")
+            if miss is not None:
+                self.stats["deadline_misses"] += 1
+                self.events.append((self._step_i, "deadline_miss",
+                                    sreq.uid))
+                self._fail(sreq, miss)
+
+    def _watchdog(self, progress: bool) -> None:
+        """Livelock backstop: ``has_work()`` plus N consecutive zero-span
+        steps means nothing can be placed or advanced (injected
+        exhaustion, a resume that can never re-allocate, admission
+        thrash).  Fail the request at the head of the line — the one FCFS
+        is stuck behind — not the engine."""
+        if progress:
+            self._stall = 0
+            return
+        if not self.sched.has_work():
+            return
+        self._stall += 1
+        self.stats["stalled_steps"] += 1
+        n = self.ecfg.watchdog_steps
+        if n <= 0 or self._stall < n:
+            return
+        self._stall = 0
+        self.stats["watchdog_trips"] += 1
+        blockers = sorted(self.sched.waiting + self.sched.active,
+                          key=lambda r: (r.arrival, r.uid))
+        if blockers:
+            self._fail(blockers[0],
+                       f"watchdog: no scheduling progress for {n} "
+                       f"consecutive steps", kind="watchdog")
+
+    # -- numerics guard -------------------------------------------------
+    def _next_token(self, sreq: SchedRequest, row: np.ndarray) -> bool:
+        """Greedy-sample one span's logits row, behind the NaN/Inf guard.
+        Returns False when the request was quarantined instead."""
+        if self.fault is not None and \
+                self.fault.nan_logits(sreq.uid, len(sreq.generated)):
+            row = np.full_like(row, np.nan)
+            self.events.append((self._step_i, "fault_nan", sreq.uid))
+        if self.serve.numerics_guard and not np.isfinite(row).all():
+            self._quarantine(sreq, f"non-finite logits at generated index "
+                                   f"{len(sreq.generated)}")
+            return False
+        sreq.generated.append(int(np.argmax(row)))
+        return True
+
+    def _quarantine(self, sreq: SchedRequest, error: str) -> None:
+        self.stats["nan_quarantines"] += 1
+        self.events.append((self._step_i, "nan_quarantine", sreq.uid))
+        self._fail(sreq, error)
+        self._maybe_demote()
+
+    def _maybe_demote(self) -> None:
+        """Fused → reference graceful degradation: after a NaN quarantine
+        under a fused STaMP config, rebuild the engine on the retained
+        original weights with reference-path execution (no integer
+        kernels).  Slower, but an activation distribution that saturates
+        the int4/int8 path cannot take the whole fleet slice with it.
+        One-shot per engine; in-flight caches are kept (page layout does
+        not depend on the execution path)."""
+        st = self.serve.stamp
+        if (not self.ecfg.demote_on_nan or self._demoted or st is None
+                or not st.enabled or st.execution != "fused"):
+            return
+        self._demoted = True
+        self.params = self._raw_params
+        self.serve = dataclasses.replace(
+            self.serve,
+            stamp=dataclasses.replace(st, execution="reference"),
+            fused_decode_matmul=False)
+        self._build_step_fns()
+        self.stats["demotions"] += 1
+        self.events.append((self._step_i, "demote", "reference"))
 
     # ------------------------------------------------------------------
     def _tables_np(self, sreqs: List[SchedRequest]) -> tuple:
@@ -408,18 +719,36 @@ class PagedServingEngine(_EngineBase):
     def _step(self, done: List[Request]) -> None:
         self._step_i += 1
         self.stats["steps"] += 1
+        if self.fault is not None:
+            self.fault.begin_step(self._step_i)
+            if self.fault.exhausted():
+                self.events.append((self._step_i, "fault_exhaust",
+                                    self._step_i))
+        self._check_deadlines()
         plan = self.sched.plan_step()
         for sreq in plan.admitted:
             self.events.append((self._step_i, "admit", sreq.uid))
+        if self._swap_failed:
+            # a swap-in refused its checksum during _admit: the request got
+            # a slot/pages but its cache was never restored — fail it and
+            # drop it from this step's spans before anything runs
+            for sreq, msg in self._swap_failed:
+                self.stats["swap_corruptions"] += 1
+                self._fail(sreq, msg, kind="swap_corrupt")
+            self._swap_failed = []
+            plan.prefills = [w for w in plan.prefills
+                             if w.sreq.state == PREFILLING]
+            plan.decode = [r for r in plan.decode if r.state == RUNNING]
 
+        progress = bool(plan.prefills or plan.decode)
         if self.ecfg.step_mode == "two_call":
             if plan.prefills:
                 self._run_prefill_chunk(plan.prefills[0], done)
             if plan.decode:
                 self._run_decode(plan.decode, done)
-            return
-        if plan.prefills or plan.decode:
+        elif progress:
             self._run_unified(plan, done)
+        self._watchdog(progress)
 
     def _run_unified(self, plan, done: List[Request]) -> None:
         """Build the flattened ragged batch the scheduler planned and run
@@ -498,27 +827,35 @@ class PagedServingEngine(_EngineBase):
 
         for i, w in enumerate(works):
             sreq = w.sreq
-            sreq.pos = w.end
-            self.stats["prefill_chunks"] += 1
-            self.events.append((self._step_i, "prefill_chunk",
-                                (sreq.uid, w.start, w.end)))
-            if w.end == sreq.prompt_len:
-                tok = int(np.argmax(pf_logits[i]))
-                sreq.generated.append(tok)
-                sreq.state = RUNNING
-                req = self._requests[sreq.uid]
-                req.ttft_s = time.perf_counter() - req.submit_t
-                self.events.append((self._step_i, "first_token", sreq.uid))
-                self._maybe_finish(sreq, done)
+            try:
+                sreq.pos = w.end
+                self.stats["prefill_chunks"] += 1
+                self.events.append((self._step_i, "prefill_chunk",
+                                    (sreq.uid, w.start, w.end)))
+                if w.end == sreq.prompt_len:
+                    if not self._next_token(sreq, pf_logits[i]):
+                        continue     # quarantined — resources released
+                    sreq.state = RUNNING
+                    req = self._requests[sreq.uid]
+                    req.ttft_s = self._clock() - req.submit_t
+                    self.events.append((self._step_i, "first_token",
+                                        sreq.uid))
+                    self._maybe_finish(sreq, done)
+            except Exception as exc:   # noqa: BLE001 — isolation boundary
+                self._fail(sreq, f"prefill postprocessing error: {exc!r}")
         if plan.decode:
             self.events.append((self._step_i, "decode",
                                 tuple(sorted(r.uid for r in plan.decode))))
             for sreq in plan.decode:
-                sreq.pos += 1              # last token is now cached
-                tok = int(np.argmax(dec_logits[sreq.slot]))
-                sreq.generated.append(tok)
-                self.stats["decode_tokens"] += 1
-                self._maybe_finish(sreq, done)
+                try:
+                    sreq.pos += 1          # last token is now cached
+                    if not self._next_token(sreq, dec_logits[sreq.slot]):
+                        continue
+                    self.stats["decode_tokens"] += 1
+                    self._maybe_finish(sreq, done)
+                except Exception as exc:   # noqa: BLE001
+                    self._fail(sreq,
+                               f"decode postprocessing error: {exc!r}")
 
     # -- two_call mode (the PR-3 step pair, kept for parity/AB) ---------
     def _run_prefill_chunk(self, work: PrefillWork,
@@ -551,11 +888,11 @@ class PagedServingEngine(_EngineBase):
         self.events.append((self._step_i, "prefill_chunk",
                             (sreq.uid, start, end)))
         if end == sreq.prompt_len:
-            tok = int(np.argmax(np.asarray(logits[0])))
-            sreq.generated.append(tok)
+            if not self._next_token(sreq, np.asarray(logits[0])):
+                return               # quarantined
             sreq.state = RUNNING
             req = self._requests[sreq.uid]
-            req.ttft_s = time.perf_counter() - req.submit_t
+            req.ttft_s = self._clock() - req.submit_t
             self.events.append((self._step_i, "first_token", sreq.uid))
             self._maybe_finish(sreq, done)
 
@@ -587,8 +924,8 @@ class PagedServingEngine(_EngineBase):
                             tuple(sorted(r.uid for r in running))))
         for sreq in running:
             sreq.pos += 1                      # last token is now cached
-            tok = int(np.argmax(logits[sreq.slot]))
-            sreq.generated.append(tok)
+            if not self._next_token(sreq, logits[sreq.slot]):
+                continue
             self.stats["decode_tokens"] += 1
             self._maybe_finish(sreq, done)
 
@@ -601,8 +938,10 @@ class PagedServingEngine(_EngineBase):
             out = sreq.generated[: sreq.max_new_tokens]
             req = self._requests[sreq.uid]
             req.out_tokens = np.asarray(out, np.int32)
-            req.latency_s = time.perf_counter() - req.submit_t
+            req.latency_s = self._clock() - req.submit_t
             req.preemptions = sreq.preemptions
+            req.status = "finished"
             self.sched.finish(sreq)
+            self.stats["finished"] += 1
             self.events.append((self._step_i, "finish", sreq.uid))
             done.append(req)

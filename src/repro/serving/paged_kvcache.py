@@ -56,6 +56,8 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import zlib
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -189,6 +191,13 @@ class OutOfBlocks(Exception):
     """Raised by the allocator; the scheduler turns it into preemption."""
 
 
+class SwapCorruption(Exception):
+    """A swapped-out page set failed its checksum at swap-in: the host copy
+    was corrupted while the request sat preempted.  The restore is refused
+    (pools untouched) — the engine fails that one request and keeps
+    serving."""
+
+
 class BlockAllocator:
     """Free-list allocator over the hi and lo pools (host, deterministic).
 
@@ -199,10 +208,19 @@ class BlockAllocator:
     ``ValueError`` (a real exception, not an ``assert`` stripped under
     ``python -O``); membership is tracked in a set mirror so the check is
     O(1) per page.
+
+    ``fault`` is the deterministic fault-injection hook
+    (`serving/faults.py`): a zero-arg callable that returns True while
+    injected page exhaustion is active — ``can_allocate`` then reports no
+    capacity and ``alloc_*`` raises :class:`OutOfBlocks`, driving the
+    scheduler's real preemption/degradation paths without consuming any
+    actual pages.
     """
 
-    def __init__(self, cfg: PagedCacheConfig):
+    def __init__(self, cfg: PagedCacheConfig,
+                 fault: Optional[Callable[[], bool]] = None):
         self.cfg = cfg
+        self.fault = fault
         # ascending ranges are already valid min-heaps
         self._free_hi = list(range(1, cfg.num_hi_blocks)) \
             if cfg.quant.quantized else []
@@ -215,18 +233,38 @@ class BlockAllocator:
     def free_counts(self) -> tuple[int, int]:
         return len(self._free_hi), len(self._free_lo)
 
+    def capacity(self) -> tuple[int, int]:
+        """(hi, lo) *allocatable* pages — pool sizes minus the null page.
+        The scheduler's submit-time feasibility check compares a request's
+        worst-case page demand against this, so a prompt that could never
+        be placed is rejected up front instead of livelocking the step
+        loop."""
+        return (max(self._num_blocks["hi"] - 1, 0),
+                max(self._num_blocks["lo"] - 1, 0))
+
+    def all_free(self) -> bool:
+        """True when every allocatable page is back on the free list — the
+        leak invariant the chaos/soak tests assert once all requests reach
+        a terminal state."""
+        return self.free_counts() == self.capacity()
+
+    def _fault_active(self) -> bool:
+        return self.fault is not None and self.fault()
+
     def can_allocate(self, n_hi: int, n_lo: int) -> bool:
+        if (n_hi > 0 or n_lo > 0) and self._fault_active():
+            return False
         return n_hi <= len(self._free_hi) and n_lo <= len(self._free_lo)
 
     def alloc_hi(self) -> int:
-        if not self._free_hi:
+        if not self._free_hi or self._fault_active():
             raise OutOfBlocks("hi pool exhausted")
         i = heapq.heappop(self._free_hi)
         self._free_hi_set.remove(i)
         return i
 
     def alloc_lo(self) -> int:
-        if not self._free_lo:
+        if not self._free_lo or self._fault_active():
             raise OutOfBlocks("lo pool exhausted")
         i = heapq.heappop(self._free_lo)
         self._free_lo_set.remove(i)
@@ -261,6 +299,16 @@ def token_page_index(pos: int, cfg: PagedCacheConfig) -> tuple[bool, int, int]:
         return True, pos // bs, pos % bs
     rel = pos - cfg.num_hi
     return False, rel // bs, rel % bs
+
+
+def pages_needed(pos: int, cfg: PagedCacheConfig) -> tuple[int, int]:
+    """(hi, lo) page counts required to hold logical positions [0, pos) —
+    the shared demand arithmetic behind the scheduler's reservations and
+    the engine's submit-time capacity-feasibility check."""
+    bs = cfg.block_size
+    hi_tokens = min(pos, cfg.num_hi)
+    lo_tokens = pos - hi_tokens
+    return -(-hi_tokens // bs), -(-lo_tokens // bs)
 
 
 # ---------------------------------------------------------------------------
@@ -400,6 +448,34 @@ def _has_periods_axis(entry: dict) -> bool:
     return probe.ndim == 5
 
 
+# reserved top-level key in the swap dict: per-array CRC32 of the saved
+# bytes, recorded at swap-out and verified before swap-in touches the pools
+CRC_KEY = "__crc__"
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
+
+
+def verify_swapped(swapped: dict) -> None:
+    """Check every saved array against the checksums `extract_pages`
+    recorded; raise :class:`SwapCorruption` on the first mismatch.  A swap
+    dict without checksums (older callers, hand-built test fixtures)
+    passes unverified."""
+    crcs = swapped.get(CRC_KEY)
+    if crcs is None:
+        return
+    for layer_key, layer in swapped.items():
+        if layer_key == CRC_KEY:
+            continue
+        for name, arr in layer.items():
+            if _crc(np.asarray(arr)) != crcs[layer_key][name]:
+                raise SwapCorruption(
+                    f"swap-in checksum mismatch at {layer_key}/{name}: the "
+                    f"host copy was corrupted while the request was "
+                    f"preempted — refusing to restore it")
+
+
 def extract_pages(pools: dict, hi_ids: list[int], lo_ids: list[int],
                   slot: int | None = None) -> dict:
     """Copy a request's pages — and, for hybrid stacks, its per-slot SSM
@@ -408,7 +484,11 @@ def extract_pages(pools: dict, hi_ids: list[int], lo_ids: list[int],
     and restores bit-identically via :func:`insert_pages`, so a preempted
     request resumes from the exact cache state it was evicted with — no
     recompute, no numeric drift.  ``slot`` selects the SSM row for
-    slot-dense entries; it is required when the pools contain any."""
+    slot-dense entries; it is required when the pools contain any.  The
+    result also carries a CRC32 per saved array under :data:`CRC_KEY`;
+    :func:`insert_pages` verifies them before touching the pools, so
+    corruption of the host copy fails loudly (`SwapCorruption`) instead of
+    silently resuming garbage."""
     hi = np.asarray(hi_ids, np.int32)
     lo = np.asarray(lo_ids, np.int32)
     swapped = {}
@@ -429,6 +509,9 @@ def extract_pages(pools: dict, hi_ids: list[int], lo_ids: list[int],
             ids = lo if (name in ("k", "v") or "_lo" in name) else hi
             layer[name] = np.asarray(arr[:, ids] if periods else arr[ids])
         swapped[layer_key] = layer
+    swapped[CRC_KEY] = {
+        layer_key: {name: _crc(arr) for name, arr in layer.items()}
+        for layer_key, layer in swapped.items() if layer_key != CRC_KEY}
     return swapped
 
 
@@ -436,7 +519,11 @@ def insert_pages(pools: dict, swapped: dict, hi_ids: list[int],
                  lo_ids: list[int], slot: int | None = None) -> dict:
     """Swap-in: place saved pages at (possibly different) page ids — and
     saved SSM state at the (possibly different) ``slot`` the scheduler
-    re-admitted the request into."""
+    re-admitted the request into.  Checksums recorded at swap-out are
+    verified *first*: on mismatch the restore raises
+    :class:`SwapCorruption` with the pools untouched, so the engine can
+    fail just the corrupted request and keep the batch running."""
+    verify_swapped(swapped)
     hi = jnp.asarray(np.asarray(hi_ids, np.int32))
     lo = jnp.asarray(np.asarray(lo_ids, np.int32))
     out = {}
@@ -469,5 +556,7 @@ def insert_pages(pools: dict, swapped: dict, hi_ids: list[int],
 def swapped_bytes(swapped: dict) -> int:
     """Host bytes one swap-out moved (pages + SSM state) — the
     ``swap_bytes`` stat the serving bench reports per preemption."""
-    return sum(int(arr.nbytes) for layer in swapped.values()
+    return sum(int(arr.nbytes)
+               for layer_key, layer in swapped.items()
+               if layer_key != CRC_KEY
                for arr in layer.values())

@@ -71,6 +71,13 @@ WAITING = "waiting"
 PREFILLING = "prefilling"
 RUNNING = "running"
 FINISHED = "finished"
+FAILED = "failed"
+CANCELLED = "cancelled"
+REJECTED = "rejected"
+
+#: States a request never leaves.  Every submitted request ends in exactly
+#: one of these; the engine's run() loop terminates when all have.
+TERMINAL = (FINISHED, FAILED, CANCELLED, REJECTED)
 
 
 @dataclasses.dataclass
@@ -90,6 +97,7 @@ class SchedRequest:
     swapped: Optional[dict] = None   # host-side pages while preempted
     admit_seq: int = -1              # preemption priority (latest = victim)
     preemptions: int = 0
+    error: Optional[str] = None      # set when state is FAILED / REJECTED
 
     @property
     def prompt_len(self) -> int:
@@ -160,6 +168,13 @@ class SchedulerConfig:
     # dimension is the slot count.
     state_bytes_per_slot: int = 0
     needs_kv_pages: bool = True
+    # High-watermark early preemption: when page-pool occupancy exceeds this
+    # fraction of total capacity, the latest arrival is evicted *before*
+    # anything actually runs out — exhaustion becomes a planned degradation
+    # (one clean swap-out between steps) instead of a mid-reservation
+    # scramble.  1.0 disables the watermark (preempt only on true
+    # exhaustion, the pre-robustness behavior).
+    preempt_watermark: float = 1.0
 
 
 class Scheduler:
@@ -195,6 +210,7 @@ class Scheduler:
     def plan_step(self) -> StepPlan:
         self._step_preempted: List[SchedRequest] = []
         admitted, resumed = self._admit()
+        self._apply_watermark(skip=admitted)
         prefills = self._pick_prefills()
         self._ensure_decode_capacity()
         decode = sorted((r for r in self.active if r.state == RUNNING),
@@ -207,11 +223,51 @@ class Scheduler:
 
     def finish(self, sreq: SchedRequest) -> None:
         sreq.state = FINISHED
-        self.active.remove(sreq)
-        heapq.heappush(self._free_slots, sreq.slot)
+        self._release(sreq)
+
+    def fail(self, sreq: SchedRequest, error: str) -> None:
+        """Move one request to FAILED and return every resource it holds —
+        the batch keeps running; nothing else is touched."""
+        sreq.state = FAILED
+        sreq.error = error
+        self._release(sreq)
+
+    def cancel(self, uid: int, state: str = CANCELLED,
+               error: Optional[str] = None) -> Optional[SchedRequest]:
+        """Terminate a request by uid wherever it currently is — waiting,
+        mid-prefill, running, or preempted-with-swapped-pages — releasing
+        exactly the slot/pages it holds.  Returns the request, or None if
+        the uid is unknown or already terminal."""
+        for sreq in self.active + self.waiting:
+            if sreq.uid == uid:
+                sreq.state = state
+                sreq.error = error
+                self._release(sreq)
+                return sreq
+        return None
+
+    def quiescent(self) -> bool:
+        """True when nothing is queued or active and every resource is back
+        in its pool: all slots free, all pages free.  The chaos suite's
+        no-leak invariant."""
+        return (not self.waiting and not self.active
+                and len(self._free_slots) == self.cfg.max_slots
+                and self.alloc.all_free())
+
+    def _release(self, sreq: SchedRequest) -> None:
+        """Return everything a request holds: its slot (if placed), its
+        device pages (if any — including pages reserved ahead of the
+        materialized prefix, which is why this must free the *lists*, not
+        a pages_for() recomputation), and its host-side swap copy."""
+        if sreq in self.active:
+            self.active.remove(sreq)
+            heapq.heappush(self._free_slots, sreq.slot)
+            sreq.slot = -1
+        elif sreq in self.waiting:
+            self.waiting.remove(sreq)
         self.alloc.free(sreq.hi_pages, sreq.lo_pages)
         sreq.hi_pages, sreq.lo_pages = [], []
-        sreq.slot = -1
+        sreq.swapped = None
 
     # ------------------------------------------------------------------
     def _admit(self) -> tuple[List[SchedRequest], List[SchedRequest]]:
@@ -259,6 +315,30 @@ class Scheduler:
             return end
         span = (end - sreq.pos) // w * w
         return sreq.pos + span if span > 0 else end
+
+    def _apply_watermark(self, skip: List[SchedRequest]) -> None:
+        """High-watermark early preemption (``preempt_watermark`` < 1.0):
+        while page occupancy exceeds the watermark fraction, swap out the
+        latest-admitted page-holder so upcoming reservations find planned
+        headroom instead of hitting exhaustion mid-plan.  Requests admitted
+        *this step* are exempt — evicting one the same step it came in
+        would thrash swap-in/swap-out without ever making progress."""
+        wm = self.cfg.preempt_watermark
+        if wm >= 1.0 or not self.cfg.needs_kv_pages:
+            return
+        cap_hi, cap_lo = self.alloc.capacity()
+        total = cap_hi + cap_lo
+        if total == 0:
+            return
+        while True:
+            free_hi, free_lo = self.alloc.free_counts()
+            if total - free_hi - free_lo <= wm * total:
+                return
+            cands = [r for r in self.active
+                     if (r.hi_pages or r.lo_pages) and r not in skip]
+            if len(cands) <= 1:
+                return               # never evict the only page-holder
+            self._preempt(max(cands, key=lambda r: (r.arrival, r.uid)))
 
     def _pick_prefills(self) -> List[PrefillWork]:
         """Strict FCFS over PREFILLING requests, ``(arrival, uid)`` order:
@@ -311,10 +391,13 @@ class Scheduler:
         while not self.alloc.can_allocate(max(need_hi, 0), max(need_lo, 0)):
             victim = self._pick_victim(exclude=sreq, after=sreq.arrival)
             if victim is None:
-                if not self.active or self.active == [sreq]:
-                    raise OutOfBlocks(
-                        f"pools too small for a single request "
-                        f"(uid={sreq.uid}, upto={upto})")
+                # Nobody younger holds pages.  This used to raise
+                # OutOfBlocks when sreq was alone (tearing down the whole
+                # engine); capacity-infeasible requests are now rejected at
+                # submit() and anything else that lands here — injected
+                # exhaustion, a transiently blocked resume — is a per-step
+                # "no" the caller degrades around (preempt-self / wait),
+                # with the engine watchdog as the livelock backstop.
                 return False
             self._preempt(victim)
         sreq.hi_pages += [self.alloc.alloc_hi() for _ in range(need_hi)]

@@ -6,6 +6,9 @@ import pytest
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
+    config.addinivalue_line(
+        "markers", "chaos: deterministic fault-injection suite (own CI "
+                   "step; tier-1 runs with -m 'not chaos')")
 
 
 # ---------------------------------------------------------------------------

@@ -451,13 +451,21 @@ class TestScheduling:
         for uid in ample:
             np.testing.assert_array_equal(ample[uid], tight[uid])
 
-    def test_pool_too_small_raises(self, params, prompts):
+    def test_pool_too_small_rejects_at_submit(self, params, prompts):
+        """A request whose peak page demand exceeds the whole pool used to
+        raise OutOfBlocks out of run() — tearing down every other request.
+        It is now rejected at submit() and run() stays clean."""
         pe = PagedServingEngine(
             params, CFG, lm.ServeConfig(stamp=None, kv=QUANT),
             paged_cfg(num_lo_blocks=2))   # 1 usable page = 16 lo tokens
-        pe.submit(prompts[1], 40)         # needs 45+40-16 lo tokens
-        with pytest.raises(OutOfBlocks):
-            pe.run()
+        uid = pe.submit(prompts[1], 40)   # needs 45+40-16 lo tokens
+        req = pe.request(uid)
+        assert req.status == "rejected"
+        assert "capacity-infeasible" in req.error
+        assert pe.stats["rejected"] == 1
+        done = pe.run()                   # nothing queued; returns reject
+        assert [r.uid for r in done] == [uid]
+        assert pe.sched.quiescent()       # no page/slot leaked on the way
 
 
 class TestEngineConfigDefaults:

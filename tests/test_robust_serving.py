@@ -1,0 +1,367 @@
+"""Request-lifecycle robustness: submit validation, terminal states,
+cancellation (including the cancel-at-every-step invariant audit),
+deadlines under an injected clock, bounded-queue load shedding, watermark
+preemption, and the no-progress watchdog.
+
+Fault-injection *storms* live in test_chaos.py (marker ``chaos``, its own
+CI step); this file is tier-1 — every test here is deterministic and
+fault-free except the watchdog regression, which needs injected
+exhaustion to reproduce the pre-fix livelock."""
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_platform_name", "cpu")
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.serving import kvcache as KV
+from repro.serving import paged_kvcache as PKV
+from repro.serving.engine import (BucketedEngine, EngineConfig,
+                                  PagedEngineConfig, PagedServingEngine)
+from repro.serving.faults import FaultPlan, corrupt_swapped
+from repro.serving.scheduler import (CANCELLED, SchedRequest, Scheduler,
+                                     SchedulerConfig)
+
+CFG = ModelConfig(name="robust-test", family="dense", num_layers=2,
+                  d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                  vocab_size=128)
+QUANT = KV.KVCacheConfig(quantized=True, num_hi=16)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return lm.init_params(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def prompts():
+    rng = np.random.default_rng(2)
+    return [rng.integers(0, CFG.vocab_size, l) for l in (20, 45, 12, 30)]
+
+
+def paged_cfg(**kw):
+    kw.setdefault("max_slots", 5)
+    kw.setdefault("prefill_chunk", 64)
+    kw.setdefault("max_seq", 96)
+    kw.setdefault("block_size", 16)
+    return PagedEngineConfig(**kw)
+
+
+def mk_paged(params, **kw):
+    ecfg_kw = kw.pop("ecfg_kw", {})
+    return PagedServingEngine(params, CFG,
+                              lm.ServeConfig(stamp=None, kv=QUANT),
+                              paged_cfg(**ecfg_kw), **kw)
+
+
+# ---------------------------------------------------------------------------
+# submit() validation — both engines
+# ---------------------------------------------------------------------------
+
+
+class TestSubmitValidation:
+    @pytest.fixture(params=["paged", "bucketed"])
+    def engine(self, request, params):
+        if request.param == "paged":
+            return mk_paged(params)
+        return BucketedEngine(params, CFG,
+                              lm.ServeConfig(stamp=None, kv=QUANT),
+                              EngineConfig(max_batch=4, bucket=64,
+                                           max_seq=96))
+
+    def test_empty_prompt(self, engine):
+        with pytest.raises(ValueError, match="empty prompt"):
+            engine.submit(np.zeros(0, np.int32), 4)
+
+    def test_nonpositive_max_new(self, engine):
+        with pytest.raises(ValueError, match="max_new_tokens"):
+            engine.submit(np.arange(5) % 128, 0)
+        with pytest.raises(ValueError, match="max_new_tokens"):
+            engine.submit(np.arange(5) % 128, -3)
+
+    def test_overlong_prompt(self, engine):
+        # paged limit: max_seq - 1 = 95; bucketed: min(bucket, max_seq-1)
+        with pytest.raises(ValueError, match="prompt length"):
+            engine.submit(np.arange(500) % 128, 4)
+
+    def test_validation_rejects_before_enqueue(self, engine):
+        try:
+            engine.submit(np.zeros(0, np.int32), 4)
+        except ValueError:
+            pass
+        done = getattr(engine, "queue", None)
+        if done is not None:                     # bucketed
+            assert done == []
+        else:
+            assert engine.sched.quiescent()      # paged: nothing queued
+
+
+# ---------------------------------------------------------------------------
+# lifecycle terminal states
+# ---------------------------------------------------------------------------
+
+
+class TestLifecycle:
+    def test_finished_status_and_stats(self, params, prompts):
+        pe = mk_paged(params)
+        uids = [pe.submit(p, 4) for p in prompts[:2]]
+        done = pe.run()
+        assert sorted(r.uid for r in done) == sorted(uids)
+        assert all(r.status == "finished" and r.error is None for r in done)
+        assert pe.stats["finished"] == 2
+        assert pe.sched.quiescent()
+
+    def test_every_terminal_state_reaches_done(self, params, prompts):
+        """finished + cancelled + rejected requests all come back from
+        run(), each in exactly one terminal state."""
+        pe = mk_paged(params, ecfg_kw=dict(num_lo_blocks=2))
+        ok = pe.submit(prompts[2], 2)            # 12 tokens: fits 1 page
+        bad = pe.submit(prompts[1], 40)          # capacity-infeasible
+        gone = pe.submit(prompts[2], 2)
+        assert pe.cancel(gone)
+        assert not pe.cancel(gone)               # already terminal
+        assert not pe.cancel(9999)               # unknown uid
+        done = pe.run()
+        by_uid = {r.uid: r for r in done}
+        assert by_uid[ok].status == "finished"
+        assert by_uid[bad].status == "rejected"
+        assert by_uid[gone].status == "cancelled"
+        assert pe.stats["cancelled"] == 1 and pe.stats["rejected"] == 1
+        assert pe.sched.quiescent()
+
+
+# ---------------------------------------------------------------------------
+# cancellation — incl. the invariant audit at every prefill step index
+# ---------------------------------------------------------------------------
+
+
+class TestCancel:
+    def test_cancel_mid_decode_releases_and_keeps_partial(self, params,
+                                                          prompts):
+        pe = mk_paged(params, ecfg_kw=dict(prefill_chunk=16))
+        uid = pe.submit(prompts[0], 8)           # 20 tokens → 2 chunks
+        other = pe.submit(prompts[2], 8)
+        done = []
+        for _ in range(4):                       # 2 chunks + 2 decodes
+            pe._step(done)
+        assert pe.cancel(uid)
+        req = pe.request(uid)
+        assert req.status == "cancelled"
+        assert 0 < len(req.out_tokens) < 8       # partial generation kept
+        done += pe.run()
+        assert {r.uid for r in done} >= {uid, other}
+        assert pe.request(other).status == "finished"
+        assert pe.sched.quiescent()
+
+    def test_cancel_at_every_step_index_leaks_nothing(self, params,
+                                                      prompts):
+        """Invariant audit (the PR-2 victim-release bug class): cancelling
+        a multi-chunk prefill at EVERY engine step index — including
+        mid-prefill, where the reservation runs ahead of the materialized
+        prefix — must return the allocator and slot pool to fully free."""
+        total_steps = None
+        k = 0
+        while True:
+            pe = mk_paged(params, ecfg_kw=dict(prefill_chunk=16))
+            uid = pe.submit(prompts[1], 4)       # 45 tokens → 3 chunks
+            done = []
+            for _ in range(k):
+                if not pe.sched.has_work():
+                    break
+                pe._step(done)
+            if not pe.sched.has_work():          # ran to completion first
+                total_steps = k
+                break
+            assert pe.cancel(uid), f"cancel failed at step {k}"
+            assert pe.sched.quiescent(), \
+                f"leaked pages/slots cancelling at step {k}"
+            assert pe.request(uid).status == "cancelled"
+            k += 1
+        assert total_steps >= 6                  # 3 chunks + 3 decodes
+
+    def test_cancel_preempted_request_releases_host_copy(self):
+        """Scheduler-level: cancel a request that is swapped out (pages on
+        the host) — the release path must not touch the allocator twice
+        nor leave the swap dict alive."""
+        scfg = SchedulerConfig(max_slots=2, prefill_chunk=16)
+        pcfg = PKV.PagedCacheConfig(block_size=8, num_lo_blocks=5,
+                                    num_hi_blocks=3, max_blocks_per_seq=6,
+                                    quant=QUANT)
+        swaps = {}
+        sched = Scheduler(scfg, pcfg,
+                          swap_out=lambda r: swaps.setdefault(r.uid, {}),
+                          swap_in=lambda r: None)
+        a = SchedRequest(uid=1, prompt=np.zeros(16, np.int32),
+                         max_new_tokens=4, arrival=1)
+        sched.submit(a)
+        sched.plan_step()
+        a.pos = 16                               # chunk materialized
+        sched._preempt(a)
+        a.swapped = {"layer0": {}}               # engine would set this
+        assert a.uid in swaps and a in sched.waiting
+        got = sched.cancel(a.uid)
+        assert got is a and a.state == CANCELLED
+        assert a.swapped is None
+        assert sched.quiescent()
+
+
+# ---------------------------------------------------------------------------
+# deadlines — injected clock, no sleeping
+# ---------------------------------------------------------------------------
+
+
+class TestDeadlines:
+    def test_total_deadline_fails_at_plan_time(self, params, prompts):
+        clk = [0.0]
+        pe = mk_paged(params, clock=lambda: clk[0])
+        late = pe.submit(prompts[0], 4, deadline_s=5.0)
+        fine = pe.submit(prompts[2], 4)
+        clk[0] = 10.0                            # past late's budget
+        done = pe.run()
+        by_uid = {r.uid: r for r in done}
+        assert by_uid[late].status == "failed"
+        assert "deadline miss" in by_uid[late].error
+        assert by_uid[fine].status == "finished"
+        assert pe.stats["deadline_misses"] == 1
+        assert pe.sched.quiescent()
+
+    def test_ttft_deadline_only_before_first_token(self, params, prompts):
+        clk = [0.0]
+        pe = mk_paged(params, clock=lambda: clk[0])
+        uid = pe.submit(prompts[2], 6, ttft_deadline_s=5.0)
+        done = []
+        clk[0] = 1.0                             # inside the TTFT budget
+        pe._step(done)                           # one chunk → first token
+        assert pe.request(uid).ttft_s == 1.0
+        clk[0] = 100.0                           # way past the TTFT budget
+        done += pe.run()
+        # first token already arrived — the TTFT deadline no longer applies
+        assert pe.request(uid).status == "finished"
+        assert pe.stats["deadline_misses"] == 0
+
+    def test_ttft_deadline_miss(self, params, prompts):
+        clk = [0.0]
+        pe = mk_paged(params, clock=lambda: clk[0])
+        uid = pe.submit(prompts[0], 4, ttft_deadline_s=1.0)
+        clk[0] = 2.0
+        done = pe.run()
+        assert done[0].uid == uid and done[0].status == "failed"
+        assert "TTFT" in done[0].error
+        assert pe.sched.quiescent()
+
+
+# ---------------------------------------------------------------------------
+# bounded waiting queue + load shedding
+# ---------------------------------------------------------------------------
+
+
+class TestShedding:
+    def test_reject_newest(self, params, prompts):
+        pe = mk_paged(params, ecfg_kw=dict(max_waiting=2))
+        keep = [pe.submit(prompts[2], 2) for _ in range(2)]
+        shed = pe.submit(prompts[2], 2)          # queue full → newest out
+        assert pe.request(shed).status == "rejected"
+        assert "queue full" in pe.request(shed).error
+        assert pe.stats["shed"] == 1
+        done = pe.run()
+        assert {r.uid for r in done} == set(keep) | {shed}
+        assert all(pe.request(u).status == "finished" for u in keep)
+        assert pe.sched.quiescent()
+
+    def test_shed_oldest_makes_room_for_newest(self, params, prompts):
+        pe = mk_paged(params, ecfg_kw=dict(max_waiting=2,
+                                           shed_policy="shed_oldest"))
+        old = pe.submit(prompts[2], 2)
+        mid = pe.submit(prompts[2], 2)
+        new = pe.submit(prompts[2], 2)           # sheds `old`, admits `new`
+        assert pe.request(old).status == "rejected"
+        assert pe.stats["shed"] == 1
+        done = pe.run()
+        assert {r.uid for r in done} == {old, mid, new}
+        assert pe.request(mid).status == "finished"
+        assert pe.request(new).status == "finished"
+        assert pe.sched.quiescent()
+
+    def test_unknown_policy_rejected_at_construction(self, params):
+        with pytest.raises(ValueError, match="shed_policy"):
+            mk_paged(params, ecfg_kw=dict(shed_policy="drop_everything"))
+
+
+# ---------------------------------------------------------------------------
+# watermark preemption + watchdog
+# ---------------------------------------------------------------------------
+
+
+class TestDegradationMachinery:
+    def test_watermark_preempts_early_and_stays_bit_identical(self, params,
+                                                              prompts):
+        serve = lm.ServeConfig(stamp=None, kv=QUANT)
+        # oracle: identical chunking/slots, ample pool, watermark off
+        ample = PagedServingEngine(
+            params, CFG, serve, paged_cfg(max_slots=3, prefill_chunk=16))
+        for p in prompts[:3]:
+            ample.submit(p, 5)
+        want = {r.uid: r.out_tokens for r in ample.run()}
+
+        pe = mk_paged(params, ecfg_kw=dict(
+            max_slots=3, prefill_chunk=16, num_lo_blocks=9,
+            preempt_watermark=0.5))
+        for p in prompts[:3]:
+            pe.submit(p, 5)
+        got = {r.uid: r.out_tokens for r in pe.run()}
+        assert pe.stats["preemptions"] > 0       # the watermark did fire
+        assert any(kind == "preempt" for _, kind, _ in pe.events)
+        for uid, toks in want.items():
+            np.testing.assert_array_equal(got[uid], toks)
+        assert pe.sched.quiescent()
+
+    def test_watchdog_breaks_livelock(self, params, prompts):
+        """Regression for the run() livelock: a request that can never be
+        placed (here: allocator reports exhaustion forever) used to spin
+        has_work() for eternity once nothing else was runnable.  The
+        watchdog now fails the stuck request — not the engine."""
+        fault = FaultPlan(seed=0, exhaust_steps=frozenset(range(1, 10_000)))
+        pe = mk_paged(params, fault=fault,
+                      ecfg_kw=dict(watchdog_steps=4))
+        uid = pe.submit(prompts[0], 4)
+        done = pe.run()                          # must terminate
+        assert done[0].uid == uid
+        assert done[0].status == "failed"
+        assert "watchdog" in done[0].error
+        assert pe.stats["watchdog_trips"] == 1
+        assert pe.stats["stalled_steps"] >= 4
+        assert pe.sched.quiescent()
+
+
+# ---------------------------------------------------------------------------
+# swap checksums (unit level; storm coverage in test_chaos.py)
+# ---------------------------------------------------------------------------
+
+
+class TestSwapChecksums:
+    def _pools_and_pages(self, params):
+        pcfg = PKV.PagedCacheConfig(block_size=16, num_lo_blocks=6,
+                                    num_hi_blocks=2, max_blocks_per_seq=6,
+                                    quant=QUANT)
+        pools = lm.init_paged_cache(CFG, pcfg, num_slots=2)
+        return pools, pcfg
+
+    def test_roundtrip_passes_checksums(self, params):
+        pools, _ = self._pools_and_pages(params)
+        swapped = PKV.extract_pages(pools, [1], [2, 3], slot=0)
+        assert PKV.CRC_KEY in swapped
+        PKV.insert_pages(pools, swapped, [1], [2, 3], slot=0)  # no raise
+
+    def test_corruption_refused_before_restore(self, params):
+        pools, _ = self._pools_and_pages(params)
+        swapped = PKV.extract_pages(pools, [1], [2, 3], slot=0)
+        bad = corrupt_swapped(swapped, seed=11)
+        with pytest.raises(PKV.SwapCorruption):
+            PKV.insert_pages(pools, bad, [1], [2, 3], slot=0)
+
+    def test_swapped_bytes_ignores_checksum_entry(self, params):
+        pools, _ = self._pools_and_pages(params)
+        swapped = PKV.extract_pages(pools, [1], [2, 3], slot=0)
+        assert PKV.swapped_bytes(swapped) > 0    # ints under CRC_KEY skipped
