@@ -1,0 +1,142 @@
+"""Schema gate for the committed serving trajectory and the observability
+artifacts CI uploads.
+
+A refactor that silently drops a column from ``BENCH_serving.json`` (or a
+metric family from the registry snapshot) breaks the trajectory history —
+every later commit's JSON stops being comparable to the ones before it.
+Renames are fine, but they must show up here as an explicit edit in the
+same PR, not as a quiet hole in the data.
+
+    PYTHONPATH=src:. python benchmarks/check_schema.py \
+        --bench BENCH_serving.json [--metrics metrics.json] \
+        [--trace trace.json]
+
+Exit code is nonzero (with every missing key listed) on any violation.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# -- BENCH_serving.json --------------------------------------------------
+# top-level row -> keys that row must carry.  Percentile dicts are checked
+# one level deeper via PERCENTILE_KEYS.
+BENCH_ROWS = {
+    "config": ("model", "requests", "max_new", "max_seq", "prompt_lens"),
+    "bucketed_bf16": ("requests", "decode_tokens", "wall_s", "tokens_per_s",
+                      "ttft_s", "latency_s", "hbm_bytes_per_token"),
+    "paged_int4": ("requests", "decode_tokens", "wall_s", "tokens_per_s",
+                   "ttft_s", "latency_s", "preemptions", "scheduler_steps",
+                   "device_dispatches_per_step", "recompiles",
+                   "hbm_bytes_per_token"),
+    "paged_int4_two_call": ("requests", "decode_tokens", "tokens_per_s",
+                            "device_dispatches_per_step",
+                            "hbm_bytes_per_token"),
+    "bucketed_int4": ("requests", "decode_tokens", "tokens_per_s",
+                      "hbm_bytes_per_token"),
+    "hybrid_jamba": ("model", "requests", "bucketed", "unified", "two_call",
+                     "ssm_state_bytes_per_slot"),
+    "degraded": ("requests", "virtual_wall_s", "tokens_per_s",
+                 "goodput_tokens_per_s", "finished", "failed", "shed",
+                 "rejected", "shed_rate", "deadline_misses", "preemptions",
+                 "watchdog_trips"),
+}
+BENCH_SCALARS = ("paged_vs_bf16_hbm_ratio", "unified_vs_two_call_tokens_ratio")
+PERCENTILE_KEYS = ("p50", "p90", "p99")
+
+# -- metrics snapshot ----------------------------------------------------
+METRIC_SECTIONS = ("t", "counters", "gauges", "histograms")
+# counter families the engines must always register (value may be 0)
+METRIC_COUNTERS = ("steps", "decode_tokens", "prefill_chunks", "preemptions",
+                   "device_dispatches", "recompiles", "finished", "failed",
+                   "deadline_misses", "nan_quarantines", "demotions")
+METRIC_HISTOGRAMS = ("ttft_s", "latency_s", "queue_wait_s")
+HISTOGRAM_FIELDS = ("edges", "counts", "sum", "count")
+
+# -- Chrome trace --------------------------------------------------------
+TRACE_KEYS = ("traceEvents", "displayTimeUnit", "metadata")
+TRACE_EVENT_KEYS = ("ph", "name", "ts", "pid", "tid")
+
+
+def _check_bench(doc: dict, errs: list) -> None:
+    for row, keys in BENCH_ROWS.items():
+        if row not in doc:
+            errs.append(f"bench: missing row {row!r}")
+            continue
+        for k in keys:
+            if k not in doc[row]:
+                errs.append(f"bench: {row}.{k} missing")
+        for pk in ("ttft_s", "latency_s"):
+            if isinstance(doc[row].get(pk), dict):
+                for q in PERCENTILE_KEYS:
+                    if q not in doc[row][pk]:
+                        errs.append(f"bench: {row}.{pk}.{q} missing")
+    for k in BENCH_SCALARS:
+        if k not in doc:
+            errs.append(f"bench: missing scalar {k!r}")
+
+
+def _check_metrics(doc: dict, errs: list) -> None:
+    for sec in METRIC_SECTIONS:
+        if sec not in doc:
+            errs.append(f"metrics: missing section {sec!r}")
+    counters = doc.get("counters", {})
+    for name in METRIC_COUNTERS:
+        if name not in counters:
+            errs.append(f"metrics: counter {name!r} missing")
+    hists = doc.get("histograms", {})
+    for name in METRIC_HISTOGRAMS:
+        if name not in hists:
+            errs.append(f"metrics: histogram {name!r} missing")
+        else:
+            for f in HISTOGRAM_FIELDS:
+                if f not in hists[name]:
+                    errs.append(f"metrics: histogram {name}.{f} missing")
+
+
+def _check_trace(doc: dict, errs: list) -> None:
+    for k in TRACE_KEYS:
+        if k not in doc:
+            errs.append(f"trace: missing key {k!r}")
+    evs = doc.get("traceEvents", [])
+    if not evs:
+        errs.append("trace: traceEvents is empty")
+    for i, ev in enumerate(evs):
+        # metadata records ("M": process/thread names) carry no timestamp
+        keys = TRACE_EVENT_KEYS if ev.get("ph") != "M" else ("ph", "name",
+                                                             "pid", "tid")
+        for k in keys:
+            if k not in ev:
+                errs.append(f"trace: event[{i}] missing {k!r}")
+                break
+        if ev.get("ph") == "X" and "dur" not in ev:
+            errs.append(f"trace: complete event[{i}] missing 'dur'")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default=None, metavar="PATH")
+    ap.add_argument("--metrics", default=None, metavar="PATH")
+    ap.add_argument("--trace", default=None, metavar="PATH")
+    args = ap.parse_args()
+    if not (args.bench or args.metrics or args.trace):
+        ap.error("nothing to check: pass --bench/--metrics/--trace")
+    errs: list = []
+    for path, fn, label in ((args.bench, _check_bench, "bench"),
+                            (args.metrics, _check_metrics, "metrics"),
+                            (args.trace, _check_trace, "trace")):
+        if path is None:
+            continue
+        with open(path) as f:
+            fn(json.load(f), errs)
+        print(f"[schema] {label}: {path} "
+              f"{'OK' if not any(e.startswith(label) for e in errs) else 'FAIL'}")
+    for e in errs:
+        print(f"[schema] {e}", file=sys.stderr)
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

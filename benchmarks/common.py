@@ -30,6 +30,16 @@ from repro.data.pipeline import ar_grid_features
 Array = jax.Array
 
 
+def hist_percentiles(hist, qs: tuple = (0.5, 0.9, 0.99),
+                     digits: int = 4) -> dict:
+    """Render a `repro.obs.metrics.Histogram` as a ``{"p50": ...}`` row:
+    bucket-interpolated estimates (error bounded by the bucket growth
+    factor), replacing the old sort-the-raw-list percentiles so the bench
+    reports exactly what the engines' registries aggregate."""
+    return {f"p{int(round(q * 100))}": round(hist.percentile(q), digits)
+            for q in qs}
+
+
 def timed(fn: Callable, *args, reps: int = 3) -> tuple[float, object]:
     out = fn(*args)
     jax.block_until_ready(out)

@@ -51,6 +51,7 @@ import numpy as np
 
 jax.config.update("jax_platform_name", "cpu")
 
+from benchmarks.common import hist_percentiles                 # noqa: E402
 from repro.models import lm                                    # noqa: E402
 from repro.models.config import ModelConfig                    # noqa: E402
 from repro.serving import kvcache as KV                        # noqa: E402
@@ -58,24 +59,21 @@ from repro.serving.engine import (BucketedEngine, EngineConfig,  # noqa: E402
                                   PagedEngineConfig, PagedServingEngine)
 
 
-def _pct(xs, q):
-    xs = sorted(xs)
-    return float(xs[min(int(q * len(xs)), len(xs) - 1)])
-
-
 def drive_workload(engine, prompts, max_new: int) -> tuple:
     """One measured engine pass: an untimed warmup over the same request
     mix first (compiles every shape variant — prefill buckets / unified
-    n_pf buckets / decode — and is then reset from the stats, except the
-    cumulative ``recompiles``), then the timed pass.  Returns
+    n_pf buckets / decode — and is then reset via ``reset_stats`` so the
+    timed pass starts from zeroed registries and an empty event ring,
+    except the cumulative ``recompiles``), then the timed pass.
+    Percentiles come from the engines' own latency histograms — both
+    engine classes share the registry surface, so the old hasattr guard
+    (which silently skipped the reset on one of them) is gone.  Returns
     ``(done, row)`` — shared by the dense and hybrid workloads so the
     warmup/reset protocol cannot drift between rows of the same JSON."""
     for p in prompts:
         engine.submit(p, max_new_tokens=max_new)
     engine.run()
-    for key in engine.stats if hasattr(engine, "stats") else ():
-        if key != "recompiles":
-            engine.stats[key] = 0
+    engine.reset_stats(clear_events=True)
     for p in prompts:
         engine.submit(p, max_new_tokens=max_new)
     t0 = time.perf_counter()
@@ -87,11 +85,8 @@ def drive_workload(engine, prompts, max_new: int) -> tuple:
         "decode_tokens": toks,
         "wall_s": round(dt, 3),
         "tokens_per_s": round(toks / dt, 2),
-        "ttft_s": {"p50": round(_pct([r.ttft_s for r in done], 0.5), 4),
-                   "p99": round(_pct([r.ttft_s for r in done], 0.99), 4)},
-        "latency_s": {
-            "p50": round(_pct([r.latency_s for r in done], 0.5), 4),
-            "p99": round(_pct([r.latency_s for r in done], 0.99), 4)},
+        "ttft_s": hist_percentiles(engine.metrics.histogram("ttft_s")),
+        "latency_s": hist_percentiles(engine.metrics.histogram("latency_s")),
     }
     return done, row
 
@@ -131,7 +126,8 @@ def _cache_bytes_per_token(cfg: ModelConfig, kv: KV.KVCacheConfig,
     return total / max(len(lengths), 1)
 
 
-def run(smoke: bool = True, seed: int = 0) -> dict:
+def run(smoke: bool = True, seed: int = 0, trace_out: str = None,
+        metrics_out: str = None) -> dict:
     if smoke:
         cfg = ModelConfig(name="bench-smoke", family="dense", num_layers=2,
                           d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
@@ -207,6 +203,18 @@ def run(smoke: bool = True, seed: int = 0) -> dict:
         row["hbm_bytes_per_token"] = int(_cache_bytes_per_token(
             cfg, kv_q, max_seq, block, final_lens, paged=True))
         results[key] = row
+        if mode == "unified":
+            # CI artifacts from the timed unified pass (the headline row):
+            # the Perfetto-loadable span timeline and the full registry
+            # snapshot the schema check guards
+            if trace_out:
+                from repro.obs.trace import export_chrome_trace
+                with open(trace_out, "w") as f:
+                    json.dump(export_chrome_trace(
+                        eng.events, engine="paged_unified"), f)
+            if metrics_out:
+                with open(metrics_out, "w") as f:
+                    f.write(eng.metrics.to_json())
     assert results["paged_int4"]["device_dispatches_per_step"] == 1.0, \
         "unified step must dispatch exactly one device program per step"
     assert results["paged_int4_two_call"]["device_dispatches_per_step"] > \
@@ -372,8 +380,15 @@ def main():
                     help="tiny model + short workload (CI)")
     ap.add_argument("--out", default="BENCH_serving.json")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the timed unified-mode pass's event ring "
+                         "as Chrome trace-event JSON (ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the unified-mode engine's metrics "
+                         "registry snapshot as JSON")
     args = ap.parse_args()
-    results = run(smoke=args.smoke, seed=args.seed)
+    results = run(smoke=args.smoke, seed=args.seed,
+                  trace_out=args.trace_out, metrics_out=args.metrics_out)
     with open(args.out, "w") as f:
         json.dump(results, f, indent=2)
     print(json.dumps(results, indent=2))

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 
 from repro.core import quant as Q
 from repro.core import transforms as T
+from repro.obs import quantstats as QS
 
 Array = jax.Array
 
@@ -126,7 +127,8 @@ def invert_seq_transform(y: Array, cfg: StampConfig, axis: int = -2,
 
 def stamp_fake_quant(x: Array, cfg: StampConfig, axis: int = -2,
                      basis: Optional[Array] = None,
-                     seg_len: Optional[int] = None) -> Array:
+                     seg_len: Optional[int] = None,
+                     site: Optional[str] = None) -> Array:
     """Full STaMP round trip on an activation: ``L⁻¹ Q(L X)`` — used when a
     consumer needs the activation back in the original domain (e.g. KV-cache
     values feeding non-linear attention math).
@@ -140,13 +142,15 @@ def stamp_fake_quant(x: Array, cfg: StampConfig, axis: int = -2,
         assert axis in (-2, x.ndim - 2), "segments fold along axis 1"
         return unfold_segments(
             stamp_fake_quant(fold_segments(x, seg_len), cfg, axis=-2,
-                             basis=basis), x.shape[0])
+                             basis=basis, site=site), x.shape[0])
     # f32 transform + quant statistics: bf16 butterflies perturb the min/max
     # scales enough to flip 4-bit codes, which would make the reference and
     # fused paths (kernel computes in f32) diverge beyond quant tolerance.
     tx = apply_seq_transform(x.astype(jnp.float32), cfg, axis=axis,
                              basis=basis)
     bits = cfg.bits_vector(tx.shape[axis])
+    if axis in (-2, x.ndim - 2):     # telemetry assumes (..., s, d) layout
+        QS.record(site, tx, bits, cfg.hi_bits)
     if cfg.granularity == "block":
         # per-(token, block) scales — bits stays per-token
         tq = _blockwise_mixed(tx, bits, cfg.block_size)
@@ -279,6 +283,7 @@ def stamp_linear(
     prepared: Optional[PreparedLinear] = None,
     merge_heads: bool = False,
     seg_len: Optional[int] = None,
+    site: Optional[str] = None,
 ) -> Array:
     """STaMP linear layer (Fig. 2a).
 
@@ -308,10 +313,11 @@ def stamp_linear(
         y = stamp_linear(fold_segments(x, seg_len), w, b, cfg,
                          w_quant=w_quant, basis=basis,
                          feature_rot=feature_rot, prepared=prepared,
-                         merge_heads=merge_heads)
+                         merge_heads=merge_heads, site=site)
         return unfold_segments(y, x.shape[0])
     if fused_eligible(cfg, feature_rot) and \
             (w_quant is None or w_quant.bits <= 8):
+        _record_fused(x, cfg, site, merge_heads=merge_heads)
         prep = prepared
         if prep is None:
             prep = prepare_linear(w, b, w_quant=w_quant,
@@ -334,7 +340,8 @@ def stamp_linear(
         y = x @ wmat
         return y + b if b is not None else y
 
-    tq = _reference_quantize(x, cfg, basis=basis, feature_rot=feature_rot)
+    tq = _reference_quantize(x, cfg, basis=basis, feature_rot=feature_rot,
+                             site=site)
     wmat = w_quant.dequant(x.dtype) if w_quant is not None else w
     y = tq.astype(x.dtype) @ wmat
     y = invert_seq_transform(y, cfg, basis=basis)
@@ -345,7 +352,8 @@ def stamp_linear(
 
 def _reference_quantize(x: Array, cfg: StampConfig,
                         basis: Optional[Array] = None,
-                        feature_rot: Optional[Array] = None) -> Array:
+                        feature_rot: Optional[Array] = None,
+                        site: Optional[str] = None) -> Array:
     """Reference-path transformed + fake-quantized activation (shared by
     the single and dual linears, so their quantization semantics can't
     diverge)."""
@@ -353,9 +361,25 @@ def _reference_quantize(x: Array, cfg: StampConfig,
     if feature_rot is not None:
         tx = tx @ feature_rot.astype(tx.dtype)
     bits = cfg.bits_vector(tx.shape[-2])
+    QS.record(site, tx, bits, cfg.hi_bits)
     if cfg.granularity == "block":
         return _blockwise_mixed(tx, bits, cfg.block_size)
     return Q.fake_quant(tx, bits, axis=-1)
+
+
+def _record_fused(x: Array, cfg: StampConfig, site: Optional[str],
+                  merge_heads: bool = False) -> None:
+    """Quant-health telemetry for the fused path: the kernel fuses
+    transform→quantize→GEMM into one program, so the transform and the
+    per-token scale statistics are recomputed HERE with plain jnp ops —
+    extra FLOPs inside the same traced program, never an extra device
+    dispatch (the no-op case costs nothing: collection is off at trace
+    time unless the entry point opened a scope)."""
+    if not QS.active() or site is None or not cfg.enabled:
+        return
+    xm = x.reshape(*x.shape[:-2], -1) if merge_heads else x
+    tx = apply_seq_transform(xm.astype(jnp.float32), cfg)
+    QS.record(site, tx, cfg.bits_vector(tx.shape[-2]), cfg.hi_bits)
 
 
 def stamp_dual_linear(
@@ -371,6 +395,7 @@ def stamp_dual_linear(
     prepared_up: Optional[PreparedLinear] = None,
     epilogue: str = "silu_mul",
     seg_len: Optional[int] = None,
+    site: Optional[str] = None,
 ):
     """STaMP gate/up pair sharing ONE transform+quantize of ``x``.
 
@@ -392,11 +417,13 @@ def stamp_dual_linear(
         y = stamp_dual_linear(fold_segments(x, seg_len), w_gate, w_up, cfg,
                               b_gate=b_gate, b_up=b_up, basis=basis,
                               prepared_gate=prepared_gate,
-                              prepared_up=prepared_up, epilogue=epilogue)
+                              prepared_up=prepared_up, epilogue=epilogue,
+                              site=site)
         if epilogue == "silu_mul":
             return unfold_segments(y, x.shape[0])
         return tuple(unfold_segments(o, x.shape[0]) for o in y)
     if fused_eligible(cfg):
+        _record_fused(x, cfg, site)
         prep_g = prepared_gate if prepared_gate is not None else \
             prepare_linear(w_gate, b_gate, bits=cfg.fused_weight_bits)
         prep_u = prepared_up if prepared_up is not None else \
@@ -431,7 +458,8 @@ def stamp_dual_linear(
         u = x @ w_up
     else:
         # one shared reference-path quantization, two matmuls
-        tq = _reference_quantize(x, cfg, basis=basis).astype(x.dtype)
+        tq = _reference_quantize(x, cfg, basis=basis,
+                                 site=site).astype(x.dtype)
         g = invert_seq_transform(tq @ w_gate, cfg, basis=basis)
         u = invert_seq_transform(tq @ w_up, cfg, basis=basis)
     if b_gate is not None:

@@ -133,6 +133,22 @@ across two layouts inside one engine step:
   recurrence with inactive slots masked) — it reads no pages, so it needs
   no Pallas treatment; the Mamba in/out projections still route through
   the fused STaMP kernels above.
+
+Telemetry hooks
+---------------
+Every STaMP linear — reference and fused — carries a ``site`` label
+(``qkv``, ``wo``, ``gate_up``, ``wo_mlp``, ``moe``, ``in_proj``,
+``out_proj``), and when `repro.models.lm.ServeConfig.quant_telemetry`
+is on, records its transformed activation into
+`repro.obs.quantstats` at trace time.  The stats are per-site scalar
+reductions (clip/saturation counts, hi-token coverage, scale bounds)
+computed in the SAME device program as the step — the fused kernels
+themselves are untouched; the reductions read the kernel's *input*
+activation, so telemetry never perturbs the integer path and adds zero
+device dispatches.  The serving engines fold the scalars into their
+metrics registry (``quant_*{site=…}``) and raise ``quant_clip_alert``
+events past the configured threshold — see ``repro/obs/quantstats.py``
+for the collection protocol (how records escape ``lax.scan``).
 """
 
 from repro.kernels.ops import (  # noqa: F401

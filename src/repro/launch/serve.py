@@ -86,6 +86,20 @@ def main():
                     help="inject seeded faults (page exhaustion, swap "
                          "corruption, NaN) via a FaultPlan — a smoke of "
                          "the degradation machinery, not a benchmark")
+    # -- observability ---------------------------------------------------
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write the engine metrics registry snapshot "
+                         "(counters/gauges/histograms) as JSON on exit")
+    ap.add_argument("--metrics-prom", default=None, metavar="PATH",
+                    help="write the registry in Prometheus text "
+                         "exposition format on exit")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the engine event ring as Chrome "
+                         "trace-event JSON (open in ui.perfetto.dev)")
+    ap.add_argument("--quant-telemetry", action="store_true",
+                    help="collect per-STaMP-site quant-health stats "
+                         "(clip rate, hi-token coverage, scale range) in "
+                         "the same device program as each step")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -116,6 +130,8 @@ def main():
         serve = dataclasses.replace(serve, fused_cache_attention=True)
     if args.numerics_guard:
         serve = dataclasses.replace(serve, numerics_guard=True)
+    if args.quant_telemetry:
+        serve = dataclasses.replace(serve, quant_telemetry=True)
 
     max_seq = 128 + args.max_new
     if args.engine == "paged":
@@ -174,6 +190,29 @@ def main():
               f"watchdog_trips={st['watchdog_trips']}")
     for r in done[:3]:
         print(f"  req {r.uid}: {r.out_tokens[:10]}")
+
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as f:
+            f.write(engine.metrics.to_json())
+        print(f"[obs] metrics snapshot -> {args.metrics_json}")
+    if args.metrics_prom:
+        with open(args.metrics_prom, "w") as f:
+            f.write(engine.metrics.to_prometheus())
+        print(f"[obs] prometheus text -> {args.metrics_prom}")
+    if args.trace_out:
+        import json
+        from repro.obs.trace import export_chrome_trace
+        trace = export_chrome_trace(engine.events, engine=args.engine)
+        with open(args.trace_out, "w") as f:
+            json.dump(trace, f)
+        print(f"[obs] {len(trace['traceEvents'])} trace events -> "
+              f"{args.trace_out} (open in ui.perfetto.dev)")
+    if args.quant_telemetry:
+        snap = engine.metrics.snapshot()
+        rates = {k: round(v, 4) for k, v in snap["gauges"].items()
+                 if k.startswith("quant_clip_rate")}
+        if rates:
+            print(f"[obs] quant clip rates: {rates}")
 
 
 if __name__ == "__main__":

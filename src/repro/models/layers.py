@@ -64,7 +64,8 @@ def apply_rope(x: Array, positions: Array, theta: float) -> Array:
 
 
 def stamp_fused_linear(x: Array, w: dict, b: Optional[Array],
-                       stamp_cfg, merge_heads: bool = False) -> Array:
+                       stamp_cfg, merge_heads: bool = False,
+                       site: Optional[str] = None) -> Array:
     """Run one STaMP linear through the fused Pallas integer kernel.
 
     ``w`` is a prepared-weight dict ``{"iq": (din, dout) int8, "isw": (1,
@@ -82,11 +83,11 @@ def stamp_fused_linear(x: Array, w: dict, b: Optional[Array],
     from repro.core.stamp import PreparedLinear, stamp_linear
     prep = PreparedLinear(qw=w["iq"], sw=w["isw"], zw=w["izw"], bias=b)
     return stamp_linear(x, None, None, stamp_cfg, prepared=prep,
-                        merge_heads=merge_heads)
+                        merge_heads=merge_heads, site=site)
 
 
 def stamp_fused_dual_linear(x: Array, w_gate: dict, w_up: dict,
-                            stamp_cfg) -> Array:
+                            stamp_cfg, site: Optional[str] = None) -> Array:
     """SwiGLU front half ``silu(x·Wg)·(x·Wu)`` through the dual-output
     fused kernel: the sequence transform + mixed-precision quantize of the
     shared input run ONCE (VMEM scratch) and drive both integer GEMMs; the
@@ -99,7 +100,7 @@ def stamp_fused_dual_linear(x: Array, w_gate: dict, w_up: dict,
                         zw=w_up["izw"], bias=None)
     return stamp_dual_linear(x, None, None, stamp_cfg,
                              prepared_gate=pg, prepared_up=pu,
-                             epilogue="silu_mul")
+                             epilogue="silu_mul", site=site)
 
 
 # ---------------------------------------------------------------------------

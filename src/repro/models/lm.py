@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.core.stamp import StampConfig, stamp_fake_quant
 from repro.core.quant import fake_quant
+from repro.obs import quantstats as QS
 from repro.models import layers as L
 from repro.models.config import LayerSpec, ModelConfig, ShapeConfig
 from repro.serving import kvcache as KV
@@ -51,6 +52,12 @@ class ServeConfig:
     # low-precision escape hatch: sub-8-bit activation formats are one
     # outlier away from saturation, and one poisoned request must not
     # take down the batch
+    quant_telemetry: bool = False  # per-STaMP-site quant-health stats
+    # (clip rate, hi-token coverage, scale range, saturation — see
+    # repro/obs/quantstats.py) returned alongside the step outputs as
+    # on-device scalar reductions in the SAME program: zero extra device
+    # dispatches per step.  Opt-in: changes the arity of prefill /
+    # paged_prefill_chunk / paged_unified_step returns
 
 
 # ---------------------------------------------------------------------------
@@ -371,10 +378,19 @@ def set_fused_decode_matmul(enabled: bool) -> None:
     _FUSED_DECODE_MATMUL = enabled
 
 
-def _maybe_stamp(x: Array, stamp: Optional[StampConfig]) -> Array:
+def _collect_telemetry(serve: ServeConfig) -> bool:
+    """Static (Python-level) gate for quant telemetry: only meaningful
+    when a STaMP config is actually quantizing.  Being static, default
+    configs see the exact historical return arities."""
+    return (serve.quant_telemetry and serve.stamp is not None
+            and serve.stamp.enabled)
+
+
+def _maybe_stamp(x: Array, stamp: Optional[StampConfig],
+                 site: Optional[str] = None) -> Array:
     if stamp is None or not stamp.enabled:
         return x
-    return stamp_fake_quant(x, stamp)
+    return stamp_fake_quant(x, stamp, site=site)
 
 
 def _split_heads(x: Array, nh: int, hd: int) -> Array:
@@ -401,14 +417,16 @@ def _attn_qkv(p: dict, h: Array, cfg: ModelConfig,
         if _use_fused(stamp, p["wqkv"]):
             # ONE kernel call: the sequence transform + quantize of h runs
             # once (kernel scratch), amortized over the full QKV width
-            qkv = L.stamp_fused_linear(h, p["wqkv"], bqkv, stamp)
+            qkv = L.stamp_fused_linear(h, p["wqkv"], bqkv, stamp,
+                                       site="qkv")
         else:
             # decode / reference execution against the same int8 buffers
-            qkv = _linear(_maybe_stamp(h, stamp), p["wqkv"], bqkv)
+            qkv = _linear(_maybe_stamp(h, stamp, site="qkv"),
+                          p["wqkv"], bqkv)
         q, k, v = jnp.split(
             qkv, [cfg.q_dim, cfg.q_dim + cfg.kv_dim], axis=-1)
         return q, k, v
-    h = _maybe_stamp(h, stamp)
+    h = _maybe_stamp(h, stamp, site="qkv")
     return (_linear(h, p["wq"], p.get("bq")),
             _linear(h, p["wk"], p.get("bk")),
             _linear(h, p["wv"], p.get("bv")))
@@ -422,8 +440,8 @@ def _attn_out(p: dict, attn: Array, x: Array,
         # into the kernel — its stamped quantize fuses with the head-merge
         # reshape, so no merged (b, s, nh·hd) activation round-trips HBM
         return x + L.stamp_fused_linear(attn, p["wo"], None, stamp,
-                                        merge_heads=True)
-    out = _maybe_stamp(_merge_heads(attn), stamp)
+                                        merge_heads=True, site="wo")
+    out = _maybe_stamp(_merge_heads(attn), stamp, site="wo")
     return x + _linear(out, p["wo"])
 
 
@@ -625,9 +643,11 @@ def _mamba_in(p: dict, x: Array, cfg: ModelConfig,
     h = L.rms_norm(x, p["ln1"].astype(x.dtype), cfg.norm_eps)
     if _use_fused(stamp, p["in_proj"]):
         # single-output fused kernel on the pre-mixer projection
-        proj = L.stamp_fused_linear(h, p["in_proj"], None, stamp)
+        proj = L.stamp_fused_linear(h, p["in_proj"], None, stamp,
+                                    site="in_proj")
     else:
-        proj = _linear(_maybe_stamp(h, stamp), p["in_proj"])
+        proj = _linear(_maybe_stamp(h, stamp, site="in_proj"),
+                       p["in_proj"])
     z, xbc, dt_raw = jnp.split(proj, [di, 2 * di + 2 * n], axis=-1)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
     return z, xbc, dt
@@ -643,8 +663,9 @@ def _mamba_out(p: dict, yh: Array, z: Array, x: Array, cfg: ModelConfig,
     # same contract that keeps the in_proj dispatch above off the
     # sequence-transform kernel during decode
     if _use_fused(stamp, p["out_proj"]):
-        return x + L.stamp_fused_linear(y, p["out_proj"], None, stamp)
-    y = _maybe_stamp(y, stamp) if not decode else y
+        return x + L.stamp_fused_linear(y, p["out_proj"], None, stamp,
+                                        site="out_proj")
+    y = _maybe_stamp(y, stamp, site="out_proj") if not decode else y
     return x + _linear(y, p["out_proj"])
 
 
@@ -849,7 +870,7 @@ def ffn_block(p: dict, x: Array, spec: LayerSpec, cfg: ModelConfig, *,
         we_gate = _expert_w(p["we_gate"], x.dtype)
         we_up = _expert_w(p["we_up"], x.dtype)
         we_down = _expert_w(p["we_down"], x.dtype)
-        hq = _maybe_stamp(h, stamp)
+        hq = _maybe_stamp(h, stamp, site="moe")
         out = out + L.moe_ffn(hq, gate_w, we_gate, we_up, we_down,
                               cfg.experts_per_token, cfg.capacity_factor,
                               group_size=cfg.moe_group_size)
@@ -860,15 +881,16 @@ def ffn_block(p: dict, x: Array, spec: LayerSpec, cfg: ModelConfig, *,
             # ONE dual-output kernel call: the shared input's transform +
             # quantize runs once (VMEM scratch) and drives both GEMMs,
             # silu·mul epilogue included
-            g = L.stamp_fused_dual_linear(h, wg, wu, stamp)
+            g = L.stamp_fused_dual_linear(h, wg, wu, stamp, site="gate_up")
         else:
-            hq = _maybe_stamp(h, stamp) if hq is None else hq
+            hq = (_maybe_stamp(h, stamp, site="gate_up")
+                  if hq is None else hq)
             g = jax.nn.silu(_linear(hq, wg)) * _linear(hq, wu)
         if _use_fused(stamp, p[f"{prefix}wo_mlp"]):
             out = out + L.stamp_fused_linear(g, p[f"{prefix}wo_mlp"], None,
-                                             stamp)
+                                             stamp, site="wo_mlp")
         else:
-            out = out + _linear(_maybe_stamp(g, stamp),
+            out = out + _linear(_maybe_stamp(g, stamp, site="wo_mlp"),
                                 p[f"{prefix}wo_mlp"])
     return x + out
 
@@ -996,6 +1018,13 @@ def run_stack(
         new_cache.update(new_pro_cache)
         return x, new_cache
 
+    # quant telemetry: records made by the prologue layers above live at
+    # the outer trace level — drain them NOW so the scan body (traced
+    # next) cannot capture them as closure constants and stack them
+    # nper×.  The body drains its own records and returns them as extra
+    # scan outputs; absorb() reduces the stacked period axis back out.
+    pro_telem = QS.drain()
+
     def body(xc, xs):
         p_slice, c_slice = xs
         new_entries = {}
@@ -1006,14 +1035,16 @@ def run_stack(
             if ne is not None:
                 new_entries[str(j)] = ne
         xc = constrain(xc, policy, lambda pol: pol.acts())
-        return xc, new_entries
+        return xc, (new_entries, QS.drain())
 
     if mode == "train" and remat:
         body = jax.checkpoint(body,
                               policy=jax.checkpoint_policies.nothing_saveable)
 
     xs = (params["period"], cache_per)
-    x, period_cache = jax.lax.scan(body, x, xs)
+    x, (period_cache, period_telem) = jax.lax.scan(body, x, xs)
+    QS.absorb(period_telem)
+    QS.merge_flat(pro_telem)
     new_cache = None
     if mode in ("prefill", "decode", "unified"):
         new_cache = dict(period_cache)
@@ -1148,16 +1179,24 @@ def prefill(params, batch: dict, cfg: ModelConfig,
     """
     seq_lengths = None if last_pos is None else \
         jnp.asarray(last_pos, jnp.int32) + 1
-    x, cache, _ = model_hidden(params, batch, cfg, mode="prefill",
-                               policy=policy, stamp=serve.stamp,
-                               kv_cfg=serve.kv, remat=False,
-                               cache_capacity=serve.cache_capacity,
-                               seq_lengths=seq_lengths)
+    collect = _collect_telemetry(serve)
+    if collect:
+        QS.begin()
+    try:
+        x, cache, _ = model_hidden(params, batch, cfg, mode="prefill",
+                                   policy=policy, stamp=serve.stamp,
+                                   kv_cfg=serve.kv, remat=False,
+                                   cache_capacity=serve.cache_capacity,
+                                   seq_lengths=seq_lengths)
+    finally:
+        telem = QS.end() if collect else None
     if last_pos is None:
         x_last = x[:, -1:]
     else:
         x_last = jnp.take_along_axis(x, last_pos[:, None, None], axis=1)
     logits = _linear(x_last, _head_weight(params))[:, 0]
+    if collect:
+        return logits.astype(jnp.float32), cache, telem
     return logits.astype(jnp.float32), cache
 
 
@@ -1318,13 +1357,21 @@ def paged_prefill_chunk(params, pools: dict, tokens: Array, start: Array,
              # valid token count is last_index + 1 on every chunk (final
              # chunks end at the prompt's last token by construction)
              "slot": slot, "valid": last_index + 1}
-    x, new_pools = run_stack(params, x, cfg, mode="prefill",
-                             positions=positions, policy=policy,
-                             stamp=serve.stamp, kv_cfg=serve.kv,
-                             cache=pools, paged=paged, remat=False)
+    collect = _collect_telemetry(serve)
+    if collect:
+        QS.begin()
+    try:
+        x, new_pools = run_stack(params, x, cfg, mode="prefill",
+                                 positions=positions, policy=policy,
+                                 stamp=serve.stamp, kv_cfg=serve.kv,
+                                 cache=pools, paged=paged, remat=False)
+    finally:
+        telem = QS.end() if collect else None
     x = L.rms_norm(x, params["final_norm"].astype(x.dtype), cfg.norm_eps)
     x_last = jnp.take_along_axis(x, last_index[None, None, None], axis=1)
     logits = _linear(x_last, _head_weight(params))[:, 0]
+    if collect:
+        return logits.astype(jnp.float32), new_pools, telem
     return logits.astype(jnp.float32), new_pools
 
 
@@ -1382,12 +1429,18 @@ def paged_unified_step(params, pools: dict, pf_tokens: Array,
     Returns ``(pf_logits (n_pf, V), dec_logits (S, V), new_pools)``.
     """
     n_pf, c_len = pf_tokens.shape
+    collect = _collect_telemetry(serve)
     if n_pf == 0:
+        # all-decode fast case: decode runs transform-free (stamp=None),
+        # so there is nothing to record — but the return arity must match
+        # the collecting branch
         dec_logits, new_pools = paged_decode_step(
             params, pools, dec_tokens, dec_positions, hi_table, lo_table,
             pages, offsets, is_hi, cfg, serve, dec_active, policy)
-        return (jnp.zeros((0, dec_logits.shape[-1]), jnp.float32),
-                dec_logits, new_pools)
+        pf_logits = jnp.zeros((0, dec_logits.shape[-1]), jnp.float32)
+        if collect:
+            return pf_logits, dec_logits, new_pools, {}
+        return pf_logits, dec_logits, new_pools
     assert policy is None, "unified step is single-device for now"
     set_fused_cache_attention(serve.fused_cache_attention)
     # both regions live in ONE trace, so the decode-matmul dispatch relies
@@ -1416,10 +1469,16 @@ def paged_unified_step(params, pools: dict, pf_tokens: Array,
              # slot-dense SSM state routing (hybrid stacks)
              "pf_slots": pf_slots, "pf_valid": pf_length - pf_start,
              "dec_active": dec_active}
-    x, new_pools = run_stack(params, (x_pf, x_dec), cfg, mode="unified",
-                             positions=None, policy=policy,
-                             stamp=serve.stamp, kv_cfg=serve.kv,
-                             cache=pools, paged=paged, remat=False)
+    if collect:
+        QS.begin()
+    try:
+        x, new_pools = run_stack(params, (x_pf, x_dec), cfg,
+                                 mode="unified", positions=None,
+                                 policy=policy, stamp=serve.stamp,
+                                 kv_cfg=serve.kv, cache=pools,
+                                 paged=paged, remat=False)
+    finally:
+        telem = QS.end() if collect else None
     x_pf, x_dec = x
     head = _head_weight(params)
     x_pf = L.rms_norm(x_pf, params["final_norm"].astype(x_pf.dtype),
@@ -1429,6 +1488,9 @@ def paged_unified_step(params, pools: dict, pf_tokens: Array,
     x_dec = L.rms_norm(x_dec, params["final_norm"].astype(x_dec.dtype),
                        cfg.norm_eps)
     dec_logits = _linear(x_dec[:, 0], head)
+    if collect:
+        return (pf_logits.astype(jnp.float32),
+                dec_logits.astype(jnp.float32), new_pools, telem)
     return (pf_logits.astype(jnp.float32), dec_logits.astype(jnp.float32),
             new_pools)
 

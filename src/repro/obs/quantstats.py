@@ -1,0 +1,202 @@
+r"""STaMP quantization-health telemetry: per-site on-device reductions.
+
+The question this answers: *are the activation quantizers healthy at each
+STaMP site* (qkv, wo, gate_up, wo_mlp, moe, in_proj, out_proj)?  Four
+signals per site, all O(1) scalars reduced on device:
+
+* **clip rate** — fraction of pre-clamp codes outside ``[0, 2^b-1]``.
+  Min-max scales clip nothing by construction, so a *rising* clip rate
+  means the scales no longer cover the transformed activations (stale
+  calibration, saturating distribution) — the early warning that fires
+  before the PR-6 NaN quarantine does.
+* **saturation count** — codes ON the rails (0 or 2^b−1).  Nonzero is
+  normal (min/max always saturate); a large fraction means the
+  distribution is heavy-tailed in the transformed domain and the low-bit
+  codes carry little information.
+* **hi-token coverage** — fraction of (batch, token) rows quantized at
+  ``hi_bits``; checks the mixed-precision budget the paper's accuracy
+  story depends on is actually being spent.
+* **scale dynamic range** — log2(max/min) of the per-token scales; a
+  blow-up here predicts poor low-bit fidelity for the small-scale rows.
+
+Collection protocol (how the stats escape ``jax.lax.scan``)
+-----------------------------------------------------------
+Recording happens at *trace time* into a module-level collector:
+
+1. an engine entry point (``lm.prefill`` / ``lm.paged_unified_step``,
+   gated on ``ServeConfig.quant_telemetry``) calls :func:`begin`;
+2. each STaMP site calls :func:`record` with its transformed activation
+   — inside ``run_stack``'s scan body these are scan tracers, so the
+   body :func:`drain`\ s them and returns them as extra scan outputs
+   (stacked over the period axis), while prologue-layer records stay in
+   the collector;
+3. ``run_stack`` re-absorbs the period-stacked stats (:func:`absorb`:
+   counts sum, scale bounds min/max over the period axis);
+4. the entry point calls :func:`end` and returns the site dict alongside
+   its normal outputs — the scalars travel in the SAME device program,
+   which is what keeps telemetry at zero extra dispatches per step
+   (asserted in tests/test_obs.py).
+
+The stats are jnp scalars until the engine host-transfers them into its
+`MetricsRegistry` (:func:`summarize`).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant as Q
+
+# keys summed across layers/steps vs. combined by min/max
+_SUM_KEYS = ("clipped", "saturated", "elems", "hi_tokens", "tokens")
+_MIN_KEYS = ("scale_min",)
+_MAX_KEYS = ("scale_max",)
+
+_ACTIVE = False
+_SITES: Optional[Dict[str, Dict[str, jnp.ndarray]]] = None
+
+
+def active() -> bool:
+    return _ACTIVE
+
+
+def begin() -> None:
+    """Start a collection scope (entry points only, at trace time)."""
+    global _ACTIVE, _SITES
+    _ACTIVE = True
+    _SITES = {}
+
+
+def end() -> Dict[str, Dict[str, jnp.ndarray]]:
+    """Close the scope and return everything collected."""
+    global _ACTIVE, _SITES
+    out = _SITES or {}
+    _ACTIVE = False
+    _SITES = None
+    return out
+
+
+def drain() -> Dict[str, Dict[str, jnp.ndarray]]:
+    """Take the records accumulated so far, leaving the scope open.
+    ``run_stack``'s scan body drains so its tracers leave the body as
+    scan outputs instead of leaking."""
+    global _SITES
+    if not _ACTIVE or not _SITES:
+        return {}
+    out = _SITES
+    _SITES = {}
+    return out
+
+
+def _merge(dst: Dict[str, Dict], site: str, stats: Dict) -> None:
+    cur = dst.get(site)
+    if cur is None:
+        dst[site] = dict(stats)
+        return
+    for k in _SUM_KEYS:
+        cur[k] = cur[k] + stats[k]
+    for k in _MIN_KEYS:
+        cur[k] = jnp.minimum(cur[k], stats[k])
+    for k in _MAX_KEYS:
+        cur[k] = jnp.maximum(cur[k], stats[k])
+
+
+def merge_flat(records: Dict[str, Dict]) -> None:
+    """Merge already-flat records (e.g. prologue-layer stats drained
+    before the scan) back into the open scope."""
+    if not _ACTIVE or not records:
+        return
+    for site, stats in records.items():
+        _merge(_SITES, site, stats)
+
+
+def absorb(stacked: Dict[str, Dict]) -> None:
+    """Merge period-stacked scan outputs (leading axis = period layers)
+    back into the open scope, reducing the stacked axis first."""
+    if not _ACTIVE or not stacked:
+        return
+    for site, stats in stacked.items():
+        flat = {}
+        for k in _SUM_KEYS:
+            flat[k] = jnp.sum(stats[k], axis=0)
+        for k in _MIN_KEYS:
+            flat[k] = jnp.min(stats[k], axis=0)
+        for k in _MAX_KEYS:
+            flat[k] = jnp.max(stats[k], axis=0)
+        _merge(_SITES, site, flat)
+
+
+def record(site: Optional[str], tx, bits, hi_bits: int) -> None:
+    """Record one site's transformed activation (called from the STaMP
+    linears at trace time; no-op unless a scope is open)."""
+    if not _ACTIVE or site is None:
+        return
+    _merge(_SITES, site, site_stats(tx, bits, hi_bits))
+
+
+def site_stats(tx, bits, hi_bits: int, scale=None, zp=None
+               ) -> Dict[str, jnp.ndarray]:
+    """The on-device reductions for one transformed activation ``tx``
+    of shape ``(..., s, d)`` with per-token ``bits`` (shape ``(s,)`` or
+    scalar).
+
+    Pass ``scale``/``zp`` to audit externally-chosen quantizer params;
+    by default the same per-token asymmetric min-max params the
+    quantizer itself derives are recomputed here (XLA CSEs the
+    duplicate reductions on the reference path).  Block-granularity
+    configs are audited with the same per-token proxy scales.
+    """
+    tx = tx.astype(jnp.float32)
+    if scale is None:
+        scale, zp = Q.minmax_scale_offset(tx, bits, axis=-1)
+    n = Q._levels(bits)
+    if isinstance(bits, jnp.ndarray) and getattr(bits, "ndim", 0):
+        n = Q._align_token_axis(n, tx.ndim, -1)
+    q_raw = jnp.round(tx / scale) + zp
+    # half-a-code tolerance: an exact min/max hit lands on the rail to
+    # within float error and must not count as clipped
+    clipped = jnp.sum((q_raw < -0.5) | (q_raw > n + 0.5))
+    q = jnp.clip(q_raw, 0.0, n)
+    saturated = jnp.sum((q <= 0.5) | (q >= n - 0.5))
+    s = tx.shape[-2]
+    tokens = float(np.prod(tx.shape[:-1]))      # (batch…, token) rows
+    rows_per_seq = tokens / float(s)
+    if isinstance(bits, jnp.ndarray) and getattr(bits, "ndim", 0):
+        hi_tokens = jnp.sum(
+            (bits >= float(hi_bits)).astype(jnp.float32)) * rows_per_seq
+    else:
+        hi_tokens = jnp.asarray(
+            tokens if float(bits) >= float(hi_bits) else 0.0, jnp.float32)
+    return {
+        "clipped": clipped.astype(jnp.float32),
+        "saturated": saturated.astype(jnp.float32),
+        "elems": jnp.asarray(float(tx.size), jnp.float32),
+        "hi_tokens": hi_tokens.astype(jnp.float32),
+        "tokens": jnp.asarray(tokens, jnp.float32),
+        "scale_min": jnp.min(scale).astype(jnp.float32),
+        "scale_max": jnp.max(scale).astype(jnp.float32),
+    }
+
+
+def summarize(raw: Dict[str, Dict]) -> Dict[str, Dict[str, float]]:
+    """Host-side rates from the device counts: per site, ``clip_rate``,
+    ``sat_rate``, ``hi_coverage``, ``scale_log2_range`` plus the raw
+    counts as floats."""
+    out: Dict[str, Dict[str, float]] = {}
+    for site, stats in raw.items():
+        vals = {k: float(np.asarray(v)) for k, v in stats.items()}
+        elems = max(vals["elems"], 1.0)
+        tokens = max(vals["tokens"], 1.0)
+        smin = max(vals["scale_min"], 1e-30)
+        out[site] = {
+            **vals,
+            "clip_rate": vals["clipped"] / elems,
+            "sat_rate": vals["saturated"] / elems,
+            "hi_coverage": vals["hi_tokens"] / tokens,
+            "scale_log2_range": float(np.log2(max(vals["scale_max"], smin)
+                                              / smin)),
+        }
+    return out

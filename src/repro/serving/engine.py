@@ -36,6 +36,9 @@ import numpy as np
 
 from repro.models import lm
 from repro.models.config import ModelConfig
+from repro.obs import quantstats as QS
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Event, StepTimer
 from repro.serving import paged_kvcache as PKV
 from repro.serving.faults import FaultPlan, corrupt_swapped
 from repro.serving.scheduler import (CANCELLED, PREFILLING, REJECTED, RUNNING,
@@ -65,6 +68,8 @@ class Request:
     ttft_s: float = 0.0           # submit → first token
     preemptions: int = 0
     submit_t: float = 0.0
+    obs_submit_t: float = 0.0     # observability-clock submit stamp (the
+    # engine clock owns deadlines/TTFT; histograms/events use this one)
     # lifecycle: "queued" until the request reaches exactly one terminal
     # state — "finished" | "failed" | "cancelled" | "rejected".  `error`
     # says why for the failed/rejected ones.  `out_tokens` carries the
@@ -81,6 +86,10 @@ class EngineConfig:
     bucket: int = 128             # prompt bucket length (pad to this)
     max_seq: int = 256            # cache capacity
     eos_id: int = -1              # <0 disables EOS stopping
+    max_events: int = 4096        # event-trace ring buffer (0 = unbounded)
+    # quant-telemetry clip rate above which a quant_clip_alert event is
+    # emitted for the offending STaMP site (ServeConfig.quant_telemetry)
+    clip_alert_threshold: float = 0.05
 
 
 @dataclasses.dataclass
@@ -109,18 +118,50 @@ class PagedEngineConfig:
     demote_on_nan: bool = True
     # forwarded to SchedulerConfig.preempt_watermark (< 1.0 enables)
     preempt_watermark: float = 1.0
+    # quant-telemetry clip rate above which a quant_clip_alert event is
+    # emitted for the offending STaMP site (ServeConfig.quant_telemetry)
+    clip_alert_threshold: float = 0.05
 
 
 class _EngineBase:
-    """Shared request plumbing: fused-weight preparation + submit queue.
+    """Shared request plumbing: fused-weight preparation + submit queue +
+    the observability surface both engines expose identically
+    (``metrics`` registry, ``stats`` view, ``events`` ring of typed
+    :class:`Event` records, step-phase timer).
 
-    ``clock`` is the engine's only time source (default
-    ``time.perf_counter``): injectable so deadline tests and the degraded-
-    mode bench advance time deterministically instead of sleeping."""
+    ``clock`` is the engine's *semantic* time source (default
+    ``time.perf_counter``): deadlines, `Request.ttft_s`/`latency_s`.
+    Injectable so deadline tests and the degraded-mode bench advance time
+    deterministically instead of sleeping.  ``obs_clock`` is a SEPARATE
+    source for event timestamps and phase/latency histograms — adding
+    observability must never change how often the semantic clock is read
+    (an injected tick-clock test would otherwise measure different
+    deadlines with telemetry on).  Event appends read no clock at all:
+    they reuse ``_obs_now``, cached at tick points (submit, step-phase
+    boundaries)."""
+
+    # every legacy ``stats`` key, now a registry counter; the dict-shaped
+    # ``stats`` property renders exactly these
+    STAT_KEYS = ("steps", "decode_tokens", "prefill_chunks", "preemptions",
+                 "device_dispatches", "recompiles", "swap_bytes",
+                 "finished", "failed", "cancelled", "rejected", "shed",
+                 "deadline_misses", "nan_quarantines", "demotions",
+                 "watchdog_trips", "stalled_steps", "swap_corruptions")
 
     def __init__(self, params, cfg: ModelConfig, serve: lm.ServeConfig,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 obs_clock: Optional[Callable[[], float]] = None):
         self._clock = clock if clock is not None else time.perf_counter
+        self._obs_clock = obs_clock if obs_clock is not None \
+            else time.perf_counter
+        self._obs_now = 0.0
+        self._step_i = 0
+        self.metrics = MetricsRegistry()
+        for k in self.STAT_KEYS:
+            self.metrics.counter(k, help=f"engine {k.replace('_', ' ')}")
+        self._timer = StepTimer(self.metrics, self._tick,
+                                on_phase=self._on_phase)
+        self.events: collections.deque = collections.deque()
         # the pre-`prepare_fused_weights` weights: fused preparation merges
         # wq/wk/wv into one int8 wqkv (destructively, per site), so demoting
         # a misbehaving engine back to reference execution needs this copy
@@ -141,6 +182,83 @@ class _EngineBase:
         self.cfg = cfg
         self.serve = serve
         self._uid = 0
+
+    # -- observability core ---------------------------------------------
+    def _init_events(self, max_events: int) -> None:
+        """Size the event ring: unbounded growth over a long serving run
+        is a memory leak, so the trace keeps the newest ``max_events``."""
+        self.events = collections.deque(
+            maxlen=max_events if max_events > 0 else None)
+
+    def _tick(self) -> float:
+        """Advance + cache the observability clock.  Everything between
+        two ticks (event appends above all) shares the cached stamp, so
+        instrumenting a new event never costs a clock read."""
+        self._obs_now = self._obs_clock()
+        return self._obs_now
+
+    def _event(self, kind: str, uid: Optional[int] = None,
+               dur: Optional[float] = None, phase: Optional[str] = None,
+               **fields) -> None:
+        self.events.append(Event(step=self._step_i, kind=kind, uid=uid,
+                                 t=self._obs_now, dur=dur, phase=phase,
+                                 fields=fields))
+
+    def _on_phase(self, name: str, t0: float, dur: float) -> None:
+        self.events.append(Event(step=self._step_i, kind="phase",
+                                 t=t0, dur=dur, phase=name))
+
+    def _inc(self, stat: str, n: int = 1) -> None:
+        self.metrics.counter(stat).inc(n)
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        """The legacy dict view over the registry counters (read-only
+        snapshot — mutate through the registry / ``reset_stats``)."""
+        return {k: int(self.metrics.counter(k).value)
+                for k in self.STAT_KEYS}
+
+    def reset_stats(self, keep: tuple = ("recompiles",),
+                    clear_events: bool = False) -> None:
+        """Zero every metric except ``keep`` (default: the cumulative
+        compile counter, which warmup legitimately owns), optionally
+        clearing the event ring — the benchmark warmup/measure boundary
+        for BOTH engines."""
+        self.metrics.reset(exclude=keep)
+        if clear_events:
+            self.events.clear()
+
+    def _observe_latency(self, name: str, seconds: float) -> None:
+        self.metrics.histogram(name, help=f"request {name}").observe(
+            max(seconds, 0.0))
+
+    def _absorb_telemetry(self, raw) -> None:
+        """Fold one step's quant-telemetry site dict into the registry:
+        monotonic counters for the raw counts, gauges for the per-step
+        rates, and a ``quant_clip_alert`` event for any site whose clip
+        rate crosses the config threshold."""
+        if not raw:
+            return
+        summ = QS.summarize(raw)
+        thresh = getattr(self.ecfg, "clip_alert_threshold", 0.05)
+        for site, s in summ.items():
+            lbl = {"site": site}
+            for key in ("clipped", "saturated", "elems", "hi_tokens",
+                        "tokens"):
+                self.metrics.counter(
+                    f"quant_{key}_total", labels=lbl,
+                    help=f"quant telemetry: cumulative {key}").inc(s[key])
+            for key in ("clip_rate", "sat_rate", "hi_coverage",
+                        "scale_log2_range"):
+                self.metrics.gauge(
+                    f"quant_{key}", labels=lbl,
+                    help=f"quant telemetry: last-step {key}").set(s[key])
+            if s["clip_rate"] > thresh:
+                self.metrics.counter(
+                    "quant_clip_alerts", labels=lbl,
+                    help="clip-rate threshold crossings").inc()
+                self._event("quant_clip_alert", site=site,
+                            clip_rate=s["clip_rate"], threshold=thresh)
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
                deadline_s: Optional[float] = None,
@@ -170,8 +288,10 @@ class _EngineBase:
         # perf_counter, not time.time: TTFT / latency are *intervals*, and
         # wall-clock steps (NTP slew) would skew the bench percentiles
         req = Request(self._uid, prompt, max_new_tokens,
-                      submit_t=self._clock(), deadline_s=deadline_s,
+                      submit_t=self._clock(), obs_submit_t=self._tick(),
+                      deadline_s=deadline_s,
                       ttft_deadline_s=ttft_deadline_s)
+        self._event("submit", uid=req.uid, prompt_len=int(prompt.size))
         self._enqueue(req)
         return self._uid
 
@@ -189,16 +309,20 @@ class BucketedEngine(_EngineBase):
 
     def __init__(self, params, cfg: ModelConfig, serve: lm.ServeConfig,
                  ecfg: Optional[EngineConfig] = None,
-                 clock: Optional[Callable[[], float]] = None):
-        super().__init__(params, cfg, serve, clock=clock)
+                 clock: Optional[Callable[[], float]] = None,
+                 obs_clock: Optional[Callable[[], float]] = None):
+        super().__init__(params, cfg, serve, clock=clock,
+                         obs_clock=obs_clock)
         # NOTE: default constructed per instance — a dataclass default
         # instance in the signature would be shared across engines (mutable
         # default), letting one engine's config edits leak into another.
         self.ecfg = ecfg if ecfg is not None else EngineConfig()
+        self._init_events(self.ecfg.max_events)
         self.queue: List[Request] = []
         serve = dataclasses.replace(self.serve,
                                     cache_capacity=self.ecfg.max_seq)
         self.serve = serve
+        self._collect = lm._collect_telemetry(serve)
         cfgm = self.cfg
         self._prefill = jax.jit(
             lambda p, b, lp: lm.prefill(p, b, cfgm, serve, last_pos=lp))
@@ -227,31 +351,51 @@ class BucketedEngine(_EngineBase):
         t0 = self._clock()
         b = len(reqs)
         bucket = self.ecfg.bucket
-        prompts = np.zeros((b, bucket), np.int32)
-        lens = np.zeros((b,), np.int32)
-        for i, r in enumerate(reqs):
-            p = r.prompt[-bucket:]
-            prompts[i, : len(p)] = p              # right-pad
-            lens[i] = len(p)
+        self._step_i += 1
+        self._inc("steps")
+        with self._timer.phase("plan"):
+            prompts = np.zeros((b, bucket), np.int32)
+            lens = np.zeros((b,), np.int32)
+            for i, r in enumerate(reqs):
+                p = r.prompt[-bucket:]
+                prompts[i, : len(p)] = p          # right-pad
+                lens[i] = len(p)
+            for r in reqs:
+                self._event("admit", uid=r.uid)
+                self._observe_latency("queue_wait_s",
+                                      self._obs_now - r.obs_submit_t)
         # Right-padding + per-slot decode positions: pad tokens sit AFTER
         # every prompt position, so causal attention never sees them, the
         # next-token logits are read at each row's true last token, and the
         # first generated token overwrites the pad K/V at position len —
         # the output is identical to serving the request unpadded (and to
         # the paged engine's chunked prefill of the same prompt).
-        logits, cache = self._prefill(self.params,
-                                      {"tokens": jnp.asarray(prompts)},
-                                      jnp.asarray(lens - 1))
-        max_new = max(r.max_new_tokens for r in reqs)
-        max_new = min(max_new, self.ecfg.max_seq - int(lens.max()))
-        outs = np.zeros((b, max_new), np.int32)
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        # force the async-dispatched prefill before timestamping, so TTFT
-        # measures execution (as the paged engine's np.argmax does)
-        jax.block_until_ready(tok)
+        with self._timer.phase("dispatch"):
+            out = self._prefill(self.params,
+                                {"tokens": jnp.asarray(prompts)},
+                                jnp.asarray(lens - 1))
+            if self._collect:
+                logits, cache, telem = out
+            else:
+                logits, cache = out
+                telem = None
+            self._inc("device_dispatches")
+            self._inc("prefill_chunks", b)
+            max_new = max(r.max_new_tokens for r in reqs)
+            max_new = min(max_new, self.ecfg.max_seq - int(lens.max()))
+            outs = np.zeros((b, max_new), np.int32)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            # force the async-dispatched prefill before timestamping, so
+            # TTFT measures execution (as the paged engine's np.argmax
+            # does)
+            jax.block_until_ready(tok)
+        if telem is not None:
+            self._absorb_telemetry(telem)
         t_first = self._clock()
         for r in reqs:
             r.ttft_s = t_first - r.submit_t
+            self._event("first_token", uid=r.uid)
+            self._observe_latency("ttft_s", self._obs_now - r.obs_submit_t)
         alive = np.ones(b, bool)
         for step in range(max_new):
             outs[:, step] = np.where(alive, np.asarray(tok), 0)
@@ -260,14 +404,24 @@ class BucketedEngine(_EngineBase):
                 if not alive.any():
                     outs = outs[:, : step + 1]
                     break
-            logits, cache = self._decode(self.params, cache, tok,
-                                         jnp.asarray(lens + step))
-            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            with self._timer.phase("dispatch"):
+                self._step_i += 1
+                self._inc("steps")
+                logits, cache = self._decode(self.params, cache, tok,
+                                             jnp.asarray(lens + step))
+                self._inc("device_dispatches")
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            self._inc("decode_tokens", int(alive.sum()))
         dt = self._clock() - t0
+        self._tick()
         for i, r in enumerate(reqs):
             r.out_tokens = outs[i][: r.max_new_tokens]
             r.latency_s = dt
             r.status = "finished"
+            self._inc("finished")
+            self._event("finish", uid=r.uid)
+            self._observe_latency("latency_s",
+                                  self._obs_now - r.obs_submit_t)
         return reqs
 
 
@@ -310,8 +464,10 @@ class PagedServingEngine(_EngineBase):
     def __init__(self, params, cfg: ModelConfig, serve: lm.ServeConfig,
                  ecfg: Optional[PagedEngineConfig] = None,
                  fault: Optional[FaultPlan] = None,
-                 clock: Optional[Callable[[], float]] = None):
-        super().__init__(params, cfg, serve, clock=clock)
+                 clock: Optional[Callable[[], float]] = None,
+                 obs_clock: Optional[Callable[[], float]] = None):
+        super().__init__(params, cfg, serve, clock=clock,
+                         obs_clock=obs_clock)
         self.ecfg = ecfg if ecfg is not None else PagedEngineConfig()
         e = self.ecfg
         if e.shed_policy not in ("reject_newest", "shed_oldest"):
@@ -364,21 +520,7 @@ class PagedServingEngine(_EngineBase):
             # paths, not a mock
             self.sched.alloc.fault = fault.exhausted
         self._requests: Dict[int, Request] = {}
-        # (step, kind, payload) ring buffer — unbounded growth over a long
-        # serving run is a memory leak, so the trace keeps the newest
-        # max_events entries
-        self.events: collections.deque = collections.deque(
-            maxlen=e.max_events if e.max_events > 0 else None)
-        self.stats = {"steps": 0, "decode_tokens": 0, "prefill_chunks": 0,
-                      "preemptions": 0, "device_dispatches": 0,
-                      "recompiles": 0, "swap_bytes": 0,
-                      # lifecycle / robustness counters
-                      "finished": 0, "failed": 0, "cancelled": 0,
-                      "rejected": 0, "shed": 0, "deadline_misses": 0,
-                      "nan_quarantines": 0, "demotions": 0,
-                      "watchdog_trips": 0, "stalled_steps": 0,
-                      "swap_corruptions": 0}
-        self._step_i = 0
+        self._init_events(e.max_events)
         self._stall = 0              # consecutive zero-span steps
         self._swap_failed: List[tuple] = []   # (sreq, error) from _swap_in
         self._terminal_done: List[Request] = []  # rejected/cancelled/failed
@@ -404,6 +546,10 @@ class PagedServingEngine(_EngineBase):
         self._compiled_keys = set()
         unified = self.ecfg.step_mode == "unified"
         cfgm, serve_p = self.cfg, self.serve
+        # static: whether the step fns return an extra quant-telemetry
+        # element (recomputed here so demotion keeps arity consistent
+        # with the rebuilt serve config)
+        self._collect = lm._collect_telemetry(serve_p)
         if unified:
             self._unified = jax.jit(
                 lambda p, pools, pt, ps, pln, pf, pli, psl, dt, dp, da, ht,
@@ -514,9 +660,12 @@ class PagedServingEngine(_EngineBase):
         if sreq is not None:
             req.preemptions = sreq.preemptions
         req.latency_s = self._clock() - req.submit_t
-        self.stats[stat] += 1
-        self.events.append((self._step_i, kind,
-                            (req.uid, error) if error else req.uid))
+        self._inc(stat)
+        if error:
+            self._event(kind, uid=req.uid, error=error)
+        else:
+            self._event(kind, uid=req.uid)
+        self._observe_latency("latency_s", self._obs_now - req.obs_submit_t)
         self._terminal_done.append(req)
 
     def _swap_out(self, sreq: SchedRequest) -> None:
@@ -524,9 +673,9 @@ class PagedServingEngine(_EngineBase):
         # so the per-slot SSM state rides along with the pages
         sreq.swapped = PKV.extract_pages(self.pools, sreq.hi_pages,
                                          sreq.lo_pages, slot=sreq.slot)
-        self.events.append((self._step_i, "preempt", sreq.uid))
-        self.stats["preemptions"] += 1
-        self.stats["swap_bytes"] += PKV.swapped_bytes(sreq.swapped)
+        self._event("preempt", uid=sreq.uid)
+        self._inc("preemptions")
+        self._inc("swap_bytes", PKV.swapped_bytes(sreq.swapped))
 
     def _swap_in(self, sreq: SchedRequest) -> None:
         # sreq.slot is the NEW placement — SSM state restores there, pages
@@ -534,7 +683,7 @@ class PagedServingEngine(_EngineBase):
         swapped = sreq.swapped
         if self.fault is not None and self.fault.corrupt_swap(sreq.uid):
             swapped = corrupt_swapped(swapped, self.fault.seed)
-            self.events.append((self._step_i, "fault_corrupt", sreq.uid))
+            self._event("fault_corrupt", uid=sreq.uid)
         try:
             self.pools = PKV.insert_pages(self.pools, swapped,
                                           sreq.hi_pages, sreq.lo_pages,
@@ -547,7 +696,7 @@ class PagedServingEngine(_EngineBase):
             # everyone else keeps running.
             self._swap_failed.append((sreq, str(exc)))
             return
-        self.events.append((self._step_i, "resume", sreq.uid))
+        self._event("resume", uid=sreq.uid)
 
     # ------------------------------------------------------------------
     def run(self) -> List[Request]:
@@ -613,9 +762,8 @@ class PagedServingEngine(_EngineBase):
                         f"{waited:.3f}s > {req.ttft_deadline_s:.3f}s "
                         f"TTFT budget")
             if miss is not None:
-                self.stats["deadline_misses"] += 1
-                self.events.append((self._step_i, "deadline_miss",
-                                    sreq.uid))
+                self._inc("deadline_misses")
+                self._event("deadline_miss", uid=sreq.uid)
                 self._fail(sreq, miss)
 
     def _watchdog(self, progress: bool) -> None:
@@ -630,12 +778,12 @@ class PagedServingEngine(_EngineBase):
         if not self.sched.has_work():
             return
         self._stall += 1
-        self.stats["stalled_steps"] += 1
+        self._inc("stalled_steps")
         n = self.ecfg.watchdog_steps
         if n <= 0 or self._stall < n:
             return
         self._stall = 0
-        self.stats["watchdog_trips"] += 1
+        self._inc("watchdog_trips")
         blockers = sorted(self.sched.waiting + self.sched.active,
                           key=lambda r: (r.arrival, r.uid))
         if blockers:
@@ -650,7 +798,7 @@ class PagedServingEngine(_EngineBase):
         if self.fault is not None and \
                 self.fault.nan_logits(sreq.uid, len(sreq.generated)):
             row = np.full_like(row, np.nan)
-            self.events.append((self._step_i, "fault_nan", sreq.uid))
+            self._event("fault_nan", uid=sreq.uid)
         if self.serve.numerics_guard and not np.isfinite(row).all():
             self._quarantine(sreq, f"non-finite logits at generated index "
                                    f"{len(sreq.generated)}")
@@ -659,8 +807,8 @@ class PagedServingEngine(_EngineBase):
         return True
 
     def _quarantine(self, sreq: SchedRequest, error: str) -> None:
-        self.stats["nan_quarantines"] += 1
-        self.events.append((self._step_i, "nan_quarantine", sreq.uid))
+        self._inc("nan_quarantines")
+        self._event("nan_quarantine", uid=sreq.uid)
         self._fail(sreq, error)
         self._maybe_demote()
 
@@ -683,8 +831,8 @@ class PagedServingEngine(_EngineBase):
             stamp=dataclasses.replace(st, execution="reference"),
             fused_decode_matmul=False)
         self._build_step_fns()
-        self.stats["demotions"] += 1
-        self.events.append((self._step_i, "demote", "reference"))
+        self._inc("demotions")
+        self._event("demote", to="reference")
 
     # ------------------------------------------------------------------
     def _tables_np(self, sreqs: List[SchedRequest]) -> tuple:
@@ -718,27 +866,31 @@ class PagedServingEngine(_EngineBase):
 
     def _step(self, done: List[Request]) -> None:
         self._step_i += 1
-        self.stats["steps"] += 1
-        if self.fault is not None:
-            self.fault.begin_step(self._step_i)
-            if self.fault.exhausted():
-                self.events.append((self._step_i, "fault_exhaust",
-                                    self._step_i))
-        self._check_deadlines()
-        plan = self.sched.plan_step()
-        for sreq in plan.admitted:
-            self.events.append((self._step_i, "admit", sreq.uid))
-        if self._swap_failed:
-            # a swap-in refused its checksum during _admit: the request got
-            # a slot/pages but its cache was never restored — fail it and
-            # drop it from this step's spans before anything runs
-            for sreq, msg in self._swap_failed:
-                self.stats["swap_corruptions"] += 1
-                self._fail(sreq, msg, kind="swap_corrupt")
-            self._swap_failed = []
-            plan.prefills = [w for w in plan.prefills
-                             if w.sreq.state == PREFILLING]
-            plan.decode = [r for r in plan.decode if r.state == RUNNING]
+        self._inc("steps")
+        with self._timer.phase("plan"):
+            if self.fault is not None:
+                self.fault.begin_step(self._step_i)
+                if self.fault.exhausted():
+                    self._event("fault_exhaust")
+            self._check_deadlines()
+            plan = self.sched.plan_step()
+            for sreq in plan.admitted:
+                self._event("admit", uid=sreq.uid)
+                req = self._requests.get(sreq.uid)
+                if req is not None:
+                    self._observe_latency("queue_wait_s",
+                                          self._obs_now - req.obs_submit_t)
+            if self._swap_failed:
+                # a swap-in refused its checksum during _admit: the request
+                # got a slot/pages but its cache was never restored — fail
+                # it and drop it from this step's spans before anything runs
+                for sreq, msg in self._swap_failed:
+                    self._inc("swap_corruptions")
+                    self._fail(sreq, msg, kind="swap_corrupt")
+                self._swap_failed = []
+                plan.prefills = [w for w in plan.prefills
+                                 if w.sreq.state == PREFILLING]
+                plan.decode = [r for r in plan.decode if r.state == RUNNING]
 
         progress = bool(plan.prefills or plan.decode)
         if self.ecfg.step_mode == "two_call":
@@ -749,6 +901,13 @@ class PagedServingEngine(_EngineBase):
         elif progress:
             self._run_unified(plan, done)
         self._watchdog(progress)
+        self._publish_load()
+
+    def _publish_load(self) -> None:
+        """Per-step occupancy gauges from the scheduler/allocator."""
+        for name, v in self.sched.load().items():
+            self.metrics.gauge(f"sched_{name}",
+                               help=f"scheduler {name}").set(v)
 
     def _run_unified(self, plan, done: List[Request]) -> None:
         """Build the flattened ragged batch the scheduler planned and run
@@ -758,104 +917,118 @@ class PagedServingEngine(_EngineBase):
         c_len, s = e.prefill_chunk, e.max_slots
         works = plan.prefills
         n_pf = self._bucket_npf(len(works))
-        pf_tokens = np.zeros((n_pf, c_len), np.int32)
-        pf_start = np.zeros((n_pf,), np.int32)
-        pf_length = np.zeros((n_pf,), np.int32)
-        pf_first = np.zeros((n_pf,), bool)
-        pf_last = np.zeros((n_pf,), np.int32)
-        # dummy chunk rows park on the null slot (index max_slots): their
-        # SSM-state scatter lands there the way masked K/V writes land on
-        # the null page
-        pf_slots = np.full((n_pf,), s, np.int32)
-        pages = np.zeros((n_pf * c_len + s,), np.int32)
-        offs = np.zeros((n_pf * c_len + s,), np.int32)
-        ishi = np.zeros((n_pf * c_len + s,), bool)
-        for i, w in enumerate(works):
-            sreq, start, end = w.sreq, w.start, w.end
-            valid = end - start
-            pf_tokens[i, :valid] = sreq.prompt[start:end]
-            pf_start[i] = start
-            pf_length[i] = end
-            pf_first[i] = start == 0
-            pf_slots[i] = sreq.slot
-            # the chunk's last valid row — on a final chunk that is the
-            # prompt's last token, whose logits are the first-token
-            # distribution (pf_logits of non-final chunks are discarded)
-            pf_last[i] = valid - 1
-            base = i * c_len
-            if self._has_attn:
-                for t in range(valid):
-                    pages[base + t], offs[base + t], ishi[base + t] = \
-                        self._write_target(sreq, start + t)
-        dec_tokens = np.zeros((s,), np.int32)
-        dec_pos = np.zeros((s,), np.int32)
-        dec_active = np.zeros((s,), bool)
-        base = n_pf * c_len
-        for sreq in plan.decode:
-            dec_tokens[sreq.slot] = sreq.generated[-1]
-            dec_pos[sreq.slot] = sreq.pos
-            dec_active[sreq.slot] = True
-            if self._has_attn:
-                pages[base + sreq.slot], offs[base + sreq.slot], \
-                    ishi[base + sreq.slot] = \
-                    self._write_target(sreq, sreq.pos)
-        # span-ordered tables: one row per chunk span (that request's own
-        # table), then the whole slot array for the decode spans
-        ht_np, lt_np = self._tables_np([w.sreq for w in works] + plan.decode)
-        pf_ht = np.zeros((n_pf, ht_np.shape[1]), np.int32)
-        pf_lt = np.zeros((n_pf, lt_np.shape[1]), np.int32)
-        for i, w in enumerate(works):
-            pf_ht[i] = ht_np[w.sreq.slot]
-            pf_lt[i] = lt_np[w.sreq.slot]
-        span_ht = np.concatenate([pf_ht, ht_np], axis=0)
-        span_lt = np.concatenate([pf_lt, lt_np], axis=0)
-
-        if n_pf not in self._compiled_keys:
-            self._compiled_keys.add(n_pf)
-            self.stats["recompiles"] += 1
-        pf_logits, dec_logits, self.pools = self._unified(
-            self.params, self.pools, jnp.asarray(pf_tokens),
-            jnp.asarray(pf_start), jnp.asarray(pf_length),
-            jnp.asarray(pf_first), jnp.asarray(pf_last),
-            jnp.asarray(pf_slots), jnp.asarray(dec_tokens),
-            jnp.asarray(dec_pos), jnp.asarray(dec_active),
-            jnp.asarray(span_ht), jnp.asarray(span_lt),
-            jnp.asarray(pages), jnp.asarray(offs), jnp.asarray(ishi))
-        self.stats["device_dispatches"] += 1
-        pf_logits = np.asarray(pf_logits)
-        dec_logits = np.asarray(dec_logits)
-
-        for i, w in enumerate(works):
-            sreq = w.sreq
-            try:
-                sreq.pos = w.end
-                self.stats["prefill_chunks"] += 1
-                self.events.append((self._step_i, "prefill_chunk",
-                                    (sreq.uid, w.start, w.end)))
-                if w.end == sreq.prompt_len:
-                    if not self._next_token(sreq, pf_logits[i]):
-                        continue     # quarantined — resources released
-                    sreq.state = RUNNING
-                    req = self._requests[sreq.uid]
-                    req.ttft_s = self._clock() - req.submit_t
-                    self.events.append((self._step_i, "first_token",
-                                        sreq.uid))
-                    self._maybe_finish(sreq, done)
-            except Exception as exc:   # noqa: BLE001 — isolation boundary
-                self._fail(sreq, f"prefill postprocessing error: {exc!r}")
-        if plan.decode:
-            self.events.append((self._step_i, "decode",
-                                tuple(sorted(r.uid for r in plan.decode))))
+        telem = None
+        with self._timer.phase("dispatch"):
+            pf_tokens = np.zeros((n_pf, c_len), np.int32)
+            pf_start = np.zeros((n_pf,), np.int32)
+            pf_length = np.zeros((n_pf,), np.int32)
+            pf_first = np.zeros((n_pf,), bool)
+            pf_last = np.zeros((n_pf,), np.int32)
+            # dummy chunk rows park on the null slot (index max_slots):
+            # their SSM-state scatter lands there the way masked K/V
+            # writes land on the null page
+            pf_slots = np.full((n_pf,), s, np.int32)
+            pages = np.zeros((n_pf * c_len + s,), np.int32)
+            offs = np.zeros((n_pf * c_len + s,), np.int32)
+            ishi = np.zeros((n_pf * c_len + s,), bool)
+            for i, w in enumerate(works):
+                sreq, start, end = w.sreq, w.start, w.end
+                valid = end - start
+                pf_tokens[i, :valid] = sreq.prompt[start:end]
+                pf_start[i] = start
+                pf_length[i] = end
+                pf_first[i] = start == 0
+                pf_slots[i] = sreq.slot
+                # the chunk's last valid row — on a final chunk that is
+                # the prompt's last token, whose logits are the
+                # first-token distribution (pf_logits of non-final chunks
+                # are discarded)
+                pf_last[i] = valid - 1
+                base = i * c_len
+                if self._has_attn:
+                    for t in range(valid):
+                        pages[base + t], offs[base + t], ishi[base + t] = \
+                            self._write_target(sreq, start + t)
+            dec_tokens = np.zeros((s,), np.int32)
+            dec_pos = np.zeros((s,), np.int32)
+            dec_active = np.zeros((s,), bool)
+            base = n_pf * c_len
             for sreq in plan.decode:
+                dec_tokens[sreq.slot] = sreq.generated[-1]
+                dec_pos[sreq.slot] = sreq.pos
+                dec_active[sreq.slot] = True
+                if self._has_attn:
+                    pages[base + sreq.slot], offs[base + sreq.slot], \
+                        ishi[base + sreq.slot] = \
+                        self._write_target(sreq, sreq.pos)
+            # span-ordered tables: one row per chunk span (that request's
+            # own table), then the whole slot array for the decode spans
+            ht_np, lt_np = self._tables_np([w.sreq for w in works]
+                                           + plan.decode)
+            pf_ht = np.zeros((n_pf, ht_np.shape[1]), np.int32)
+            pf_lt = np.zeros((n_pf, lt_np.shape[1]), np.int32)
+            for i, w in enumerate(works):
+                pf_ht[i] = ht_np[w.sreq.slot]
+                pf_lt[i] = lt_np[w.sreq.slot]
+            span_ht = np.concatenate([pf_ht, ht_np], axis=0)
+            span_lt = np.concatenate([pf_lt, lt_np], axis=0)
+
+            if n_pf not in self._compiled_keys:
+                self._compiled_keys.add(n_pf)
+                self._inc("recompiles")
+            out = self._unified(
+                self.params, self.pools, jnp.asarray(pf_tokens),
+                jnp.asarray(pf_start), jnp.asarray(pf_length),
+                jnp.asarray(pf_first), jnp.asarray(pf_last),
+                jnp.asarray(pf_slots), jnp.asarray(dec_tokens),
+                jnp.asarray(dec_pos), jnp.asarray(dec_active),
+                jnp.asarray(span_ht), jnp.asarray(span_lt),
+                jnp.asarray(pages), jnp.asarray(offs), jnp.asarray(ishi))
+            if self._collect:
+                pf_logits, dec_logits, self.pools, telem = out
+            else:
+                pf_logits, dec_logits, self.pools = out
+            self._inc("device_dispatches")
+            pf_logits = np.asarray(pf_logits)
+            dec_logits = np.asarray(dec_logits)
+        if telem is not None:
+            self._absorb_telemetry(telem)
+
+        with self._timer.phase("post"):
+            for i, w in enumerate(works):
+                sreq = w.sreq
                 try:
-                    sreq.pos += 1          # last token is now cached
-                    if not self._next_token(sreq, dec_logits[sreq.slot]):
-                        continue
-                    self.stats["decode_tokens"] += 1
-                    self._maybe_finish(sreq, done)
-                except Exception as exc:   # noqa: BLE001
+                    sreq.pos = w.end
+                    self._inc("prefill_chunks")
+                    self._event("prefill_chunk", uid=sreq.uid,
+                                start=w.start, end=w.end)
+                    if w.end == sreq.prompt_len:
+                        if not self._next_token(sreq, pf_logits[i]):
+                            continue  # quarantined — resources released
+                        sreq.state = RUNNING
+                        req = self._requests[sreq.uid]
+                        req.ttft_s = self._clock() - req.submit_t
+                        self._event("first_token", uid=sreq.uid)
+                        self._observe_latency(
+                            "ttft_s", self._obs_now - req.obs_submit_t)
+                        self._maybe_finish(sreq, done)
+                except Exception as exc:  # noqa: BLE001 — isolation boundary
                     self._fail(sreq,
-                               f"decode postprocessing error: {exc!r}")
+                               f"prefill postprocessing error: {exc!r}")
+            if plan.decode:
+                self._event("decode",
+                            uids=tuple(sorted(r.uid for r in plan.decode)))
+                for sreq in plan.decode:
+                    try:
+                        sreq.pos += 1      # last token is now cached
+                        if not self._next_token(sreq,
+                                                dec_logits[sreq.slot]):
+                            continue
+                        self._inc("decode_tokens")
+                        self._maybe_finish(sreq, done)
+                    except Exception as exc:   # noqa: BLE001
+                        self._fail(sreq,
+                                   f"decode postprocessing error: {exc!r}")
 
     # -- two_call mode (the PR-3 step pair, kept for parity/AB) ---------
     def _run_prefill_chunk(self, work: PrefillWork,
@@ -878,23 +1051,35 @@ class PagedServingEngine(_EngineBase):
         last_index = (sreq.prompt_len - 1) - start if end == sreq.prompt_len \
             else valid - 1
         fn = self._prefill_first if start == 0 else self._prefill_cont
-        logits, self.pools = fn(
-            self.params, self.pools, jnp.asarray(chunk),
-            jnp.int32(start), ht, lt, jnp.asarray(pages), jnp.asarray(offs),
-            jnp.asarray(ishi), jnp.int32(last_index), jnp.int32(sreq.slot))
-        self.stats["device_dispatches"] += 1
-        sreq.pos = end
-        self.stats["prefill_chunks"] += 1
-        self.events.append((self._step_i, "prefill_chunk",
-                            (sreq.uid, start, end)))
-        if end == sreq.prompt_len:
-            if not self._next_token(sreq, np.asarray(logits[0])):
-                return               # quarantined
-            sreq.state = RUNNING
-            req = self._requests[sreq.uid]
-            req.ttft_s = self._clock() - req.submit_t
-            self.events.append((self._step_i, "first_token", sreq.uid))
-            self._maybe_finish(sreq, done)
+        telem = None
+        with self._timer.phase("dispatch"):
+            out = fn(
+                self.params, self.pools, jnp.asarray(chunk),
+                jnp.int32(start), ht, lt, jnp.asarray(pages),
+                jnp.asarray(offs), jnp.asarray(ishi),
+                jnp.int32(last_index), jnp.int32(sreq.slot))
+            if self._collect:
+                logits, self.pools, telem = out
+            else:
+                logits, self.pools = out
+            self._inc("device_dispatches")
+            logits = np.asarray(logits)
+        if telem is not None:
+            self._absorb_telemetry(telem)
+        with self._timer.phase("post"):
+            sreq.pos = end
+            self._inc("prefill_chunks")
+            self._event("prefill_chunk", uid=sreq.uid, start=start, end=end)
+            if end == sreq.prompt_len:
+                if not self._next_token(sreq, logits[0]):
+                    return           # quarantined
+                sreq.state = RUNNING
+                req = self._requests[sreq.uid]
+                req.ttft_s = self._clock() - req.submit_t
+                self._event("first_token", uid=sreq.uid)
+                self._observe_latency("ttft_s",
+                                      self._obs_now - req.obs_submit_t)
+                self._maybe_finish(sreq, done)
 
     def _run_decode(self, running: List[SchedRequest],
                     done: List[Request]) -> None:
@@ -914,20 +1099,22 @@ class PagedServingEngine(_EngineBase):
                 pages[sreq.slot], offs[sreq.slot], ishi[sreq.slot] = \
                     self._write_target(sreq, sreq.pos)
         ht, lt = self._tables(running)
-        logits, self.pools = self._decode(
-            self.params, self.pools, jnp.asarray(tokens),
-            jnp.asarray(positions), ht, lt, jnp.asarray(pages),
-            jnp.asarray(offs), jnp.asarray(ishi), jnp.asarray(active))
-        self.stats["device_dispatches"] += 1
-        logits = np.asarray(logits)
-        self.events.append((self._step_i, "decode",
-                            tuple(sorted(r.uid for r in running))))
-        for sreq in running:
-            sreq.pos += 1                      # last token is now cached
-            if not self._next_token(sreq, logits[sreq.slot]):
-                continue
-            self.stats["decode_tokens"] += 1
-            self._maybe_finish(sreq, done)
+        with self._timer.phase("dispatch"):
+            logits, self.pools = self._decode(
+                self.params, self.pools, jnp.asarray(tokens),
+                jnp.asarray(positions), ht, lt, jnp.asarray(pages),
+                jnp.asarray(offs), jnp.asarray(ishi), jnp.asarray(active))
+            self._inc("device_dispatches")
+            logits = np.asarray(logits)
+        with self._timer.phase("post"):
+            self._event("decode",
+                        uids=tuple(sorted(r.uid for r in running)))
+            for sreq in running:
+                sreq.pos += 1                  # last token is now cached
+                if not self._next_token(sreq, logits[sreq.slot]):
+                    continue
+                self._inc("decode_tokens")
+                self._maybe_finish(sreq, done)
 
     def _maybe_finish(self, sreq: SchedRequest, done: List[Request]) -> None:
         eos = self.ecfg.eos_id
@@ -942,6 +1129,8 @@ class PagedServingEngine(_EngineBase):
             req.preemptions = sreq.preemptions
             req.status = "finished"
             self.sched.finish(sreq)
-            self.stats["finished"] += 1
-            self.events.append((self._step_i, "finish", sreq.uid))
+            self._inc("finished")
+            self._event("finish", uid=sreq.uid)
+            self._observe_latency("latency_s",
+                                  self._obs_now - req.obs_submit_t)
             done.append(req)

@@ -254,6 +254,16 @@ class Scheduler:
                 and len(self._free_slots) == self.cfg.max_slots
                 and self.alloc.all_free())
 
+    def load(self) -> dict:
+        """Occupancy snapshot for the engine's per-step gauges: queue
+        depths, free decode slots, and free pages per pool family."""
+        free_hi, free_lo = self.alloc.free_counts()
+        return {"waiting": len(self.waiting),
+                "active": len(self.active),
+                "free_slots": len(self._free_slots),
+                "free_hi_pages": free_hi,
+                "free_lo_pages": free_lo}
+
     def _release(self, sreq: SchedRequest) -> None:
         """Return everything a request holds: its slot (if placed), its
         device pages (if any — including pages reserved ahead of the
