@@ -59,6 +59,13 @@ HISTOGRAM_FIELDS = ("edges", "counts", "sum", "count")
 TRACE_KEYS = ("traceEvents", "displayTimeUnit", "metadata")
 TRACE_EVENT_KEYS = ("ph", "name", "ts", "pid", "tid")
 
+# -- static-analysis artifacts -------------------------------------------
+# STATIC_ANALYSIS.json: the ratchet baseline the contracts CLI enforces
+STATIC_KEYS = ("version", "vmem_budget_bytes", "allowlist")
+# eligibility_matrix.json: site × config fused/reference matrix
+ELIGIBILITY_KEYS = ("version", "stamp", "configs")
+ELIGIBILITY_CELL_KEYS = ("status", "kernel", "wiring", "layers", "reasons")
+
 
 def _check_bench(doc: dict, errs: list) -> None:
     for row, keys in BENCH_ROWS.items():
@@ -115,18 +122,58 @@ def _check_trace(doc: dict, errs: list) -> None:
             errs.append(f"trace: complete event[{i}] missing 'dur'")
 
 
+def _check_static(doc: dict, errs: list) -> None:
+    for k in STATIC_KEYS:
+        if k not in doc:
+            errs.append(f"static: missing key {k!r}")
+    allow = doc.get("allowlist", [])
+    if not isinstance(allow, list):
+        errs.append("static: allowlist is not a list")
+        return
+    for i, key in enumerate(allow):
+        # stable key shape: CODE:path:scope#ordinal
+        parts = str(key).split(":", 2)
+        if len(parts) != 3 or "#" not in parts[2]:
+            errs.append(f"static: allowlist[{i}] {key!r} is not "
+                        f"CODE:path:scope#ordinal")
+
+
+def _check_eligibility(doc: dict, errs: list) -> None:
+    for k in ELIGIBILITY_KEYS:
+        if k not in doc:
+            errs.append(f"eligibility: missing key {k!r}")
+    for cfg, sites in doc.get("configs", {}).items():
+        for site, cell in sites.items():
+            for k in ELIGIBILITY_CELL_KEYS:
+                if k not in cell:
+                    errs.append(f"eligibility: {cfg}.{site}.{k} missing")
+            status = cell.get("status")
+            if status not in ("fused", "reference"):
+                errs.append(f"eligibility: {cfg}.{site}.status {status!r}")
+            if status == "reference" and not cell.get("reasons"):
+                errs.append(f"eligibility: {cfg}.{site} reference cell "
+                            f"carries no reasons")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--bench", default=None, metavar="PATH")
     ap.add_argument("--metrics", default=None, metavar="PATH")
     ap.add_argument("--trace", default=None, metavar="PATH")
+    ap.add_argument("--static", default=None, metavar="PATH")
+    ap.add_argument("--eligibility", default=None, metavar="PATH")
     args = ap.parse_args()
-    if not (args.bench or args.metrics or args.trace):
-        ap.error("nothing to check: pass --bench/--metrics/--trace")
+    if not (args.bench or args.metrics or args.trace or args.static
+            or args.eligibility):
+        ap.error("nothing to check: pass --bench/--metrics/--trace/"
+                 "--static/--eligibility")
     errs: list = []
     for path, fn, label in ((args.bench, _check_bench, "bench"),
                             (args.metrics, _check_metrics, "metrics"),
-                            (args.trace, _check_trace, "trace")):
+                            (args.trace, _check_trace, "trace"),
+                            (args.static, _check_static, "static"),
+                            (args.eligibility, _check_eligibility,
+                             "eligibility")):
         if path is None:
             continue
         with open(path) as f:

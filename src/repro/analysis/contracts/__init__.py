@@ -1,0 +1,31 @@
+"""Static program-contract checker: four passes, one ratcheted gate.
+
+The repo's hardest-won invariants — in-bounds Pallas tiling inside the VMEM
+budget, int8×int8→int32 accumulation, no silent fused→reference fallbacks,
+no ``-O``-stripped validation — are proved at trace/AST time here, before
+any device step runs:
+
+* ``kernel_contracts`` — evaluates every registered kernel's BlockSpec
+  index maps over the full grid against the operand shapes (including the
+  null-page / inactive-span clamp idioms), sums per-buffer VMEM footprints
+  against a configurable budget, and checks grid/block divisibility and
+  GEMM accumulator-dtype rules.  Finding codes ``KC``.
+* ``eligibility`` — the fused-path audit: every STaMP site × config cell is
+  ``fused`` or ``reference(reason)`` with structured reason codes (from
+  `repro.core.stamp.fused_ineligibility` + the site-structural reasons in
+  `repro.models.lm.fused_site_matrix`).  Finding codes ``EL``.
+* ``jaxpr_lint`` — traces the prefill/decode entry points per representative
+  config and flags f64 leaks, f16-accumulated GEMMs, information-losing
+  ``convert_element_type`` round trips, and host callbacks that would break
+  the 1-dispatch contract.  Finding codes ``JX``.
+* ``ast_lint`` — repo-rule lint over library (non-test) sources: bare
+  ``assert``, mutable dataclass defaults, committed ``interpret=True``
+  defaults, direct ``time.time()`` outside the injectable clocks.  Finding
+  codes ``RR``.
+
+Run ``python -m repro.analysis.contracts`` (see ``__main__``); findings
+ratchet against the committed ``STATIC_ANALYSIS.json`` — grandfathered
+keys pass, anything new fails CI.
+"""
+
+from repro.analysis.contracts.findings import Finding, assign_keys  # noqa: F401

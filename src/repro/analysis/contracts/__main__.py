@@ -1,0 +1,108 @@
+"""CLI: ``python -m repro.analysis.contracts``.
+
+Runs the four static-analysis passes and ratchets the findings against the
+committed baseline:
+
+    PYTHONPATH=src python -m repro.analysis.contracts \\
+        [--passes kernels,eligibility,jaxpr,ast] [--configs a,b,...] \\
+        [--vmem-budget BYTES] [--baseline STATIC_ANALYSIS.json] \\
+        [--eligibility-out eligibility_matrix.json] [--update-baseline]
+
+Exit code 0 when every finding is grandfathered (or none exist); 1 on any
+non-allowlisted finding.  ``--update-baseline`` rewrites the allowlist to
+exactly the current findings (dropping stale keys) and exits 0.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis.contracts import ast_lint, eligibility, jaxpr_lint, \
+    kernel_contracts, ratchet
+from repro.analysis.contracts.findings import CODES
+
+PASSES = ("kernels", "eligibility", "jaxpr", "ast")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis.contracts")
+    ap.add_argument("--passes", default=",".join(PASSES),
+                    help=f"comma list from {PASSES}")
+    ap.add_argument("--configs", default=None,
+                    help="comma list of config names (default: all)")
+    ap.add_argument("--vmem-budget", type=int,
+                    default=kernel_contracts.DEFAULT_VMEM_BUDGET,
+                    metavar="BYTES")
+    ap.add_argument("--baseline", default="STATIC_ANALYSIS.json",
+                    metavar="PATH")
+    ap.add_argument("--eligibility-out", default=None, metavar="PATH",
+                    help="write the site × config matrix JSON here")
+    ap.add_argument("--root", default=".", metavar="DIR",
+                    help="repo root for the AST pass")
+    ap.add_argument("--update-baseline", action="store_true")
+    args = ap.parse_args(argv)
+
+    passes = [p.strip() for p in args.passes.split(",") if p.strip()]
+    unknown = set(passes) - set(PASSES)
+    if unknown:
+        ap.error(f"unknown passes: {sorted(unknown)}")
+    config_names = [c.strip() for c in args.configs.split(",")] \
+        if args.configs else None
+
+    findings: list = []
+    if "kernels" in passes:
+        ks = kernel_contracts.check_kernels(vmem_budget=args.vmem_budget)
+        print(f"[contracts] kernels: {len(ks)} finding(s)")
+        findings += ks
+    if "eligibility" in passes:
+        matrix: dict = {}
+        el = eligibility.check_eligibility(config_names, matrix_out=matrix)
+        n_ref = sum(1 for sites in matrix.values()
+                    for c in sites.values() if c["status"] == "reference")
+        n_cells = sum(len(s) for s in matrix.values())
+        print(f"[contracts] eligibility: {len(matrix)} configs, "
+              f"{n_cells} site cells ({n_ref} reference, all explained: "
+              f"{not el}), {len(el)} finding(s)")
+        if args.eligibility_out:
+            with open(args.eligibility_out, "w") as f:
+                json.dump(eligibility.matrix_document(matrix), f, indent=2,
+                          sort_keys=True)
+                f.write("\n")
+            print(f"[contracts] eligibility matrix -> "
+                  f"{args.eligibility_out}")
+        findings += el
+    if "jaxpr" in passes:
+        jx = jaxpr_lint.check_entry_points()
+        print(f"[contracts] jaxpr: {len(jx)} finding(s)")
+        findings += jx
+    if "ast" in passes:
+        rr = ast_lint.lint_tree(args.root)
+        print(f"[contracts] ast: {len(rr)} finding(s)")
+        findings += rr
+
+    if args.update_baseline:
+        ratchet.write_baseline(args.baseline, findings, args.vmem_budget)
+        print(f"[contracts] baseline rewritten: {args.baseline} "
+              f"({len(findings)} grandfathered key(s))")
+        return 0
+
+    baseline = ratchet.load_baseline(args.baseline)
+    new, grandfathered, stale = ratchet.ratchet(findings, baseline)
+    for f in grandfathered:
+        print(f"[contracts] grandfathered {f.key}: {f.message}")
+    for key in stale:
+        print(f"[contracts] stale allowlist entry (fixed? run "
+              f"--update-baseline): {key}")
+    for f in new:
+        print(f"[contracts] NEW {f.key} [{CODES[f.code]}] {f.message}",
+              file=sys.stderr)
+    verdict = "FAIL" if new else "OK"
+    print(f"[contracts] {verdict}: {len(new)} new, "
+          f"{len(grandfathered)} grandfathered, {len(stale)} stale")
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

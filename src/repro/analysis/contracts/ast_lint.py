@@ -1,0 +1,133 @@
+"""Pass 4 — repo-rule AST lint over library (non-test) sources.
+
+Four rules, each a bug class this repo has actually shipped or explicitly
+guards against:
+
+* ``RR001`` bare ``assert`` in library code — stripped under ``python -O``
+  (the PR-2 ``BlockAllocator.free`` class of bug); validation must raise
+  typed exceptions.  ``assert`` in tests/benchmarks is idiomatic and
+  exempt.
+* ``RR002`` mutable dataclass defaults — ``field: list = []`` shares one
+  instance across every config object.
+* ``RR003`` ``interpret=True`` committed as a parameter default — forces
+  interpret mode on TPU; defaults must be ``None`` (resolved through
+  `repro.kernels.ops.default_interpret`) or ``False``.
+* ``RR004`` direct ``time.time()`` calls outside the injectable clocks —
+  the serving/obs stack threads an explicit ``clock`` so tests and
+  deadline logic are deterministic; a stray ``time.time()`` bypasses it
+  (wall-clock benchmarking scripts are grandfathered via the baseline,
+  not exempted here).
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+
+from repro.analysis.contracts.findings import Finding
+
+_MUTABLE_CALLS = ("list", "dict", "set")
+
+
+def _scopes(tree: ast.AST):
+    """Attach a dotted scope name to every node (module-level = <module>)."""
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child._parent = node  # type: ignore[attr-defined]
+
+    def scope_of(node) -> str:
+        parts = []
+        cur = getattr(node, "_parent", None)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.ClassDef)):
+                parts.append(cur.name)
+            cur = getattr(cur, "_parent", None)
+        return ".".join(reversed(parts)) or "<module>"
+
+    return scope_of
+
+
+def _is_dataclass(node: ast.ClassDef) -> bool:
+    for dec in node.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = target.attr if isinstance(target, ast.Attribute) else \
+            getattr(target, "id", None)
+        if name == "dataclass":
+            return True
+    return False
+
+
+def _mutable_default(value) -> bool:
+    if isinstance(value, (ast.List, ast.Dict, ast.Set)):
+        return True
+    if isinstance(value, ast.Call) and isinstance(value.func, ast.Name) \
+            and value.func.id in _MUTABLE_CALLS and not value.args \
+            and not value.keywords:
+        return True
+    return False
+
+
+def lint_source(source: str, relpath: str) -> list:
+    tree = ast.parse(source, filename=relpath)
+    scope_of = _scopes(tree)
+    out: list = []
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assert):
+            out.append(Finding(
+                "RR001", relpath, scope_of(node),
+                f"bare assert at line {node.lineno} is stripped under "
+                f"python -O; raise a typed exception"))
+        elif isinstance(node, ast.ClassDef) and _is_dataclass(node):
+            for stmt in node.body:
+                if isinstance(stmt, ast.AnnAssign) and stmt.value is not \
+                        None and _mutable_default(stmt.value):
+                    out.append(Finding(
+                        "RR002", relpath, f"{scope_of(stmt)}.{node.name}"
+                        if scope_of(stmt) != "<module>" else node.name,
+                        f"mutable dataclass default for "
+                        f"{getattr(stmt.target, 'id', '?')!r} at line "
+                        f"{stmt.lineno}"))
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            args = node.args
+            pairs = list(zip(reversed(args.args), reversed(args.defaults)))
+            pairs += [(a, d) for a, d in zip(args.kwonlyargs,
+                                             args.kw_defaults)
+                      if d is not None]
+            for arg, default in pairs:
+                if arg.arg == "interpret" and \
+                        isinstance(default, ast.Constant) and \
+                        default.value is True:
+                    out.append(Finding(
+                        "RR003", relpath, scope_of(node) + "." + node.name
+                        if scope_of(node) != "<module>" else node.name,
+                        f"interpret=True committed as default at line "
+                        f"{node.lineno}"))
+        elif isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr == "time" and \
+                isinstance(node.func.value, ast.Name) and \
+                node.func.value.id == "time":
+            out.append(Finding(
+                "RR004", relpath, scope_of(node),
+                f"direct time.time() at line {node.lineno}; thread the "
+                f"injectable clock instead"))
+    return out
+
+
+def lint_tree(root: str, subdir: str = "src/repro") -> list:
+    """Lint every library source under ``root/subdir`` (tests excluded by
+    construction — they live under ``tests/``)."""
+    out: list = []
+    base = os.path.join(root, subdir)
+    for dirpath, dirnames, filenames in os.walk(base):
+        dirnames[:] = sorted(d for d in dirnames if d != "__pycache__")
+        for fn in sorted(filenames):
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            rel = os.path.relpath(path, root)
+            with open(path) as f:
+                out.extend(lint_source(f.read(), rel))
+    return out

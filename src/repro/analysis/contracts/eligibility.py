@@ -1,0 +1,73 @@
+"""Pass 2 — fused-path eligibility auditor.
+
+Builds the STaMP site × config matrix from
+`repro.models.lm.fused_site_matrix` for every registered architecture
+(``repro.configs.ARCHS``) under the paper's fused deployment setting, and
+emits it as machine-readable JSON.  The check itself is a completeness
+invariant: every reference-path cell must carry at least one structured
+reason code (``EL001`` otherwise) — the ROADMAP's "silently fall back"
+gaps become a diffable artifact instead of a latency surprise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.analysis.contracts.findings import Finding
+
+
+def default_stamp():
+    """The paper's headline fused deployment config (W4A4-style: dwt, 64
+    hi tokens at 8 bits, rest at 4, fused Pallas execution)."""
+    from repro.core.stamp import StampConfig
+    return StampConfig(execution="fused")
+
+
+def audit_config(name: str, stamp=None) -> dict:
+    from repro.configs import get_config
+    from repro.models import lm
+    return lm.fused_site_matrix(get_config(name),
+                                stamp if stamp is not None
+                                else default_stamp())
+
+
+def audit_all(config_names=None, stamp=None) -> dict:
+    """{config_name: {site: cell}} for every (or the named) architectures."""
+    from repro.configs import ARCHS
+    names = config_names or list(ARCHS)
+    return {n: audit_config(n, stamp=stamp) for n in names}
+
+
+def matrix_document(matrix: dict, stamp=None) -> dict:
+    """The committed/uploaded JSON shape (schema-checked by
+    ``benchmarks/check_schema.py --eligibility``)."""
+    st = stamp if stamp is not None else default_stamp()
+    return {
+        "version": 1,
+        "stamp": dataclasses.asdict(st),
+        "configs": matrix,
+    }
+
+
+def check_eligibility(config_names=None, stamp=None,
+                      matrix_out: Optional[dict] = None) -> list:
+    """Run the audit; ``EL001`` for any unexplained reference cell.  Pass a
+    dict as ``matrix_out`` to receive the full matrix by side effect."""
+    matrix = audit_all(config_names, stamp=stamp)
+    if matrix_out is not None:
+        matrix_out.update(matrix)
+    out: list = []
+    for cfg_name, sites in matrix.items():
+        for site, cell in sites.items():
+            if cell["status"] == "reference" and not cell["reasons"]:
+                out.append(Finding(
+                    "EL001", f"configs/{cfg_name}", site,
+                    f"site {site!r} runs the reference path with no "
+                    f"structured reason"))
+            if cell["status"] == "fused" and cell["reasons"]:
+                out.append(Finding(
+                    "EL001", f"configs/{cfg_name}", site,
+                    f"site {site!r} claims fused but carries reasons "
+                    f"{cell['reasons']}"))
+    return out

@@ -1,0 +1,75 @@
+"""Finding records and their stable ratchet keys.
+
+A finding's identity must survive unrelated edits: keys deliberately
+contain NO line numbers — ``CODE:path:scope#ordinal``, where ``scope`` is
+the enclosing function/kernel/config and ``ordinal`` numbers repeat
+findings of the same (code, path, scope) in source order.  Moving a
+function within a file keeps its findings' keys; adding a *new* violation
+to the same scope mints a new ordinal and fails the ratchet.
+
+Code registry (stable — tests pin these):
+
+========  ===========================================================
+``KC001``  BlockSpec index map reaches out of bounds for some grid cell
+``KC002``  summed VMEM footprint exceeds the budget
+``KC003``  operand shape not divisible by its block shape
+``KC004``  GEMM accumulates in f16
+``KC005``  int8×int8 GEMM without an int32 accumulator
+``EL001``  reference-path site with no structured reason
+``JX001``  f64 value in a traced entry point
+``JX002``  f16-accumulated dot in a traced entry point
+``JX003``  convert_element_type round trip through a narrower dtype
+``JX004``  host callback inside the one-dispatch step
+``RR001``  bare ``assert`` in library code
+``RR002``  mutable dataclass default
+``RR003``  ``interpret=True`` committed as a parameter default
+``RR004``  direct ``time.time()`` outside the injectable clocks
+========  ===========================================================
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+CODES = {
+    "KC001": "index map out of bounds",
+    "KC002": "VMEM footprint over budget",
+    "KC003": "block shape does not divide operand shape",
+    "KC004": "f16 GEMM accumulator",
+    "KC005": "int8 GEMM without int32 accumulator",
+    "EL001": "reference-path site without a structured reason",
+    "JX001": "f64 leak in traced entry point",
+    "JX002": "f16-accumulated dot in traced entry point",
+    "JX003": "convert_element_type round trip through narrower dtype",
+    "JX004": "host callback breaks the 1-dispatch contract",
+    "RR001": "bare assert in library code",
+    "RR002": "mutable dataclass default",
+    "RR003": "interpret=True committed as default",
+    "RR004": "time.time() outside injectable clocks",
+}
+
+
+@dataclasses.dataclass
+class Finding:
+    code: str       # one of CODES
+    path: str       # repo-relative source path, or a pseudo-path like
+                    # "kernels/<example-name>" for captured-spec findings
+    scope: str      # enclosing function / kernel example / config name
+    message: str    # human detail (shapes, grid cell, dtype chain, ...)
+    key: str = ""   # CODE:path:scope#ordinal — set by assign_keys
+
+    def __post_init__(self):
+        if self.code not in CODES:
+            raise ValueError(f"unknown finding code {self.code!r}")
+
+
+def assign_keys(findings: list) -> list:
+    """Assign stable ratchet keys in source/emission order (mutates and
+    returns ``findings``)."""
+    seen: dict = {}
+    for f in findings:
+        base = f"{f.code}:{f.path}:{f.scope}"
+        n = seen.get(base, 0)
+        seen[base] = n + 1
+        f.key = f"{base}#{n}"
+    return findings

@@ -1,0 +1,56 @@
+"""Ratchet semantics against the committed ``STATIC_ANALYSIS.json``.
+
+Day-one findings are *grandfathered*: their stable keys live in the
+baseline's allowlist and keep passing.  Any finding whose key is not
+allowlisted fails the gate — the count only ratchets down.  Fixing a
+grandfathered finding leaves a stale allowlist entry, which is reported
+(and dropped by ``--update-baseline``) so the baseline tracks reality.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Optional
+
+from repro.analysis.contracts.findings import assign_keys
+
+BASELINE_VERSION = 1
+
+
+def empty_baseline(vmem_budget: int) -> dict:
+    return {"version": BASELINE_VERSION,
+            "vmem_budget_bytes": vmem_budget,
+            "allowlist": []}
+
+
+def load_baseline(path: str) -> Optional[dict]:
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        return None
+    if doc.get("version") != BASELINE_VERSION:
+        raise ValueError(f"{path}: unsupported baseline version "
+                         f"{doc.get('version')!r}")
+    return doc
+
+
+def ratchet(findings: list, baseline: Optional[dict]) -> tuple:
+    """Returns ``(new_findings, grandfathered, stale_keys)``; findings get
+    their stable keys assigned here."""
+    assign_keys(findings)
+    allow = set(baseline.get("allowlist", ())) if baseline else set()
+    new = [f for f in findings if f.key not in allow]
+    grandfathered = [f for f in findings if f.key in allow]
+    stale = sorted(allow - {f.key for f in findings})
+    return new, grandfathered, stale
+
+
+def write_baseline(path: str, findings: list, vmem_budget: int) -> dict:
+    assign_keys(findings)
+    doc = empty_baseline(vmem_budget)
+    doc["allowlist"] = sorted(f.key for f in findings)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return doc

@@ -139,7 +139,8 @@ def stamp_fake_quant(x: Array, cfg: StampConfig, axis: int = -2,
     if not cfg.enabled:
         return x
     if seg_len is not None and seg_len != x.shape[1]:
-        assert axis in (-2, x.ndim - 2), "segments fold along axis 1"
+        if axis not in (-2, x.ndim - 2):
+            raise ValueError("segments fold along axis 1")
         return unfold_segments(
             stamp_fake_quant(fold_segments(x, seg_len), cfg, axis=-2,
                              basis=basis, site=site), x.shape[0])
@@ -216,13 +217,15 @@ def prepare_linear(
     `repro.models.lm.prepare_fused_weights`.
     """
     if w_quant is not None:
-        assert w_quant.bits <= 8, "fused path stores weight codes in int8"
+        if w_quant.bits > 8:
+            raise ValueError("fused path stores weight codes in int8")
         shift = 1 << (w_quant.bits - 1)
         qw = (w_quant.q.astype(jnp.int32) - shift).astype(jnp.int8)
         return PreparedLinear(qw=qw, sw=w_quant.scale.astype(jnp.float32),
                               zw=(w_quant.zero_point - shift).astype(jnp.float32),
                               bias=b)
-    assert bits <= 8, "fused path stores weight codes in int8"
+    if bits > 8:
+        raise ValueError("fused path stores weight codes in int8")
     n = float(2**bits - 1)
     shift = float(1 << (bits - 1))
     wf = w.astype(jnp.float32)
@@ -238,18 +241,42 @@ def prepare_linear(
     return PreparedLinear(qw=qw, sw=sw, zw=zp - shift, bias=b)
 
 
+def fused_ineligibility(cfg: StampConfig,
+                        feature_rot: Optional[Array] = None
+                        ) -> tuple:
+    """Why this config canNOT run the fused Pallas kernel, as a tuple of
+    structured reason codes (empty == fused-eligible).  The codes are the
+    machine-readable half of the eligibility audit
+    (``repro.analysis.contracts``): the ROADMAP's "silently fall back"
+    configs (dense bases, per-block scales, activation rotations, bit
+    widths beyond int8 storage) each map to a stable code here instead of
+    an implicit branch fall in :func:`stamp_linear`."""
+    from repro.kernels.stamp_matmul import FUSABLE_TRANSFORMS
+    reasons = []
+    if not cfg.enabled:
+        reasons.append("stamp_disabled")
+    if cfg.execution != "fused":
+        reasons.append("execution_reference")
+    if cfg.granularity != "token":
+        # per-block scale plumbing has no kernel treatment yet (ROADMAP)
+        reasons.append(f"granularity_{cfg.granularity}")
+    if cfg.seq_transform not in FUSABLE_TRANSFORMS:
+        # dense O(s²) bases / latent-grid reads don't tile
+        reasons.append(f"transform_not_fusable:{cfg.seq_transform}")
+    if max(cfg.hi_bits, cfg.lo_bits, cfg.fused_weight_bits) > 8:
+        # activation AND weight codes live in int8 storage
+        reasons.append("bits_exceed_int8")
+    if feature_rot is not None:
+        reasons.append("feature_rotation")
+    return tuple(reasons)
+
+
 def fused_eligible(cfg: StampConfig, feature_rot: Optional[Array] = None
                    ) -> bool:
     """Whether this config can run the fused Pallas kernel; anything else
-    (dense bases, per-block scales, activation rotations, bit widths beyond
-    int8 storage) stays on the reference path."""
-    from repro.kernels.stamp_matmul import FUSABLE_TRANSFORMS
-    return (cfg.enabled and cfg.execution == "fused"
-            and cfg.granularity == "token"
-            and cfg.seq_transform in FUSABLE_TRANSFORMS
-            # activation AND weight codes live in int8 storage
-            and max(cfg.hi_bits, cfg.lo_bits, cfg.fused_weight_bits) <= 8
-            and feature_rot is None)
+    stays on the reference path — see :func:`fused_ineligibility` for the
+    structured per-reason breakdown."""
+    return not fused_ineligibility(cfg, feature_rot)
 
 
 def _fused_linear(x: Array, prep: PreparedLinear, cfg: StampConfig,
@@ -412,7 +439,8 @@ def stamp_dual_linear(
     ``seg_len``: flattened uniform-span ragged batch, transformed per span
     (see :func:`stamp_linear`).
     """
-    assert epilogue in ("silu_mul", "none"), epilogue
+    if epilogue not in ("silu_mul", "none"):
+        raise ValueError(f"unknown epilogue {epilogue!r}")
     if seg_len is not None and seg_len != x.shape[1]:
         y = stamp_dual_linear(fold_segments(x, seg_len), w_gate, w_up, cfg,
                               b_gate=b_gate, b_up=b_up, basis=basis,

@@ -134,6 +134,22 @@ across two layouts inside one engine step:
   no Pallas treatment; the Mamba in/out projections still route through
   the fused STaMP kernels above.
 
+Kernel contract registry
+------------------------
+`specs.py` keeps a capture registry (``KERNEL_EXAMPLES`` /
+``kernel_spec(name)``): one representative example call per kernel
+family, captured by intercepting ``pallas_call`` so the grid, BlockSpecs,
+scratch shapes and concrete scalar-prefetch tables are recorded without
+executing the kernel.  The static contract checker
+(``python -m repro.analysis.contracts``) evaluates every index map over
+the full grid against the operand shapes, sums the VMEM footprint, and
+re-traces the example for accumulator-dtype rules.  **The registry is
+part of a kernel's interface**: a new kernel (or a new BlockSpec/grid
+variant of an existing one — new index-map idiom, new prefetch table
+layout) must add a registry example exercising it, and changing a
+kernel's tiling means its example must still pass the checker at default
+block sizes.
+
 Telemetry hooks
 ---------------
 Every STaMP linear — reference and fused — carries a ``site`` label

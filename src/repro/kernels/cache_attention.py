@@ -98,7 +98,8 @@ def cache_decode_attention(entry: dict, q: jax.Array, length: jax.Array,
     ``q``: (b, 1, h, hd); ``length``: (1,) int32 shared or (b,) per-slot.
     """
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        from repro.kernels.ops import default_interpret
+        interpret = default_interpret()
     b, _, h, hd = q.shape
     length = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
     hi_len = entry["k_hi"].shape[1]

@@ -78,12 +78,16 @@ def stamp_decode_matmul_pallas(
     *,
     block_n: int = 512,
     out_dtype=None,
-    interpret: bool = False,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Fused decode linear: ``Q8(x) · Wq_deq + bias`` in one kernel."""
+    if interpret is None:
+        from repro.kernels.ops import default_interpret
+        interpret = default_interpret()
     b, k = x.shape
     k2, n = qw.shape
-    assert k == k2, (k, k2)
+    if k != k2:
+        raise ValueError(f"activation K={k} does not match weight K={k2}")
     bn = min(block_n, n)
     while n % bn:
         bn //= 2

@@ -61,11 +61,17 @@ def _dwt_kernel(x_ref, o_ref, *, levels: int, inverse: bool):
 
 
 def haar_dwt_pallas(x: jax.Array, levels: int = 3, inverse: bool = False,
-                    block_d: int = 128, interpret: bool = False) -> jax.Array:
+                    block_d: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
     """x: (batch, s, d) with s a multiple of 2**levels, d of block_d."""
+    if interpret is None:
+        from repro.kernels.ops import default_interpret
+        interpret = default_interpret()
     b, s, d = x.shape
-    assert d % block_d == 0, (d, block_d)
-    assert s % (1 << levels) == 0, (s, levels)
+    if d % block_d:
+        raise ValueError(f"d={d} not divisible by block_d={block_d}")
+    if s % (1 << levels):
+        raise ValueError(f"seq {s} not a multiple of 2**levels={1 << levels}")
     kernel = functools.partial(_dwt_kernel, levels=levels, inverse=inverse)
     return pl.pallas_call(
         kernel,

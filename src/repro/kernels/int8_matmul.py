@@ -58,14 +58,20 @@ def int8_matmul_pallas(
     sx: jax.Array, zx: jax.Array,
     sw: jax.Array, zw: jax.Array,
     *, block_m: int = 128, block_n: int = 128, block_k: int = 128,
-    out_dtype=jnp.bfloat16, interpret: bool = False,
+    out_dtype=jnp.bfloat16, interpret: bool | None = None,
 ) -> jax.Array:
     """qx: (M, K) int8; qw: (K, N) int8; sx/zx: (M, 1); sw/zw: (1, N)."""
+    if interpret is None:
+        from repro.kernels.ops import default_interpret
+        interpret = default_interpret()
     m, k = qx.shape
     k2, n = qw.shape
-    assert k == k2
+    if k != k2:
+        raise ValueError(f"activation K={k} does not match weight K={k2}")
     bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k)
+    if m % bm or n % bn or k % bk:
+        raise ValueError(f"shape ({m}, {n}, {k}) not divisible by blocks "
+                         f"({bm}, {bn}, {bk})")
     n_k = k // bk
     kernel = functools.partial(_matmul_kernel, n_k=n_k, k_total=k)
     return pl.pallas_call(

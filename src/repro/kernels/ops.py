@@ -22,8 +22,15 @@ from repro.kernels.stamp_matmul import (stamp_quant_dual_matmul_pallas,
 from repro.kernels.wht import wht_pallas
 
 
-def _interpret_default() -> bool:
+def default_interpret() -> bool:
+    """Shared ``interpret=`` default for every Pallas kernel in this package:
+    interpret-mode everywhere except on a real TPU backend.  Kernel entry
+    points accept ``interpret=None`` and resolve it through this one switch,
+    so tests can still pin the mode explicitly."""
     return jax.default_backend() != "tpu"
+
+
+_interpret_default = default_interpret  # back-compat alias
 
 
 @functools.partial(jax.jit, static_argnames=("levels", "inverse", "block_d",
@@ -32,7 +39,7 @@ def haar_dwt_seq(x, levels: int = 3, inverse: bool = False,
                  block_d: int = 128, interpret: bool | None = None):
     """Multi-level sequence-axis Haar DWT, fused over levels.  x: (b, s, d)."""
     if interpret is None:
-        interpret = _interpret_default()
+        interpret = default_interpret()
     d = x.shape[2]
     block_d = min(block_d, d)
     while d % block_d:
@@ -49,14 +56,14 @@ def haar_dwt_seq(x, levels: int = 3, inverse: bool = False,
 @functools.partial(jax.jit, static_argnames=("axis", "interpret"))
 def walsh_hadamard(x, axis: int = -2, interpret: bool | None = None):
     if interpret is None:
-        interpret = _interpret_default()
+        interpret = default_interpret()
     return wht_pallas(x, axis=axis, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "interpret"))
 def quantize_pack(x, bits: int = 4, interpret: bool | None = None):
     if interpret is None:
-        interpret = _interpret_default()
+        interpret = default_interpret()
     return quant_pack_pallas(x, bits=bits, interpret=interpret)
 
 
@@ -64,7 +71,7 @@ def quantize_pack(x, bits: int = 4, interpret: bool | None = None):
 def int8_matmul(qx, qw, sx, zx, sw, zw, out_dtype=jnp.bfloat16,
                 interpret: bool | None = None):
     if interpret is None:
-        interpret = _interpret_default()
+        interpret = default_interpret()
     return int8_matmul_pallas(qx, qw, sx, zx, sw, zw, out_dtype=out_dtype,
                               interpret=interpret)
 
@@ -85,7 +92,7 @@ def stamp_quant_matmul(x, qw, sw, zw, bias=None, *, transform: str = "dwt",
     epilogue's VMEM residency).
     """
     if interpret is None:
-        interpret = _interpret_default()
+        interpret = default_interpret()
     if bias is None:
         bias = jnp.zeros((1, qw.shape[1]), jnp.float32)
     return stamp_quant_matmul_pallas(
@@ -111,7 +118,7 @@ def stamp_quant_dual_matmul(x, qw_g, sw_g, zw_g, qw_u, sw_u, zw_u,
     half) returns one array; ``"none"`` returns the (gate, up) tuple.
     """
     if interpret is None:
-        interpret = _interpret_default()
+        interpret = default_interpret()
     if bias_g is None:
         bias_g = jnp.zeros((1, qw_g.shape[1]), jnp.float32)
     if bias_u is None:
@@ -135,7 +142,7 @@ def stamp_decode_matmul(x, qw, sw, zw, bias=None, *, out_dtype=None,
     to the 8-bit per-token quantize + integer GEMM.
     """
     if interpret is None:
-        interpret = _interpret_default()
+        interpret = default_interpret()
     if bias is None:
         bias = jnp.zeros((1, qw.shape[1]), jnp.float32)
     return stamp_decode_matmul_pallas(

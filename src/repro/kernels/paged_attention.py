@@ -151,7 +151,8 @@ def paged_decode_attention(entry: dict, q: jax.Array, lengths: jax.Array,
     logical blocks hold 0 (the null page) and mask out via ``lengths``.
     """
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        from repro.kernels.ops import default_interpret
+        interpret = default_interpret()
     s_slots, _, h, hd = q.shape
     g = entry["k_lo"].shape[2]
     rep = h // g
@@ -339,10 +340,12 @@ def paged_ragged_attention(entry: dict, q_pf: jax.Array, q_dec: jax.Array,
     Returns ``(out_pf (n_pf, C, h, hd), out_dec (S, 1, h, hd))``.
     """
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        from repro.kernels.ops import default_interpret
+        interpret = default_interpret()
     n_pf, c_len, h, hd = q_pf.shape
     s_slots = q_dec.shape[0]
-    assert s_slots >= 1, "the unified step always carries the decode slots"
+    if s_slots < 1:
+        raise ValueError("the unified step always carries the decode slots")
     if n_pf == 0:
         out_dec = paged_decode_attention(entry, q_dec, lengths, hi_table,
                                          lo_table, block_size,

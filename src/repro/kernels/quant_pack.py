@@ -42,15 +42,19 @@ def _quant_kernel(x_ref, q_ref, scale_ref, zp_ref, *, bits: int):
 
 
 def quant_pack_pallas(x: jax.Array, bits: int = 4, block_s: int = 256,
-                      interpret: bool = False):
+                      interpret: bool | None = None):
     """x: (batch, s, d) → (packed, scale, zp).
 
     d must be even for bits=4 (nibble pairs); block_s rows are quantized per
     program so the working set (block_s × d × 4 B) stays inside VMEM.
     """
+    if interpret is None:
+        from repro.kernels.ops import default_interpret
+        interpret = default_interpret()
     b, s, d = x.shape
     bs = min(block_s, s)
-    assert s % bs == 0
+    if s % bs:
+        raise ValueError(f"seq {s} not divisible by block_s={bs}")
     out_d = d // 2 if bits == 4 else d
     out_dtype = jnp.uint8 if bits == 4 else jnp.int8
     kernel = functools.partial(_quant_kernel, bits=bits)

@@ -230,13 +230,19 @@ def stamp_quant_matmul_pallas(
     lo_bits: int = 4,
     block_n: int = 256,
     out_dtype=None,
-    interpret: bool = False,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Fused STaMP linear: ``L⁻¹(Q(L·x) · Wq_deq) + bias`` in one kernel."""
-    assert transform in FUSABLE_TRANSFORMS, transform
+    if interpret is None:
+        from repro.kernels.ops import default_interpret
+        interpret = default_interpret()
+    if transform not in FUSABLE_TRANSFORMS:
+        raise ValueError(f"transform {transform!r} is not fusable "
+                         f"(expected one of {FUSABLE_TRANSFORMS})")
     x_spec, b, s, k = _x_spec(x)
     k2, n = qw.shape
-    assert k == k2, (k, k2)
+    if k != k2:
+        raise ValueError(f"activation K={k} does not match weight K={k2}")
     bn = _pick_block_n(block_n, n)
     kernel = functools.partial(
         _stamp_kernel, transform=transform, levels=levels,
@@ -283,18 +289,27 @@ def stamp_quant_dual_matmul_pallas(
     block_n: int = 256,
     epilogue: str = "silu_mul",   # "silu_mul" | "none"
     out_dtype=None,
-    interpret: bool = False,
+    interpret: bool | None = None,
 ):
     """Fused STaMP gate/up pair: ONE transform+quantize of the shared input
     drives both integer GEMMs.  ``epilogue="silu_mul"`` returns
     ``silu(L⁻¹(Q·Wg)+bg) · (L⁻¹(Q·Wu)+bu)`` as a single array;
     ``epilogue="none"`` returns the ``(gate, up)`` tuple."""
-    assert transform in FUSABLE_TRANSFORMS, transform
-    assert epilogue in ("silu_mul", "none"), epilogue
+    if interpret is None:
+        from repro.kernels.ops import default_interpret
+        interpret = default_interpret()
+    if transform not in FUSABLE_TRANSFORMS:
+        raise ValueError(f"transform {transform!r} is not fusable "
+                         f"(expected one of {FUSABLE_TRANSFORMS})")
+    if epilogue not in ("silu_mul", "none"):
+        raise ValueError(f"unknown epilogue {epilogue!r}")
     x_spec, b, s, k = _x_spec(x)
     k2, n = qw_g.shape
-    assert k == k2, (k, k2)
-    assert qw_u.shape == qw_g.shape, (qw_u.shape, qw_g.shape)
+    if k != k2:
+        raise ValueError(f"activation K={k} does not match weight K={k2}")
+    if qw_u.shape != qw_g.shape:
+        raise ValueError(f"gate/up weight shapes differ: "
+                         f"{qw_g.shape} vs {qw_u.shape}")
     bn = _pick_block_n(block_n, n)
     kernel = functools.partial(
         _stamp_dual_kernel, transform=transform, levels=levels,

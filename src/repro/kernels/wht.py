@@ -45,14 +45,19 @@ def _wht_feat_kernel(x_ref, o_ref, *, n: int):
 
 
 def wht_pallas(x: jax.Array, axis: int = -2, block: int = 128,
-               interpret: bool = False) -> jax.Array:
+               interpret: bool | None = None) -> jax.Array:
     """Orthonormal WHT along ``axis`` (-2 sequence, -1 feature).
     The transformed axis length must be a power of two."""
+    if interpret is None:
+        from repro.kernels.ops import default_interpret
+        interpret = default_interpret()
     b, s, d = x.shape
     if axis in (-2, 1):
         n = s
-        assert n & (n - 1) == 0, f"seq {n} not a power of two"
-        assert d % block == 0
+        if n & (n - 1):
+            raise ValueError(f"seq {n} not a power of two")
+        if d % block:
+            raise ValueError(f"d={d} not divisible by block={block}")
         kernel = functools.partial(_wht_seq_kernel, n=n)
         return pl.pallas_call(
             kernel,
@@ -63,8 +68,10 @@ def wht_pallas(x: jax.Array, axis: int = -2, block: int = 128,
             interpret=interpret,
         )(x)
     n = d
-    assert n & (n - 1) == 0, f"feature dim {n} not a power of two"
-    assert s % block == 0 or s < block
+    if n & (n - 1):
+        raise ValueError(f"feature dim {n} not a power of two")
+    if s % block and s >= block:
+        raise ValueError(f"seq {s} not divisible by block={block}")
     bs = min(block, s)
     kernel = functools.partial(_wht_feat_kernel, n=n)
     return pl.pallas_call(

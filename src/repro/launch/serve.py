@@ -159,15 +159,24 @@ def main():
         engine = BucketedEngine(sparams, cfg, serve,
                                 EngineConfig(max_batch=8, bucket=128,
                                              max_seq=max_seq))
+    # per-site fused/reference matrix: which linears run integer kernels
+    # and, for every reference site, the structured reason why
+    for site, cell in engine.eligibility.items():
+        why = f" ({','.join(cell['reasons'])})" if cell["reasons"] else ""
+        print(f"[serve:eligibility] {site:<12} {cell['status']:<9} "
+              f"kernel={cell['kernel'] or '-'} "
+              f"layers={cell['layers']}{why}")
+    n_ref = engine.stats["reference_fallback_sites"]
+    print(f"[serve:eligibility] reference_fallback_sites={n_ref}")
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
         engine.submit(rng.integers(0, cfg.vocab_size, args.prompt_len),
                       max_new_tokens=args.max_new,
                       deadline_s=args.deadline_s,
                       ttft_deadline_s=args.ttft_deadline_s)
-    t0 = time.time()
+    t0 = time.perf_counter()
     done = engine.run()
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     total_new = sum(len(r.out_tokens) for r in done)
     ttfts = sorted(r.ttft_s for r in done)
     print(f"[serve:{args.engine}] {len(done)} requests, {total_new} tokens "

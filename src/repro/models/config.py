@@ -112,7 +112,9 @@ class ModelConfig:
                 ffn = "moe" if (self.num_experts and i % self.moe_period ==
                                 (self.moe_period - 1)) else "mlp"
                 period.append(LayerSpec(mixer, ffn))
-            assert n % p == 0, f"{self.name}: {n} layers not divisible by period {p}"
+            if n % p:
+                raise ValueError(
+                    f"{self.name}: {n} layers not divisible by period {p}")
             return (), tuple(period), n // p
         if self.family == "moe":
             spec = LayerSpec("attn", "moe_dense" if self.dense_residual else "moe")

@@ -259,6 +259,64 @@ _QKV_BIAS = ("bq", "bk", "bv")
 _PAIRS = (("wi_gate", "wi_up"), ("dwi_gate", "dwi_up"))
 
 
+def fused_site_matrix(cfg: ModelConfig, stamp: Optional[StampConfig],
+                      feature_rot=None) -> dict:
+    """Eligibility audit: every STaMP site this architecture instantiates,
+    mapped to ``fused`` or ``reference`` with structured reason codes.
+
+    The per-config half of ``repro.analysis.contracts`` (and the serve-time
+    init log): config-level ineligibility comes from
+    `repro.core.stamp.fused_ineligibility`, site-level structural
+    ineligibility (MoE expert einsums, cross-attention, the encoder) is
+    stated here explicitly instead of falling through an implicit branch.
+    Cells: ``{"status", "kernel", "wiring", "layers", "reasons"}`` keyed by
+    the telemetry site label (``qkv``/``wo``/``gate_up``/``wo_mlp``/
+    ``moe``/``in_proj``/``out_proj``/``cross_attn``/``encoder``).
+    """
+    from repro.core.stamp import fused_ineligibility
+    base = (("stamp_disabled",) if stamp is None
+            else fused_ineligibility(stamp, feature_rot))
+    pro, period, nper = cfg.layer_plan()
+    specs = pro + period * nper
+    matrix: dict = {}
+
+    def add(site, kernel, wiring, site_reasons=()):
+        reasons = tuple(site_reasons) + (() if site_reasons else base)
+        cell = matrix.setdefault(site, {
+            "status": "fused" if not reasons else "reference",
+            "kernel": kernel if not reasons else None,
+            "wiring": wiring,
+            "layers": 0,
+            "reasons": list(reasons),
+        })
+        cell["layers"] += 1
+
+    for spec in specs:
+        if spec.mixer == "attn":
+            add("qkv", "stamp_quant_matmul", "merged_wqkv")
+            add("wo", "stamp_quant_matmul", "single_head_merge")
+        elif spec.mixer == "mamba":
+            add("in_proj", "stamp_quant_matmul", "single")
+            add("out_proj", "stamp_quant_matmul", "single")
+        if spec.ffn in ("mlp", "moe_dense"):
+            add("gate_up", "stamp_quant_dual_matmul", "pair")
+            add("wo_mlp", "stamp_quant_matmul", "single")
+        if spec.ffn in ("moe", "moe_dense"):
+            # capacity-dispatched (b, E, C, d) expert einsums don't fit the
+            # per-sequence kernel tiling (ROADMAP "Open items")
+            add("moe", None, "reference_moe_ffn",
+                site_reasons=("site_moe_expert_einsum",))
+    if cfg.encoder_layers:
+        # pooled-conditioning sites carry no sequence transform (Table 4)
+        for _ in range(len(specs)):
+            add("cross_attn", None, "reference_xattn",
+                site_reasons=("site_cross_attn_no_seq_transform",))
+        for _ in range(cfg.encoder_layers):
+            add("encoder", None, "reference_encoder",
+                site_reasons=("site_encoder_unstamped",))
+    return matrix
+
+
 def prepare_fused_weights(params: Pytree, stamp: StampConfig) -> Pytree:
     """Hoist the fused sites' weights into cached int8 buffers
     ``{"iq", "isw", "izw"}`` (per-output-channel scales, signed codes);

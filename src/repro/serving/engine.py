@@ -182,6 +182,21 @@ class _EngineBase:
         self.cfg = cfg
         self.serve = serve
         self._uid = 0
+        self._refresh_eligibility()
+
+    def _refresh_eligibility(self) -> None:
+        """Recompute the per-site fused/reference matrix for the *current*
+        serve config (at construction, and again after a fused → reference
+        demotion) and publish the ``reference_fallback_sites`` gauge so a
+        silent fall-off-the-fused-path shows up on the metrics surface, not
+        just in step latency."""
+        self.eligibility = lm.fused_site_matrix(self.cfg, self.serve.stamp)
+        n_ref = sum(1 for c in self.eligibility.values()
+                    if c["status"] == "reference")
+        self.metrics.gauge(
+            "reference_fallback_sites",
+            help="linear sites running the reference (non-fused) path"
+        ).set(n_ref)
 
     # -- observability core ---------------------------------------------
     def _init_events(self, max_events: int) -> None:
@@ -214,9 +229,13 @@ class _EngineBase:
     @property
     def stats(self) -> Dict[str, int]:
         """The legacy dict view over the registry counters (read-only
-        snapshot — mutate through the registry / ``reset_stats``)."""
-        return {k: int(self.metrics.counter(k).value)
-                for k in self.STAT_KEYS}
+        snapshot — mutate through the registry / ``reset_stats``), plus
+        the ``reference_fallback_sites`` eligibility gauge."""
+        out = {k: int(self.metrics.counter(k).value)
+               for k in self.STAT_KEYS}
+        out["reference_fallback_sites"] = int(
+            self.metrics.gauge("reference_fallback_sites").value)
+        return out
 
     def reset_stats(self, keep: tuple = ("recompiles",),
                     clear_events: bool = False) -> None:
@@ -225,6 +244,7 @@ class _EngineBase:
         clearing the event ring — the benchmark warmup/measure boundary
         for BOTH engines."""
         self.metrics.reset(exclude=keep)
+        self._refresh_eligibility()   # reset() zeroes gauges; re-publish
         if clear_events:
             self.events.clear()
 
@@ -831,6 +851,7 @@ class PagedServingEngine(_EngineBase):
             stamp=dataclasses.replace(st, execution="reference"),
             fused_decode_matmul=False)
         self._build_step_fns()
+        self._refresh_eligibility()
         self._inc("demotions")
         self._event("demote", to="reference")
 

@@ -401,7 +401,7 @@ class TestEngineObservability:
                                           max_seq=96))
         done = _run(eng, prompts)
         st = eng.stats
-        assert set(st) == set(eng.STAT_KEYS)
+        assert set(st) == set(eng.STAT_KEYS) | {"reference_fallback_sites"}
         assert st["steps"] > 0 and st["device_dispatches"] > 0
         assert st["finished"] == len(done) and st["preemptions"] == 0
         kinds = {k for _, k, _ in eng.events}
