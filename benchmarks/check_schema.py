@@ -38,6 +38,10 @@ BENCH_ROWS = {
                       "hbm_bytes_per_token"),
     "hybrid_jamba": ("model", "requests", "bucketed", "unified", "two_call",
                      "ssm_state_bytes_per_slot"),
+    "moe_arctic": ("model", "requests", "decode_tokens", "tokens_per_s",
+                   "num_experts", "experts_per_token",
+                   "reference_fallback_sites",
+                   "device_dispatches_per_step", "router"),
     "degraded": ("requests", "virtual_wall_s", "tokens_per_s",
                  "goodput_tokens_per_s", "finished", "failed", "shed",
                  "rejected", "shed_rate", "deadline_misses", "preemptions",
@@ -45,6 +49,9 @@ BENCH_ROWS = {
 }
 BENCH_SCALARS = ("paged_vs_bf16_hbm_ratio", "unified_vs_two_call_tokens_ratio")
 PERCENTILE_KEYS = ("p50", "p90", "p99")
+# router-health sub-dict of the moe_arctic row (grouped fused MoE serving)
+ROUTER_KEYS = ("expert_tokens_last_step", "dropped_tokens_total",
+               "capacity_occupancy", "drop_rate")
 
 # -- metrics snapshot ----------------------------------------------------
 METRIC_SECTIONS = ("t", "counters", "gauges", "histograms")
@@ -80,6 +87,11 @@ def _check_bench(doc: dict, errs: list) -> None:
                 for q in PERCENTILE_KEYS:
                     if q not in doc[row][pk]:
                         errs.append(f"bench: {row}.{pk}.{q} missing")
+    router = doc.get("moe_arctic", {}).get("router")
+    if isinstance(router, dict):
+        for k in ROUTER_KEYS:
+            if k not in router:
+                errs.append(f"bench: moe_arctic.router.{k} missing")
     for k in BENCH_SCALARS:
         if k not in doc:
             errs.append(f"bench: missing scalar {k!r}")

@@ -45,6 +45,7 @@ def run() -> list[dict]:
                  "derived": f"tpu_int_macs={2 * m * n * k}"})
     rows.extend(_stamp_linear_rows(rng))
     rows.extend(fused_site_rows())
+    rows.extend(moe_site_rows())
     return rows
 
 
@@ -187,6 +188,87 @@ def fused_site_rows() -> list[dict]:
                      "derived": (f"tpu_hbm_bytes={fused_b},"
                                  f"hbm_savings={ref_b / fused_b:.2f}x")})
     return rows
+
+
+def moe_site_bytes(s: int, d: int, f: int, e: int, k: int,
+                   cf: float) -> tuple[int, int]:
+    """Derived per-group HBM traffic of the MoE expert site, f32 activation
+    accounting (same convention as `stamp_site_bytes`); capacity
+    C = ceil(s·k/E·cf).
+
+    Reference: dispatch einsum (x read, f32 (E,C,d) buffer written), gate
+    and up each re-read the buffer and re-materialize a bf16 expert weight
+    from the int8 codes (dequant write + matmul read), the (E,C,f)
+    gate/up/silu·mul intermediates all round-trip, down re-materializes its
+    weight, expert outputs written + re-read by the combine.
+
+    Fused: read the activation once (token quantize), move int8 codes
+    through the dispatch buffer (write + kernel read), stream the int8
+    expert codes, write the (E,C,d) expert outputs once, combine.  The
+    (E,C,f) intermediates never leave VMEM.
+    """
+    cap = max(int(np.ceil(s * k / e * cf)), 1)
+    act = s * d * 4
+    buck_i8 = e * cap * d                # int8 dispatch codes
+    buck = e * cap * d * 4               # f32 (E, C, d) buffer
+    hid = e * cap * f * 4                # f32 (E, C, f) intermediate
+    w_gu = e * d * f                     # int8 codes, gate or up
+    w_dn = e * f * d
+    remat = lambda codes: codes + 2 * codes * 2   # read + bf16 write/read
+    ref = (act + buck                    # dispatch: x read, xin written
+           + 2 * buck                    # gate + up each read xin
+           + 2 * remat(w_gu)            # gate/up weight re-materialized
+           + 2 * hid                    # g, u written
+           + 3 * hid                    # silu·mul: g, u read, h written
+           + hid + remat(w_dn)         # down: h read, weight re-materialized
+           + buck                       # expert outputs written
+           + buck + act)                # combine: outputs read, y written
+    fused = (act                         # activation read once
+             + 2 * buck_i8              # int8 dispatch written + kernel read
+             + 2 * w_gu + w_dn          # int8 expert codes streamed
+             + buck                     # expert outputs written
+             + buck + act)              # combine: outputs read, y written
+    return ref, fused
+
+
+@functools.lru_cache(maxsize=1)
+def moe_site_rows() -> list[dict]:
+    """Fused grouped-kernel vs reference einsum MoE expert site (one
+    routing group).  Both rows deploy the same prepared int8 expert codes;
+    the reference path dequantizes them per call."""
+    from repro.core.stamp import prepare_linear
+    from repro.models import layers as L
+
+    rng = np.random.default_rng(11)
+    s, d, f, e, k, cf = 256, 128, 128, 8, 2, 1.25
+    x = jnp.asarray(rng.normal(size=(1, s, d)).astype(np.float32))
+    gate_w = jnp.asarray(rng.normal(size=(d, e)).astype(np.float32))
+
+    def expert(k_dim, n_dim, seed):
+        r = np.random.default_rng(seed)
+        w = jnp.asarray(r.normal(size=(e, k_dim, n_dim)
+                                 ).astype(np.float32) * 0.05)
+        p = prepare_linear(w, bits=8)
+        return {"iq": p.qw, "isw": p.sw, "izw": p.zw}
+
+    prep = {"g": expert(d, f, 1), "u": expert(d, f, 2), "d": expert(f, d, 3)}
+    deq = {n: (w["iq"].astype(jnp.float32) - w["izw"]) * w["isw"]
+           for n, w in prep.items()}
+
+    us_ref, _ = timed(lambda: L.moe_ffn(
+        x, gate_w, deq["g"], deq["u"], deq["d"], k, cf, group_size=s),
+        reps=2)
+    us_fused, _ = timed(lambda: L.moe_ffn_fused(
+        x, gate_w, prep["g"], prep["u"], prep["d"], k, cf, group_size=s),
+        reps=2)
+    ref_b, fused_b = moe_site_bytes(s, d, f, e, k, cf)
+    return [
+        {"name": "kernels/site/moe.experts/reference", "us_per_call": us_ref,
+         "derived": f"tpu_hbm_bytes={ref_b}"},
+        {"name": "kernels/site/moe.experts/fused", "us_per_call": us_fused,
+         "derived": (f"tpu_hbm_bytes={fused_b},"
+                     f"hbm_savings={ref_b / fused_b:.2f}x")},
+    ]
 
 
 def main() -> None:

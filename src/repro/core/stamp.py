@@ -241,6 +241,27 @@ def prepare_linear(
     return PreparedLinear(qw=qw, sw=sw, zw=zp - shift, bias=b)
 
 
+def token_quantize(x: Array, bits: int = 8
+                   ) -> tuple[Array, Array, Array]:
+    """Per-token asymmetric min-max quantize in the **token domain** — the
+    grouped MoE path's dispatch-buffer format.  The STaMP round trip
+    (transform + mixed-precision quantize + inverse) has already shaped
+    ``x``; this re-codes each token once, *before* dispatch, so a top-k
+    routed token is quantized a single time however many expert buckets it
+    lands in and the dispatch gather moves int8 codes instead of bf16
+    activations.  Returns signed int8 codes plus ``(..., 1)`` f32 scale
+    and identically shifted zero point (the `_int_gemm` convention)."""
+    n = float(2 ** bits - 1)
+    shift = float(1 << (bits - 1))
+    xf = x.astype(jnp.float32)
+    mn = jnp.min(xf, axis=-1, keepdims=True)
+    mx = jnp.max(xf, axis=-1, keepdims=True)
+    s = jnp.maximum((mx - mn) / n, 1e-8)
+    z = jnp.round(-mn / s)
+    q = (jnp.clip(jnp.round(xf / s) + z, 0.0, n) - shift).astype(jnp.int8)
+    return q, s, z - shift
+
+
 def fused_ineligibility(cfg: StampConfig,
                         feature_rot: Optional[Array] = None
                         ) -> tuple:

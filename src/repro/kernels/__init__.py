@@ -48,6 +48,37 @@ Every prefill-path model linear is wired through the fused family
   ``epilogue="none"`` both projections are written (two outputs), still
   off the single shared quantize.
 
+Grouped MoE execution
+---------------------
+The MoE expert einsums don't fit the per-sequence tiling above: after
+capacity routing the activation is ``(b, E, C, d)`` — expert buckets, not
+sequence spans — and the sequence transform ``L`` does not commute with
+the dispatch gather, so a per-bucket transform would change numerics.
+`stamp_matmul.stamp_quant_grouped_matmul_pallas` (wrapper
+`ops.stamp_quant_grouped_matmul`) instead splits the work at the token
+boundary — the **dispatch-once-quantize-once invariant**:
+
+* the stamped round trip (transform → mixed-precision fake-quant →
+  inverse) runs ONCE per token in XLA, shared verbatim with the router
+  input, so fused and reference paths route bit-identically by
+  construction;
+* `repro.core.stamp.token_quantize` then produces one int8 code + scale
+  + zero point per token, and the *codes* are gathered into the capacity
+  buckets — the dispatch buffer moves int8, not bf16;
+* ONE kernel walks grid ``(b, E, C/block_c, f/block_f)`` with the
+  per-``(b, E)`` occupancy counts as a scalar-prefetch table: index maps
+  clamp the empty capacity tail of underfull buckets (routing keeps each
+  bucket a contiguous prefix, so the count is exact), rows past the
+  count are zeroed in-kernel, and gate + up GEMMs consume the same
+  gathered codes with the silu·mul epilogue and the grouped down-proj in
+  VMEM scratch — the ``(E, C, f)`` intermediates never reach HBM.
+
+Expert weights prepare like every other site
+(`prepare_fused_weights` stacks the scanned period as
+``(nper, E, din, dout)`` int8) and shard expert-parallel over the
+``'model'`` mesh axis through the existing suffix-strip rules
+(`repro/sharding.py`).
+
 The unified ragged serving step
 -------------------------------
 The paged engine dispatches ONE device program per step
@@ -173,6 +204,7 @@ from repro.kernels.ops import (  # noqa: F401
     quantize_pack,
     stamp_decode_matmul,
     stamp_quant_dual_matmul,
+    stamp_quant_grouped_matmul,
     stamp_quant_matmul,
     walsh_hadamard,
 )

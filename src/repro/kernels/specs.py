@@ -197,6 +197,32 @@ def _ex_stamp_segment():
         dict(seg_len=16, num_hi=4)
 
 
+def _ex_stamp_grouped():
+    from repro.kernels.stamp_matmul import stamp_quant_grouped_matmul_pallas
+    r = _rng()
+    b, e, cap, d, f = 1, 4, 8, 32, 64
+    qx = r.integers(-128, 128, size=(b, e, cap, d), dtype=np.int8)
+    sx = r.uniform(1e-3, 1e-2, size=(b, e, cap, 1)).astype(np.float32)
+    zx = r.integers(-8, 8, size=(b, e, cap, 1)).astype(np.float32)
+    # occupancy prefetch table: full, partial and EMPTY buckets — the
+    # checker proves the clamped capacity-tile index maps in-bounds on
+    # exactly this table (KC001)
+    counts = np.array([[8, 5, 0, 8]], np.int32)
+
+    def expert_w(k, n):
+        qw = r.integers(-128, 128, size=(e, k, n), dtype=np.int8)
+        sw = r.uniform(1e-3, 1e-2, size=(e, 1, n)).astype(np.float32)
+        zw = r.integers(-8, 8, size=(e, 1, n)).astype(np.float32)
+        return qw, sw, zw
+
+    qg, sg, zg = expert_w(d, f)
+    qu, su, zu = expert_w(d, f)
+    qd, sd, zd = expert_w(f, d)
+    return stamp_quant_grouped_matmul_pallas, \
+        (qx, sx, zx, counts, qg, sg, zg, qu, su, zu, qd, sd, zd), \
+        dict(block_c=8, block_f=32)
+
+
 def _ex_decode_matmul():
     from repro.kernels.decode_matmul import stamp_decode_matmul_pallas
     r = _rng()
@@ -329,6 +355,7 @@ KERNEL_EXAMPLES: dict = {
     "stamp_matmul.single_headsplit": _ex_stamp_single_headsplit,
     "stamp_matmul.dual": _ex_stamp_dual,
     "stamp_matmul.segment": _ex_stamp_segment,
+    "stamp_matmul.grouped": _ex_stamp_grouped,
     "decode_matmul": _ex_decode_matmul,
     "int8_matmul": _ex_int8_matmul,
     "haar_dwt": _ex_haar_dwt,

@@ -119,17 +119,19 @@ def _transform_quantize(x_ref, qx_ref, sx_ref, zx_ref, *,
     zx_ref[...] = zx - 128.0               # shift zp identically (exact)
 
 
-def _int_gemm(qx, sx, zxs, qw_ref, sw_ref, zw_ref, *, k_total: int):
+def _int_gemm(qx, sx, zxs, qw, sw, zw, *, k_total: int):
     """int8×int8 GEMM with the zero-point-correction epilogue; reads each
-    operand once.  Returns the dequantized (s, bn) f32 partial product."""
-    qw = qw_ref[...]                                   # (K, bn) int8
+    operand once.  Takes in-VMEM *values* (``(K, bn)`` int8 codes plus
+    ``(1, bn)`` scale / shifted zp) so callers can slice away leading
+    block axes first.  Returns the dequantized (s, bn) f32 partial
+    product."""
     acc = jnp.dot(qx, qw, preferred_element_type=jnp.int32).astype(jnp.float32)
     qw_sum = jnp.sum(qw.astype(jnp.int32), axis=0,
                      keepdims=True).astype(jnp.float32)
     qx_sum = jnp.sum(qx.astype(jnp.int32), axis=1,
                      keepdims=True).astype(jnp.float32)
-    sw = sw_ref[...].astype(jnp.float32)               # (1, bn)
-    zw = zw_ref[...].astype(jnp.float32)
+    sw = sw.astype(jnp.float32)                        # (1, bn)
+    zw = zw.astype(jnp.float32)
     corr = acc - zxs * qw_sum - zw * qx_sum + float(k_total) * zxs * zw
     return corr * sx * sw                              # (s, bn) f32
 
@@ -146,7 +148,7 @@ def _stamp_kernel(x_ref, qw_ref, sw_ref, zw_ref, b_ref, o_ref,
                             hi_bits=hi_bits, lo_bits=lo_bits)
 
     y = _int_gemm(qx_ref[...], sx_ref[...], zx_ref[...],
-                  qw_ref, sw_ref, zw_ref, k_total=k_total)
+                  qw_ref[...], sw_ref[...], zw_ref[...], k_total=k_total)
     # inverse transform commutes with the right-multiplication by W, so it
     # applies per output block; bias afterwards is exact (Eq. 7).
     y = _seq_inv(y, transform, levels, skip_first)
@@ -176,8 +178,10 @@ def _stamp_dual_kernel(x_ref, qwg_ref, swg_ref, zwg_ref, bg_ref,
                             hi_bits=hi_bits, lo_bits=lo_bits)
 
     qx, sx, zxs = qx_ref[...], sx_ref[...], zx_ref[...]
-    yg = _int_gemm(qx, sx, zxs, qwg_ref, swg_ref, zwg_ref, k_total=k_total)
-    yu = _int_gemm(qx, sx, zxs, qwu_ref, swu_ref, zwu_ref, k_total=k_total)
+    yg = _int_gemm(qx, sx, zxs, qwg_ref[...], swg_ref[...], zwg_ref[...],
+                   k_total=k_total)
+    yu = _int_gemm(qx, sx, zxs, qwu_ref[...], swu_ref[...], zwu_ref[...],
+                   k_total=k_total)
     # both outputs return to the original domain before the gating
     # nonlinearity — silu does NOT commute with L⁻¹, the element-wise
     # product must happen on tokens, not wavelet coefficients.
@@ -364,3 +368,169 @@ def stamp_quant_segment_matmul_pallas(
     xf = x.reshape(b * (t // seg_len), seg_len, *x.shape[2:])
     y = stamp_quant_matmul_pallas(xf, qw, sw, zw, bias, **kwargs)
     return y.reshape(b, t, y.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# Grouped MoE expert GEMMs over the quantized dispatch buffer
+# ---------------------------------------------------------------------------
+
+
+def _rowwise_quantize(a):
+    """Per-row 8-bit asymmetric min-max quantize of an in-VMEM f32 tile —
+    the same quantizer `_transform_quantize` applies per token, without the
+    transform (the grouped down-proj input lives in the token domain).
+    Returns signed int8 codes plus (rows, 1) f32 scale / shifted zp."""
+    mn = jnp.min(a, axis=-1, keepdims=True)
+    mx = jnp.max(a, axis=-1, keepdims=True)
+    sa = jnp.maximum((mx - mn) / 255.0, 1e-8)
+    za = jnp.round(-mn / sa)
+    qa = (jnp.clip(jnp.round(a / sa) + za, 0.0, 255.0) - 128.0) \
+        .astype(jnp.int8)
+    return qa, sa, za - 128.0
+
+
+def _grouped_moe_kernel(counts_ref, qx_ref, sx_ref, zx_ref,
+                        qwg_ref, swg_ref, zwg_ref,
+                        qwu_ref, swu_ref, zwu_ref,
+                        qwd_ref, swd_ref, zwd_ref,
+                        o_ref, acc_ref, *,
+                        num_experts: int, block_c: int, block_f: int,
+                        nf: int, d: int):
+    """One (batch, expert, capacity-tile, f-tile) grid step of the grouped
+    MoE FFN: dual gate/up int8 GEMMs off the SHARED quantized dispatch
+    tile, silu·mul epilogue in VMEM, per-row requantize of the activation
+    slab, and the partial down-proj accumulated over the f axis into
+    scratch.  ``counts_ref`` is the scalar-prefetched per-(batch, expert)
+    occupancy table: rows at or past the expert's kept-token count are
+    zeroed on the final write (capacity-dropped / empty slots contribute
+    exactly zero, matching the reference dispatch einsum)."""
+    i, e, c, j = (pl.program_id(0), pl.program_id(1),
+                  pl.program_id(2), pl.program_id(3))
+    cnt = counts_ref[i * num_experts + e]
+
+    @pl.when(j == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qx = qx_ref[0, 0]                                  # (bc, d) int8
+    sx = sx_ref[0, 0]                                  # (bc, 1) f32
+    zxs = zx_ref[0, 0]
+    g = _int_gemm(qx, sx, zxs, qwg_ref[0], swg_ref[0], zwg_ref[0],
+                  k_total=d)
+    u = _int_gemm(qx, sx, zxs, qwu_ref[0], swu_ref[0], zwu_ref[0],
+                  k_total=d)
+    a = jax.nn.silu(g) * u                             # (bc, bf) f32
+    # the down-proj consumes the activation slab as int8 too: per-row
+    # quantize within this f block (group-wise scales — each f tile gets
+    # its own row scale, so the partial products dequantize exactly)
+    qa, sa, zas = _rowwise_quantize(a)
+    acc_ref[...] += _int_gemm(qa, sa, zas, qwd_ref[0], swd_ref[0],
+                              zwd_ref[0], k_total=block_f)
+
+    @pl.when(j == nf - 1)
+    def _write():
+        row = c * block_c + jax.lax.broadcasted_iota(
+            jnp.int32, (block_c, 1), 0)
+        o_ref[0, 0] = jnp.where(row < cnt, acc_ref[...],
+                                0.0).astype(o_ref.dtype)
+
+
+def stamp_quant_grouped_matmul_pallas(
+    qx: jax.Array,           # (b, E, C, d) int8 gathered dispatch codes
+    sx: jax.Array,           # (b, E, C, 1) f32 per-token scale
+    zx: jax.Array,           # (b, E, C, 1) f32 per-token shifted zp
+    counts: jax.Array,       # (b, E) int32 kept tokens per expert bucket
+    qw_gate: jax.Array,      # (E, d, f) int8 stacked expert gate codes
+    sw_gate: jax.Array,      # (E, 1, f) f32
+    zw_gate: jax.Array,      # (E, 1, f) f32
+    qw_up: jax.Array,        # (E, d, f) int8
+    sw_up: jax.Array,
+    zw_up: jax.Array,
+    qw_down: jax.Array,      # (E, f, d) int8
+    sw_down: jax.Array,      # (E, 1, d) f32
+    zw_down: jax.Array,
+    *,
+    block_c: int = 128,
+    block_f: int = 512,
+    out_dtype=jnp.float32,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Grouped STaMP MoE FFN: the full expert stack in ONE kernel.
+
+    The walk is ``(batch, E, C/block_c, f/block_f)`` over the
+    capacity-bucketed dispatch buffer — tokens were transformed +
+    mixed-precision quantized ONCE per sequence span *before* dispatch, so
+    each grid step streams int8 codes and int8 expert weights only.  Per
+    step: gate and up GEMMs share the one quantized dispatch tile, the
+    silu·mul epilogue runs in VMEM, and the grouped down-proj consumes the
+    requantized activation slab with its partial products accumulated in
+    f32 scratch across the f axis.  The per-(batch, expert) occupancy
+    ``counts`` rides as a scalar-prefetch table: index maps clamp the
+    capacity-tile fetch for empty bucket tails (no dead code streams), and
+    slots past the count write exact zeros.
+
+    Returns the (b, E, C, d) expert outputs ready for the combine einsum.
+    """
+    if interpret is None:
+        from repro.kernels.ops import default_interpret
+        interpret = default_interpret()
+    b, e, cap, d = qx.shape
+    f = qw_gate.shape[-1]
+    bc = min(block_c, cap)
+    pad_c = -cap % bc
+    if pad_c:
+        padc = [(0, 0), (0, 0), (0, pad_c), (0, 0)]
+        qx = jnp.pad(qx, padc)
+        sx = jnp.pad(sx, padc, constant_values=1.0)
+        zx = jnp.pad(zx, padc)
+    bf = _pick_block_n(block_f, f)
+    nc, nf = (cap + pad_c) // bc, f // bf
+    counts = counts.reshape(-1).astype(jnp.int32)
+
+    def occ_idx(i, eg, c, cnt):
+        # last capacity tile this expert bucket actually occupies; empty
+        # tail tiles re-fetch it (index unchanged between steps → no copy)
+        nblk = (cnt[i * e + eg] + bc - 1) // bc
+        return jnp.minimum(c, jnp.maximum(nblk - 1, 0))
+
+    x_spec = pl.BlockSpec((1, 1, bc, d),
+                          lambda i, eg, c, j, cnt:
+                          (i, eg, occ_idx(i, eg, c, cnt), 0))
+    s_spec = pl.BlockSpec((1, 1, bc, 1),
+                          lambda i, eg, c, j, cnt:
+                          (i, eg, occ_idx(i, eg, c, cnt), 0))
+    win_spec = pl.BlockSpec((1, d, bf),
+                            lambda i, eg, c, j, cnt: (eg, 0, j))
+    cin_spec = pl.BlockSpec((1, 1, bf),
+                            lambda i, eg, c, j, cnt: (eg, 0, j))
+    wdn_spec = pl.BlockSpec((1, bf, d),
+                            lambda i, eg, c, j, cnt: (eg, j, 0))
+    cdn_spec = pl.BlockSpec((1, 1, d),
+                            lambda i, eg, c, j, cnt: (eg, 0, 0))
+    kernel = functools.partial(
+        _grouped_moe_kernel, num_experts=e, block_c=bc, block_f=bf,
+        nf=nf, d=d)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, e, nc, nf),
+            in_specs=[
+                x_spec, s_spec, s_spec,
+                win_spec, cin_spec, cin_spec,
+                win_spec, cin_spec, cin_spec,
+                wdn_spec, cdn_spec, cdn_spec,
+            ],
+            out_specs=pl.BlockSpec((1, 1, bc, d),
+                                   lambda i, eg, c, j, cnt: (i, eg, c, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((bc, d), jnp.float32),   # down-proj accumulator
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, e, cap + pad_c, d), out_dtype),
+        interpret=interpret,
+    )(counts, qx, sx, zx,
+      qw_gate, sw_gate, zw_gate,
+      qw_up, sw_up, zw_up,
+      qw_down, sw_down, zw_down)
+    return out[:, :, :cap] if pad_c else out

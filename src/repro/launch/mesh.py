@@ -4,6 +4,13 @@ A function (not a module-level constant) so importing this module never
 touches JAX device state — the dry-run driver must set
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* the first
 JAX initialization.
+
+The ``model`` axis doubles as the expert-parallel axis on MoE configs:
+``repro.sharding`` places the stacked expert buffers — bf16 *and* the
+fused path's prepared int8 ``{"iq","isw","izw"}`` leaves — with the expert
+dim over ``model``, so the capacity dispatch/combine einsums lower to
+all-to-alls over the same axis on both the reference and grouped-kernel
+paths.
 """
 
 from __future__ import annotations

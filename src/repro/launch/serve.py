@@ -168,6 +168,11 @@ def main():
               f"layers={cell['layers']}{why}")
     n_ref = engine.stats["reference_fallback_sites"]
     print(f"[serve:eligibility] reference_fallback_sites={n_ref}")
+    if n_ref == 0 and "moe" in engine.eligibility:
+        # the MoE expert einsums were the last structurally-ineligible
+        # site — call out full coverage explicitly on expert configs
+        print("[serve:eligibility] full fused coverage: every STaMP site "
+              "incl. grouped MoE runs the integer kernels")
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
         engine.submit(rng.integers(0, cfg.vocab_size, args.prompt_len),

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.config import ModelConfig
+from repro.obs import quantstats as QS
 
 Array = jax.Array
 
@@ -328,32 +329,10 @@ def swiglu_mlp(x: Array, wi_gate: Array, wi_up: Array, wo: Array) -> Array:
     return (jax.nn.silu(g) * u) @ wo
 
 
-def moe_ffn(
-    x: Array,                 # (b, s, d)
-    gate_w: Array,            # (d, E)
-    w_gate: Array,            # (E, d, f)
-    w_up: Array,              # (E, d, f)
-    w_down: Array,            # (E, f, d)
-    experts_per_token: int,
-    capacity_factor: float,
-    group_size: int = 1024,
-) -> Array:
-    """GShard/Switch-style capacity-based top-k MoE.
-
-    Tokens are routed in fixed groups of ``group_size`` (the batch axis is
-    folded with sequence sub-blocks), so the dispatch/combine tensors are
-    (G, g, E, C) with C = k·g/E·cf — total footprint linear in ``group_size``
-    and independent of sequence length.  Partitions over ('data' → G,
-    'model' → E) without ragged ops; the einsum forms lower to
-    all-to-all-like collectives under GSPMD.  Overflowing tokens are dropped
-    (standard capacity semantics).
-
-    A sequence length that doesn't divide ``group_size`` pads the tail
-    group with zero tokens; padding is masked out of routing *before* the
-    capacity cumsum (a pad token must not occupy an expert slot a real
-    token would have used) and carries zero combine weight, so it never
-    contributes to any output.
-    """
+def _moe_fold(x: Array, group_size: int) -> tuple[Array, Array, int]:
+    """Fold ``(bsz, seq, d)`` into fixed routing groups ``(b, gs, d)`` with
+    the pad-tail validity mask (pad tokens must not occupy expert slots a
+    real token would have used)."""
     bsz, seq, d = x.shape
     gs = min(group_size, seq)
     pad = -seq % gs
@@ -362,10 +341,32 @@ def moe_ffn(
             [x, jnp.zeros((bsz, pad, d), x.dtype)], axis=1)
     seq_p = seq + pad
     x = x.reshape(bsz * (seq_p // gs), gs, d)
-    b, s, _ = x.shape
     valid = (jnp.arange(seq_p) < seq)                          # (seq_p,)
     valid = jnp.broadcast_to(valid[None], (bsz, seq_p)) \
-        .reshape(b, s).astype(jnp.float32)
+        .reshape(x.shape[0], gs).astype(jnp.float32)
+    return x, valid, seq_p
+
+
+def moe_route(
+    x: Array,                 # (b, s, d) — one folded routing group per row
+    gate_w: Array,            # (d, E)
+    experts_per_token: int,
+    capacity_factor: float,
+    valid: Array,             # (b, s) f32 pad mask
+) -> tuple[Array, Array, Array]:
+    """GShard capacity routing, shared VERBATIM by the reference and fused
+    MoE paths — both consume the same combine/dispatch tensors, so kept and
+    capacity-dropped token sets are bit-identical by construction.
+
+    Returns ``(combine (b,s,E,C) in x.dtype, dispatch, counts (b,E)
+    int32)``.  ``counts`` is each expert bucket's kept-token occupancy —
+    kept slots form a prefix of ``[0, C)`` (the capacity cumsum assigns
+    positions in flat routing order), which is what lets the grouped
+    kernel's scalar-prefetch table clamp empty capacity tails.  When a
+    quant-telemetry scope is open, per-expert load / drop counters ride
+    the same collection protocol as the site stats.
+    """
+    b, s, _ = x.shape
     e = gate_w.shape[-1]
     k = experts_per_token
     cap = max(int(np.ceil(s * k / e * capacity_factor)), 1)
@@ -392,6 +393,46 @@ def moe_ffn(
     combine = jnp.einsum("bsk,bske,bskc->bsec",
                          gate_vals, keep, cap_onehot).astype(x.dtype)
     dispatch = (combine > 0).astype(x.dtype)
+    counts = jnp.sum(keep, axis=(1, 2)).astype(jnp.int32)      # (b, E)
+    if QS.active():
+        QS.record_extra("moe_router", {
+            "expert_tokens": jnp.sum(keep, axis=(0, 1, 2)),    # (E,)
+            "dropped_tokens": jnp.sum(onehot) - jnp.sum(keep),
+            "capacity_slots": jnp.asarray(float(b * e * cap),
+                                          jnp.float32),
+        })
+    return combine, dispatch, counts
+
+
+def moe_ffn(
+    x: Array,                 # (b, s, d)
+    gate_w: Array,            # (d, E)
+    w_gate: Array,            # (E, d, f)
+    w_up: Array,              # (E, d, f)
+    w_down: Array,            # (E, f, d)
+    experts_per_token: int,
+    capacity_factor: float,
+    group_size: int = 1024,
+) -> Array:
+    """GShard/Switch-style capacity-based top-k MoE (reference path).
+
+    Tokens are routed in fixed groups of ``group_size`` (the batch axis is
+    folded with sequence sub-blocks), so the dispatch/combine tensors are
+    (G, g, E, C) with C = k·g/E·cf — total footprint linear in ``group_size``
+    and independent of sequence length.  Partitions over ('data' → G,
+    'model' → E) without ragged ops; the einsum forms lower to
+    all-to-all-like collectives under GSPMD.  Overflowing tokens are dropped
+    (standard capacity semantics).
+
+    A sequence length that doesn't divide ``group_size`` pads the tail
+    group with zero tokens; padding is masked out of routing *before* the
+    capacity cumsum (`_moe_fold`) and carries zero combine weight, so it
+    never contributes to any output.
+    """
+    bsz, seq, d = x.shape
+    x, valid, seq_p = _moe_fold(x, group_size)
+    combine, dispatch, _ = moe_route(x, gate_w, experts_per_token,
+                                     capacity_factor, valid)
 
     xin = jnp.einsum("bsec,bsd->becd", dispatch, x)            # (b, E, C, d)
     g = jnp.einsum("becd,edf->becf", xin, w_gate.astype(x.dtype))
@@ -399,6 +440,53 @@ def moe_ffn(
     h = jax.nn.silu(g) * u
     out = jnp.einsum("becf,efd->becd", h, w_down.astype(x.dtype))
     y = jnp.einsum("bsec,becd->bsd", combine, out)
+    return y.reshape(bsz, seq_p, d)[:, :seq]
+
+
+def moe_ffn_fused(
+    x: Array,                 # (b, s, d) — the stamped round-trip activation
+    gate_w: Array,            # (d, E) full-precision router
+    w_gate: dict,             # {"iq": (E, d, f) int8, "isw", "izw"} prepared
+    w_up: dict,
+    w_down: dict,             # {"iq": (E, f, d) int8, ...}
+    experts_per_token: int,
+    capacity_factor: float,
+    group_size: int = 1024,
+) -> Array:
+    """Capacity MoE through the grouped STaMP kernel.
+
+    Routing is `moe_route` on the SAME stamped activation the reference
+    path sees (bit-identical kept/dropped sets).  Then, instead of
+    dispatching bf16 activations into ``(b, E, C, d)`` and re-materializing
+    bf16 expert weights per call, each token is quantized ONCE
+    (`token_quantize` — however many of its top-k buckets it lands in), the
+    dispatch gather moves int8 codes, and `stamp_quant_grouped_matmul` runs
+    the gate/up/down expert stack as grouped int8 GEMMs in one kernel with
+    the per-bucket occupancy as its scalar-prefetch table.
+    """
+    from repro.core.stamp import token_quantize
+    from repro.kernels import ops as kops
+    bsz, seq, d = x.shape
+    xg, valid, seq_p = _moe_fold(x, group_size)
+    combine, dispatch, counts = moe_route(xg, gate_w, experts_per_token,
+                                          capacity_factor, valid)
+    b, _, e, cap = combine.shape
+    qd, sd, zd = token_quantize(xg)
+    # slot c of expert e holds the c-th kept token in sequence order, so
+    # the argmax over the one-hot sequence axis IS the gather index;
+    # empty slots gather token 0 and are zeroed by the kernel's count mask
+    src = jnp.argmax(dispatch, axis=1)                         # (b, E, C)
+    idx = src.reshape(b, e * cap, 1)
+
+    def gather(t):
+        return jnp.take_along_axis(t, idx, axis=1).reshape(b, e, cap, -1)
+
+    ye = kops.stamp_quant_grouped_matmul(
+        gather(qd), gather(sd), gather(zd), counts,
+        w_gate["iq"], w_gate["isw"], w_gate["izw"],
+        w_up["iq"], w_up["isw"], w_up["izw"],
+        w_down["iq"], w_down["isw"], w_down["izw"])
+    y = jnp.einsum("bsec,becd->bsd", combine, ye.astype(x.dtype))
     return y.reshape(bsz, seq_p, d)[:, :seq]
 
 

@@ -244,15 +244,20 @@ def quantize_weights_for_serving(params: Pytree, bits: int = 4) -> Pytree:
 #   merged — wq/wk/wv concatenate into one "wqkv" buffer at prepare time so
 #            prefill issues a single kernel call over the full QKV width.
 #
+#   grouped — the stacked (E, din, dout) expert buffers prepare in one
+#            `prepare_linear` pass (per-output-channel scales per expert)
+#            and feed `stamp_quant_grouped_matmul`, which walks capacity
+#            buckets with the router occupancy scalar-prefetched.
+#
 # Cross-attention projections (xw*) stay un-prepared: the paper applies no
-# sequence transform at pooled-conditioning sites (Table 4), and the MoE
-# expert einsums remain reference-only (ROADMAP "Open items").
+# sequence transform at pooled-conditioning sites (Table 4).
 FUSED_SITES = {
     "wo": "single",              # attention out-proj (head-merge fused)
     "wo_mlp": "single", "dwo_mlp": "single",
     "in_proj": "single", "out_proj": "single",   # mamba projections
     "wi_gate": "pair", "wi_up": "pair",
     "dwi_gate": "pair", "dwi_up": "pair",
+    "we_gate": "grouped", "we_up": "grouped", "we_down": "grouped",
 }
 _QKV = ("wq", "wk", "wv")
 _QKV_BIAS = ("bq", "bk", "bv")
@@ -302,10 +307,10 @@ def fused_site_matrix(cfg: ModelConfig, stamp: Optional[StampConfig],
             add("gate_up", "stamp_quant_dual_matmul", "pair")
             add("wo_mlp", "stamp_quant_matmul", "single")
         if spec.ffn in ("moe", "moe_dense"):
-            # capacity-dispatched (b, E, C, d) expert einsums don't fit the
-            # per-sequence kernel tiling (ROADMAP "Open items")
-            add("moe", None, "reference_moe_ffn",
-                site_reasons=("site_moe_expert_einsum",))
+            # capacity-dispatched (b, E, C, d) expert tensors run through
+            # the grouped kernel: quantize-once dispatch + occupancy-
+            # prefetched int8 expert GEMMs (config-level eligibility only)
+            add("moe", "stamp_quant_grouped_matmul", "grouped_dispatch")
     if cfg.encoder_layers:
         # pooled-conditioning sites carry no sequence transform (Table 4)
         for _ in range(len(specs)):
@@ -564,19 +569,18 @@ def attn_block(
     elif mode == "prefill" and paged is not None:
         # chunked prefill into the paged cache: write this chunk's K/V
         # through the block table, attend to the cached prefix + the raw
-        # chunk.  The first chunk has no prefix and takes the exact
-        # flash-attention path the bucketed prefill uses (numerical parity).
+        # chunk.  The first chunk has no prefix (start = 0) and the same
+        # call reduces to pure causal self-attention over the chunk.
         assert cache_entry is not None
         pcfg = paged["cfg"]
         new_entry = PKV.write_chunk(cache_entry, k, v, paged["pages"],
                                     paged["offsets"], paged["is_hi"], pcfg)
-        if paged["first"]:
-            attn = L.flash_attention(q, k, v, causal=True)
-        else:
-            segs = PKV.gather_segments(new_entry, paged["hi_table"],
-                                       paged["lo_table"], pcfg, x.dtype)
-            attn = L.chunked_prefill_attention(q, segs, k, v,
-                                               paged["start"])
+        # first and continuation chunks share the chunked call (start = 0
+        # masks the cached segments exactly — see chunked_prefill_attention)
+        # so the two-call and unified engines run row-identical math
+        segs = PKV.gather_segments(new_entry, paged["hi_table"],
+                                   paged["lo_table"], pcfg, x.dtype)
+        attn = L.chunked_prefill_attention(q, segs, k, v, paged["start"])
     else:
         attn = L.flash_attention(q, k, v, causal=causal)
         if mode == "prefill":
@@ -628,13 +632,15 @@ def attn_block_unified(
     free, exactly the two-call dispatch), ONE combined K/V scatter over the
     flattened token stream, then attention per span: decode spans over
     their mapped pages, prefill spans causally within the chunk against
-    their own block-table prefix.  The XLA fallback computes both the
-    no-prefix flash path and the cached-prefix path for the chunk rows and
-    selects per row by ``pf_first`` — a traced mask, so first/continuation
-    chunks share one compiled program, and each row's math is bit-identical
-    to the two-call engine's dedicated jit variant (the parity contract).
-    With the Pallas path enabled both regions go through ONE
-    `paged_ragged_attention` grid instead.
+    their own block-table prefix.  The XLA fallback runs ONE
+    `chunked_prefill_attention` call for all chunk rows: a first row's
+    ``pf_start = 0`` masks its cached segments to an exactly-zero merge
+    contribution, so no separate flash variant (and no evaluate-both-and-
+    ``jnp.where`` select) is needed — first/continuation chunks share one
+    compiled program and each row's math is bit-identical to the two-call
+    engine's chunk call (the parity contract).  With the Pallas path
+    enabled both regions go through ONE `paged_ragged_attention` grid
+    instead.
     """
     x_pf, x_dec = x
     hd, nh, kvh = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
@@ -677,17 +683,17 @@ def attn_block_unified(
                                        paged["dec_lt"], pcfg, x_dec.dtype)
         attn_dec = L.decode_attention_segments(q_dec, segs_dec,
                                                length=paged["dec_lengths"])
-        # chunk rows: both prefill variants, row-selected by the traced
-        # first-chunk mask (XLA computes both branches of a where anyway;
-        # this buys one compiled program over the two-call engine's
-        # first/continuation jit pair at the cost of the smaller branch)
-        attn_flash = L.flash_attention(q_pf, k_pf, v_pf, causal=True)
+        # chunk rows: ONE branch covers first and continuation chunks.  A
+        # first row's empty cached prefix (pf_start = 0) masks every
+        # segment and the online-softmax merge correction underflows to
+        # exactly zero, so the single chunked call IS the no-prefix result
+        # for those rows.  (The previous fallback evaluated BOTH variants
+        # and jnp.where-selected per row — paying the flash O(C²) scores on
+        # top of the segment attention for every chunk row, every step.)
         segs_pf = PKV.gather_segments(new_entry, paged["pf_ht"],
                                       paged["pf_lt"], pcfg, x_pf.dtype)
-        attn_cont = L.chunked_prefill_attention(q_pf, segs_pf, k_pf, v_pf,
-                                                paged["pf_start"])
-        first = paged["pf_first"][:, None, None, None]
-        attn_pf = jnp.where(first, attn_flash, attn_cont)
+        attn_pf = L.chunked_prefill_attention(q_pf, segs_pf, k_pf, v_pf,
+                                              paged["pf_start"])
 
     return (_attn_out(p, attn_pf, x_pf, stamp),
             _attn_out(p, attn_dec, x_dec, None)), new_entry
@@ -925,13 +931,24 @@ def ffn_block(p: dict, x: Array, spec: LayerSpec, cfg: ModelConfig, *,
     if spec.ffn in ("moe", "moe_dense"):
         gate_w = (p["gate_w"] if not isinstance(p["gate_w"], dict)
                   else _dequant_packed(p["gate_w"], jnp.float32))
-        we_gate = _expert_w(p["we_gate"], x.dtype)
-        we_up = _expert_w(p["we_up"], x.dtype)
-        we_down = _expert_w(p["we_down"], x.dtype)
+        # both paths see the SAME stamped round trip (routing on it keeps
+        # kept/dropped token sets bit-identical fused vs reference)
         hq = _maybe_stamp(h, stamp, site="moe")
-        out = out + L.moe_ffn(hq, gate_w, we_gate, we_up, we_down,
-                              cfg.experts_per_token, cfg.capacity_factor,
-                              group_size=cfg.moe_group_size)
+        if (_use_fused(stamp, p["we_gate"]) and _use_fused(stamp, p["we_up"])
+                and _use_fused(stamp, p["we_down"])):
+            # grouped kernel path: quantize each token once, dispatch int8
+            # codes, run the gate/up/down expert stack in ONE Pallas call
+            out = out + L.moe_ffn_fused(
+                hq, gate_w, p["we_gate"], p["we_up"], p["we_down"],
+                cfg.experts_per_token, cfg.capacity_factor,
+                group_size=cfg.moe_group_size)
+        else:
+            we_gate = _expert_w(p["we_gate"], x.dtype)
+            we_up = _expert_w(p["we_up"], x.dtype)
+            we_down = _expert_w(p["we_down"], x.dtype)
+            out = out + L.moe_ffn(hq, gate_w, we_gate, we_up, we_down,
+                                  cfg.experts_per_token, cfg.capacity_factor,
+                                  group_size=cfg.moe_group_size)
     if spec.ffn in ("mlp", "moe_dense"):
         prefix = "d" if spec.ffn == "moe_dense" else ""
         wg, wu = p[f"{prefix}wi_gate"], p[f"{prefix}wi_up"]
@@ -954,6 +971,12 @@ def ffn_block(p: dict, x: Array, spec: LayerSpec, cfg: ModelConfig, *,
 
 
 def _expert_w(w, dtype):
+    if isinstance(w, dict) and "iq" in w:
+        # prepared stacked (E, din, dout) int8 codes (decode / no-STaMP
+        # call sites share the serving params): exact bf16 dequant — codes
+        # and zero points are integers in [-128, 127]
+        return ((w["iq"].astype(dtype) - w["izw"].astype(dtype))
+                * w["isw"].astype(dtype))
     if isinstance(w, dict):
         return _dequant_packed(w, dtype)
     return w.astype(dtype)
@@ -1389,8 +1412,9 @@ def paged_prefill_chunk(params, pools: dict, tokens: Array, start: Array,
     targets (pad tokens routed to the null page); ``last_index``: scalar
     chunk-local index of the prompt's final token (its logits are the
     request's first-token distribution — only meaningful on the last
-    chunk); ``first``: static — the no-prefix chunk takes the same
-    flash-attention path as the bucketed prefill; ``slot``: scalar int32
+    chunk); ``first``: static — Mamba layers key their chunk-state
+    initialization on it (attention needs no branch: ``start = 0`` makes
+    the chunked call pure causal self-attention); ``slot``: scalar int32
     decode-slot index of the request — Mamba layers carry their conv/SSM
     state across chunk boundaries through that row of the slot-dense state
     pool (required for hybrid/SSM stacks, ignored by attention-only ones).
@@ -1464,9 +1488,9 @@ def paged_unified_step(params, pools: dict, pf_tokens: Array,
     ``pf_start``: (n_pf,) tokens already cached per chunk row;
     ``pf_length``: (n_pf,) materialized length after this chunk
     (= start + valid tokens);
-    ``pf_first``: (n_pf,) bool — no-prefix rows take the flash-attention
-    path (traced: first and continuation chunks share one compiled
-    program);
+    ``pf_first``: (n_pf,) bool — consumed by the Mamba chunk-state
+    initialization (attention needs no per-row branch: ``pf_start = 0``
+    already reduces a no-prefix row to causal self-attention);
     ``pf_last_index``: (n_pf,) chunk-local index whose logits are the
     request's next-token distribution (meaningful on final chunks);
     ``pf_slots``: (n_pf,) decode-slot index per chunk row — Mamba layers

@@ -50,7 +50,9 @@ import numpy as np
 
 from repro.core import quant as Q
 
-# keys summed across layers/steps vs. combined by min/max
+# keys combined by min/max; everything else sums across layers/steps
+# (key-driven so pseudo-sites — e.g. the MoE router's load counters —
+# ride the same scan drain/absorb protocol with their own key sets)
 _SUM_KEYS = ("clipped", "saturated", "elems", "hi_tokens", "tokens")
 _MIN_KEYS = ("scale_min",)
 _MAX_KEYS = ("scale_max",)
@@ -96,12 +98,13 @@ def _merge(dst: Dict[str, Dict], site: str, stats: Dict) -> None:
     if cur is None:
         dst[site] = dict(stats)
         return
-    for k in _SUM_KEYS:
-        cur[k] = cur[k] + stats[k]
-    for k in _MIN_KEYS:
-        cur[k] = jnp.minimum(cur[k], stats[k])
-    for k in _MAX_KEYS:
-        cur[k] = jnp.maximum(cur[k], stats[k])
+    for k, v in stats.items():
+        if k in _MIN_KEYS:
+            cur[k] = jnp.minimum(cur[k], v)
+        elif k in _MAX_KEYS:
+            cur[k] = jnp.maximum(cur[k], v)
+        else:
+            cur[k] = cur[k] + v
 
 
 def merge_flat(records: Dict[str, Dict]) -> None:
@@ -120,12 +123,13 @@ def absorb(stacked: Dict[str, Dict]) -> None:
         return
     for site, stats in stacked.items():
         flat = {}
-        for k in _SUM_KEYS:
-            flat[k] = jnp.sum(stats[k], axis=0)
-        for k in _MIN_KEYS:
-            flat[k] = jnp.min(stats[k], axis=0)
-        for k in _MAX_KEYS:
-            flat[k] = jnp.max(stats[k], axis=0)
+        for k, v in stats.items():
+            if k in _MIN_KEYS:
+                flat[k] = jnp.min(v, axis=0)
+            elif k in _MAX_KEYS:
+                flat[k] = jnp.max(v, axis=0)
+            else:
+                flat[k] = jnp.sum(v, axis=0)
         _merge(_SITES, site, flat)
 
 
@@ -135,6 +139,18 @@ def record(site: Optional[str], tx, bits, hi_bits: int) -> None:
     if not _ACTIVE or site is None:
         return
     _merge(_SITES, site, site_stats(tx, bits, hi_bits))
+
+
+def record_extra(site: str, stats: Dict[str, jnp.ndarray]) -> None:
+    """Record an arbitrary stats dict under a pseudo-site (e.g. the MoE
+    router's ``expert_tokens``/``dropped_tokens`` load counters).  Keys
+    reduce by the standard rules — sum unless named in ``_MIN_KEYS`` /
+    ``_MAX_KEYS`` — and ride the identical scan drain/absorb protocol,
+    so vector-valued leaves (per-expert counts) stack and re-reduce over
+    the period axis like any quant counter."""
+    if not _ACTIVE or site is None:
+        return
+    _merge(_SITES, site, {k: jnp.asarray(v) for k, v in stats.items()})
 
 
 def site_stats(tx, bits, hi_bits: int, scale=None, zp=None
@@ -187,6 +203,15 @@ def summarize(raw: Dict[str, Dict]) -> Dict[str, Dict[str, float]]:
     counts as floats."""
     out: Dict[str, Dict[str, float]] = {}
     for site, stats in raw.items():
+        if "elems" not in stats:
+            # pseudo-site (router counters): pass values through — scalar
+            # leaves as floats, vector leaves (per-expert) as lists
+            passthru = {}
+            for k, v in stats.items():
+                a = np.asarray(v)
+                passthru[k] = a.tolist() if a.ndim else float(a)
+            out[site] = passthru
+            continue
         vals = {k: float(np.asarray(v)) for k, v in stats.items()}
         elems = max(vals["elems"], 1.0)
         tokens = max(vals["tokens"], 1.0)

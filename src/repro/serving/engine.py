@@ -259,6 +259,10 @@ class _EngineBase:
         rate crosses the config threshold."""
         if not raw:
             return
+        raw = dict(raw)
+        router = raw.pop("moe_router", None)
+        if router is not None:
+            self._absorb_router_stats(router)
         summ = QS.summarize(raw)
         thresh = getattr(self.ecfg, "clip_alert_threshold", 0.05)
         for site, s in summ.items():
@@ -279,6 +283,35 @@ class _EngineBase:
                     help="clip-rate threshold crossings").inc()
                 self._event("quant_clip_alert", site=site,
                             clip_rate=s["clip_rate"], threshold=thresh)
+
+    def _absorb_router_stats(self, router: dict) -> None:
+        """Publish the MoE router's load counters (recorded by `moe_route`
+        under the ``moe_router`` pseudo-site): per-expert load-balance
+        gauges, the cumulative dropped-token counter, and the step's
+        capacity occupancy / drop rate."""
+        expert_tokens = np.asarray(router.get("expert_tokens", []),
+                                   np.float64).reshape(-1)
+        dropped = float(np.asarray(router.get("dropped_tokens", 0.0)))
+        slots = float(np.asarray(router.get("capacity_slots", 0.0)))
+        for i, n in enumerate(expert_tokens):
+            self.metrics.gauge(
+                "moe_expert_tokens", labels={"expert": str(i)},
+                help="MoE router: tokens dispatched to this expert "
+                     "(last step, summed over layers)").set(float(n))
+        self.metrics.counter(
+            "moe_dropped_tokens",
+            help="MoE router: cumulative capacity-dropped tokens").inc(
+            dropped)
+        routed = float(expert_tokens.sum())
+        self.metrics.gauge(
+            "moe_capacity_occupancy",
+            help="MoE router: kept tokens / capacity slots (last step)"
+        ).set(routed / slots if slots > 0 else 0.0)
+        total = routed + dropped
+        self.metrics.gauge(
+            "moe_drop_rate",
+            help="MoE router: dropped / (kept + dropped) (last step)"
+        ).set(dropped / total if total > 0 else 0.0)
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
                deadline_s: Optional[float] = None,

@@ -84,7 +84,12 @@ class ShardingPolicy:
             # dense mlp
             (r"(wi_gate|wi_up|dwi_gate|dwi_up)$", P(fsdp, tp)),
             (r"(wo_mlp|dwo)$", P(tp, fsdp)),
-            # moe
+            # moe — expert axis over 'model' (expert-parallel).  The fused
+            # path's prepared int8 expert buffers (we_*/iq stacked
+            # (E, din, dout) codes with (E, 1, dout) isw/izw) inherit these
+            # rules through the suffix strip above, so each model shard
+            # holds only its own experts' codes and the grouped kernel's
+            # capacity buckets stay local to the expert shard.
             (r"gate_w$", P(fsdp, None)),
             (r"(we_gate|we_up)$", P(tp, fsdp, None)),
             (r"we_down$", P(tp, None, fsdp)),
