@@ -46,6 +46,13 @@ BENCH_ROWS = {
                  "goodput_tokens_per_s", "finished", "failed", "shed",
                  "rejected", "shed_rate", "deadline_misses", "preemptions",
                  "watchdog_trips"),
+    "prefix_share": ("requests", "shared_prefix_fraction", "prefix_len",
+                     "max_new", "decode_tokens", "tokens_per_s",
+                     "tokens_per_s_cache_off", "speedup", "ttft_s",
+                     "ttft_s_cache_off", "prefill_chunks",
+                     "prefill_chunks_cache_off", "prefix_cache_hits",
+                     "prefix_cache_hit_rate", "prefix_tokens_reused",
+                     "cow_copies", "peak_pages", "peak_pages_cache_off"),
 }
 BENCH_SCALARS = ("paged_vs_bf16_hbm_ratio", "unified_vs_two_call_tokens_ratio")
 PERCENTILE_KEYS = ("p50", "p90", "p99")
@@ -58,7 +65,9 @@ METRIC_SECTIONS = ("t", "counters", "gauges", "histograms")
 # counter families the engines must always register (value may be 0)
 METRIC_COUNTERS = ("steps", "decode_tokens", "prefill_chunks", "preemptions",
                    "device_dispatches", "recompiles", "finished", "failed",
-                   "deadline_misses", "nan_quarantines", "demotions")
+                   "deadline_misses", "nan_quarantines", "demotions",
+                   "prefix_cache_queries", "prefix_cache_hits",
+                   "prefix_tokens_reused", "cow_copies")
 METRIC_HISTOGRAMS = ("ttft_s", "latency_s", "queue_wait_s")
 HISTOGRAM_FIELDS = ("edges", "counts", "sum", "count")
 

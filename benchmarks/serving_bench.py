@@ -36,6 +36,15 @@ The ``degraded`` row runs the same smoke model deliberately overloaded
 clock) and reports goodput, shed rate, and deadline misses — the
 graceful-degradation contract from the robustness PR.
 
+The ``prefix_share`` row serves a seeded prefix-heavy mix (75% of
+requests share one 96-token system prefix) twice — prefix caching on and
+off — and reports the tokens/s speedup, the TTFT drop, and the peak
+page-pool footprint of each pass.  Tokens must be bit-identical between
+the two passes (the cache changes where prefill *starts*, never what any
+chunk computes) and the allocator must be leak-free at exit; both are
+asserted, alongside the deterministic signal (fewer prefill chunks, hit
+rate) that makes the row meaningful even where wall clocks are noisy.
+
     PYTHONPATH=src:. python benchmarks/serving_bench.py --smoke \
         --out BENCH_serving.json
 """
@@ -247,6 +256,7 @@ def run(smoke: bool = True, seed: int = 0, trace_out: str = None,
     results["hybrid_jamba"] = run_hybrid(seed)
     results["moe_arctic"] = run_moe(seed)
     results["degraded"] = run_degraded(seed)
+    results["prefix_share"] = run_prefix_share(seed)
     return results
 
 
@@ -368,6 +378,124 @@ def run_degraded(seed: int = 0) -> dict:
         "deadline_misses": st["deadline_misses"],
         "preemptions": st["preemptions"],
         "watchdog_trips": st["watchdog_trips"],
+    }
+
+
+def gen_prefix_workload(seed: int, vocab: int, n_req: int = 8,
+                        shared_frac: float = 0.75, prefix_len: int = 96,
+                        tail: tuple = (8, 20),
+                        unique: tuple = (40, 72)) -> tuple:
+    """Seeded prefix-heavy request mix: ``shared_frac`` of the requests are
+    the same ``prefix_len``-token system prefix plus a short unique tail
+    (``tail`` token range); the rest are fully unique prompts drawn from the
+    ``unique`` length range.  Which positions carry the shared prefix is a
+    Bresenham spread (``floor((i+1)·f) > floor(i·f)``), so the mix is evenly
+    interleaved and a pure function of ``(seed, n_req, shared_frac)`` — the
+    arrival *order* is the list order, identical for every engine under
+    test.  Returns ``(prompts, shared_flags)``."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, vocab, prefix_len)
+    prompts, flags = [], []
+    for i in range(n_req):
+        hit = int((i + 1) * shared_frac) > int(i * shared_frac)
+        if hit:
+            t = rng.integers(0, vocab,
+                             int(rng.integers(tail[0], tail[1] + 1)))
+            prompts.append(np.concatenate([prefix, t]))
+        else:
+            prompts.append(rng.integers(
+                0, vocab, int(rng.integers(unique[0], unique[1] + 1))))
+        flags.append(hit)
+    return prompts, flags
+
+
+def run_prefix_share(seed: int = 0) -> dict:
+    """Prefix-caching row: the same seeded prefix-heavy workload served
+    with the hash-addressed prefix cache on and off.  The warmup pass
+    populates the cache (and compiles every shape variant); the timed pass
+    then admits every shared request at its first uncached token.  Tokens
+    must be **bit-identical** between the two passes — the cache only moves
+    the prefill start, chunk boundaries coincide by construction — and
+    both allocators must be leak-free at exit (``quiescent`` +
+    ``all_free``).  Deterministic guards (prefill chunks, hit count) back
+    the wall-clock speedup, which is asserted at the acceptance floor."""
+    cfg = ModelConfig(name="bench-prefix", family="dense", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=128)
+    params = lm.init_params(jax.random.PRNGKey(seed), cfg)
+    shared_frac, prefix_len, max_new = 0.75, 96, 6
+    prompts, flags = gen_prefix_workload(seed, cfg.vocab_size,
+                                         shared_frac=shared_frac,
+                                         prefix_len=prefix_len)
+
+    def drive(prefix_caching: bool) -> tuple:
+        eng = PagedServingEngine(
+            params, cfg,
+            lm.ServeConfig(stamp=None,
+                           kv=KV.KVCacheConfig(quantized=True, num_hi=16)),
+            PagedEngineConfig(max_slots=4, prefill_chunk=32, max_seq=128,
+                              block_size=16, prefix_caching=prefix_caching))
+        for p in prompts:          # warmup: compiles AND registers prefixes
+            eng.submit(p, max_new_tokens=max_new)
+        eng.run()
+        eng.reset_stats(clear_events=True)
+        alloc = eng.sched.alloc
+        alloc.peak_referenced = 0  # fresh peak for the timed pass
+        uids = [eng.submit(p, max_new_tokens=max_new) for p in prompts]
+        t0 = time.perf_counter()
+        done = eng.run()
+        dt = time.perf_counter() - t0
+        assert eng.sched.quiescent() and alloc.all_free(), \
+            "prefix workload leaked pages/slots"
+        by_uid = {r.uid: r.out_tokens for r in done}
+        tokens = [by_uid[u] for u in uids]     # submission order
+        return eng, tokens, dt
+
+    eng_on, tok_on, dt_on = drive(True)
+    eng_off, tok_off, dt_off = drive(False)
+    for i, (a, b) in enumerate(zip(tok_on, tok_off)):
+        np.testing.assert_array_equal(
+            a, b, err_msg=f"prefix cache changed tokens (request {i}, "
+                          f"shared={flags[i]})")
+    st_on, st_off = eng_on.stats, eng_off.stats
+    n_shared = sum(flags)
+    assert st_on["prefix_cache_hits"] >= n_shared, \
+        "warm cache must hit every shared-prefix request"
+    assert st_off["prefix_cache_hits"] == 0, \
+        "cache-off engine must never consult the prefix cache"
+    assert st_on["prefill_chunks"] < st_off["prefill_chunks"], \
+        "cached prefixes must shrink the prefill work"
+    toks = sum(len(t) for t in tok_on)
+    speedup = (toks / dt_on) / max(toks / dt_off, 1e-9)
+    assert speedup >= 1.3, \
+        f"prefix cache speedup {speedup:.2f}x below the 1.3x floor"
+    ttft_on = hist_percentiles(eng_on.metrics.histogram("ttft_s"))
+    ttft_off = hist_percentiles(eng_off.metrics.histogram("ttft_s"))
+    assert ttft_on["p50"] < ttft_off["p50"], \
+        "cached prefixes must cut time-to-first-token"
+    peak_on = eng_on.sched.alloc.peak_referenced
+    peak_off = eng_off.sched.alloc.peak_referenced
+    assert peak_on <= peak_off, \
+        "page sharing must not grow the peak pool footprint"
+    return {
+        "requests": len(prompts),
+        "shared_prefix_fraction": shared_frac,
+        "prefix_len": prefix_len,
+        "max_new": max_new,
+        "decode_tokens": toks,
+        "tokens_per_s": round(toks / dt_on, 2),
+        "tokens_per_s_cache_off": round(toks / dt_off, 2),
+        "speedup": round(speedup, 3),
+        "ttft_s": ttft_on,
+        "ttft_s_cache_off": ttft_off,
+        "prefill_chunks": st_on["prefill_chunks"],
+        "prefill_chunks_cache_off": st_off["prefill_chunks"],
+        "prefix_cache_hits": st_on["prefix_cache_hits"],
+        "prefix_cache_hit_rate": round(st_on["prefix_cache_hit_rate"], 4),
+        "prefix_tokens_reused": st_on["prefix_tokens_reused"],
+        "cow_copies": st_on["cow_copies"],
+        "peak_pages": peak_on,
+        "peak_pages_cache_off": peak_off,
     }
 
 

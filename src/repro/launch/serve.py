@@ -4,6 +4,7 @@ batched requests through a STaMP-quantized engine.
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --reduced \
         --requests 16 --prompt-len 96 --max-new 16 \
         [--engine paged|bucketed] [--no-stamp] [--execution fused] \
+        [--no-prefix-cache] \
         [--deadline-s 2.0 --ttft-deadline-s 0.5 --max-waiting 32 \
          --shed-policy reject_newest --watermark 0.9 --numerics-guard \
          --chaos SEED]
@@ -62,6 +63,12 @@ def main():
                          "old prefill-then-decode jit pair (parity/A-B)")
     ap.add_argument("--max-prefills", type=int, default=2,
                     help="prefill chunk rows per unified step")
+    ap.add_argument("--prefix-cache", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="hash-addressed prefix page reuse: requests whose "
+                         "prompt shares a cached prefix start prefill at "
+                         "the first uncached token (paged engine; tokens "
+                         "are bit-identical either way)")
     ap.add_argument("--seed", type=int, default=0)
     # -- robustness / admission control (paged engine) ------------------
     ap.add_argument("--deadline-s", type=float, default=None,
@@ -153,7 +160,8 @@ def main():
                               max_prefills=args.max_prefills,
                               max_waiting=args.max_waiting,
                               shed_policy=args.shed_policy,
-                              preempt_watermark=args.watermark),
+                              preempt_watermark=args.watermark,
+                              prefix_caching=args.prefix_cache),
             fault=fault)
     else:
         engine = BucketedEngine(sparams, cfg, serve,
@@ -194,7 +202,9 @@ def main():
               f"preemptions={st['preemptions']} "
               f"dispatches/step="
               f"{st['device_dispatches'] / max(st['steps'], 1):.2f} "
-              f"recompiles={st['recompiles']}")
+              f"recompiles={st['recompiles']} "
+              f"prefix_hit_rate={st['prefix_cache_hit_rate']:.2f} "
+              f"prefix_tokens_reused={st['prefix_tokens_reused']}")
         print(f"[serve:lifecycle] finished={st['finished']} "
               f"failed={st['failed']} cancelled={st['cancelled']} "
               f"rejected={st['rejected']} shed={st['shed']} "

@@ -1408,7 +1408,13 @@ def paged_prefill_chunk(params, pools: dict, tokens: Array, start: Array,
     pin the unified step bit-for-bit against it.
 
     ``tokens``: (1, C) right-padded chunk; ``start``: scalar int32 tokens
-    already cached; ``pages/offsets/is_hi``: (C,) host-computed write
+    already cached — *however* they got there: earlier chunks of this
+    request, a preemption swap-in, or a prefix-cache hit (the scheduler
+    admits with ``pos = matched`` and the first chunk simply starts at an
+    arbitrary ``start > 0``; the chunked attention reads the cached
+    segment through the block table and masks ``kpos >= start``, so no
+    extra plumbing exists for the prefix case);
+    ``pages/offsets/is_hi``: (C,) host-computed write
     targets (pad tokens routed to the null page); ``last_index``: scalar
     chunk-local index of the prompt's final token (its logits are the
     request's first-token distribution — only meaningful on the last

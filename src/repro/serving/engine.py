@@ -118,6 +118,13 @@ class PagedEngineConfig:
     demote_on_nan: bool = True
     # forwarded to SchedulerConfig.preempt_watermark (< 1.0 enables)
     preempt_watermark: float = 1.0
+    # hash-addressed prefix reuse across requests (ref-counted page
+    # sharing + copy-on-write; see BlockAllocator).  Cache-on output is
+    # bit-identical to cache-off — matches restart prefill on the same
+    # chunk boundaries the cache-off engine would use — so it defaults
+    # on.  Auto-disabled on stacks with Mamba layers (recurrent state
+    # cannot skip past cached tokens) and pure-SSM stacks (no pages).
+    prefix_caching: bool = True
     # quant-telemetry clip rate above which a quant_clip_alert event is
     # emitted for the offending STaMP site (ServeConfig.quant_telemetry)
     clip_alert_threshold: float = 0.05
@@ -146,7 +153,9 @@ class _EngineBase:
                  "device_dispatches", "recompiles", "swap_bytes",
                  "finished", "failed", "cancelled", "rejected", "shed",
                  "deadline_misses", "nan_quarantines", "demotions",
-                 "watchdog_trips", "stalled_steps", "swap_corruptions")
+                 "watchdog_trips", "stalled_steps", "swap_corruptions",
+                 "prefix_cache_queries", "prefix_cache_hits",
+                 "prefix_tokens_reused", "cow_copies")
 
     def __init__(self, params, cfg: ModelConfig, serve: lm.ServeConfig,
                  clock: Optional[Callable[[], float]] = None,
@@ -245,8 +254,16 @@ class _EngineBase:
         for BOTH engines."""
         self.metrics.reset(exclude=keep)
         self._refresh_eligibility()   # reset() zeroes gauges; re-publish
+        self._refresh_derived_gauges()
         if clear_events:
             self.events.clear()
+
+    def _refresh_derived_gauges(self) -> None:
+        """Hook for gauges derived from live engine state (same recompute
+        rule as ``reference_fallback_sites``): re-published after any
+        ``metrics.reset`` so a warmup/measure boundary never zeroes what
+        the state still says.  The paged engine recomputes its
+        prefix-cache gauges here; the base has none."""
 
     def _observe_latency(self, name: str, seconds: float) -> None:
         self.metrics.histogram(name, help=f"request {name}").observe(
@@ -556,6 +573,12 @@ class PagedServingEngine(_EngineBase):
         if e.step_mode not in ("unified", "two_call"):
             raise ValueError(f"unknown step_mode {e.step_mode!r}")
         unified = e.step_mode == "unified"
+        # prefix reuse skips prefill compute for cached tokens, which a
+        # Mamba layer cannot (its recurrent state lives outside the page
+        # pools and must advance through every token); pure-SSM stacks
+        # have no pages to share at all
+        self._prefix_on = bool(e.prefix_caching and self._has_attn
+                               and not self._has_mamba)
         self.sched = Scheduler(
             SchedulerConfig(
                 max_slots=e.max_slots, prefill_chunk=e.prefill_chunk,
@@ -565,8 +588,10 @@ class PagedServingEngine(_EngineBase):
                 state_bytes_per_slot=PKV.ssm_state_bytes_per_slot(
                     self.pools),
                 needs_kv_pages=self._has_attn,
-                preempt_watermark=e.preempt_watermark),
-            self.pcfg, swap_out=self._swap_out, swap_in=self._swap_in)
+                preempt_watermark=e.preempt_watermark,
+                prefix_caching=self._prefix_on),
+            self.pcfg, swap_out=self._swap_out, swap_in=self._swap_in,
+            cow=self._cow_copy, on_prefix=self._on_prefix_lookup)
         if fault is not None:
             # the allocator consults the plan on every probe: injected
             # exhaustion flows through the REAL preemption/degradation
@@ -589,6 +614,66 @@ class PagedServingEngine(_EngineBase):
         self._npf_buckets = sorted(buckets)
         self._compiled_keys: set = set()
         self._build_step_fns()
+        self._refresh_prefix_gauges()
+
+    # -- prefix caching -------------------------------------------------
+    def _on_prefix_lookup(self, sreq: SchedRequest, match) -> None:
+        """Scheduler callback on every fresh-admission cache lookup."""
+        self._inc("prefix_cache_queries")
+        if match is None:
+            return
+        self._inc("prefix_cache_hits")
+        self._inc("prefix_tokens_reused", match.matched)
+        self._event("prefix_hit", uid=sreq.uid, matched=match.matched,
+                    pages=len(match.hi_pages) + len(match.lo_pages))
+
+    def _cow_copy(self, sreq: SchedRequest, pool: str, src: int,
+                  dst: int) -> None:
+        """Scheduler callback: device-copy one page before the request's
+        first divergent write lands in it (partial-page prefix match)."""
+        self.pools = PKV.copy_page(self.pools, pool, src, dst)
+        self._inc("cow_copies")
+        self._event("cow", uid=sreq.uid, pool=pool, src=src, dst=dst)
+
+    def _refresh_prefix_gauges(self) -> None:
+        """Publish the prefix-cache gauges from LIVE allocator state (and
+        the hit-rate from the counters).  Like ``reference_fallback_sites``
+        these are recomputed — never carried — so ``reset_stats`` and a
+        fused → reference demotion cannot zero what the allocator still
+        holds."""
+        cs = self.sched.alloc.cache_stats()
+        q = self.metrics.counter("prefix_cache_queries").value
+        h = self.metrics.counter("prefix_cache_hits").value
+        self.metrics.gauge(
+            "prefix_cache_hit_rate",
+            help="prefix cache: hits / lookups").set(h / q if q else 0.0)
+        self.metrics.gauge(
+            "kv_pages_shared",
+            help="pages currently referenced by 2+ requests").set(
+            cs["kv_pages_shared"])
+        self.metrics.gauge(
+            "sink_pages_pinned",
+            help="hi-precision (int8 sink) pages cached AND referenced — "
+                 "the mixed-precision cost a shared prefix pins for every "
+                 "child").set(cs["sink_pages_pinned"])
+        self.metrics.gauge(
+            "prefix_cached_pages",
+            help="pages registered in the prefix cache").set(
+            cs["cached_pages"])
+
+    def _refresh_derived_gauges(self) -> None:
+        self._refresh_prefix_gauges()
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        out = _EngineBase.stats.fget(self)
+        g = self.metrics.gauge
+        out["prefix_cache_hit_rate"] = float(
+            g("prefix_cache_hit_rate").value)
+        out["kv_pages_shared"] = int(g("kv_pages_shared").value)
+        out["sink_pages_pinned"] = int(g("sink_pages_pinned").value)
+        out["prefix_cached_pages"] = int(g("prefix_cached_pages").value)
+        return out
 
     def _build_step_fns(self) -> None:
         """(Re)build the jit'd step entry points from the CURRENT
@@ -655,9 +740,24 @@ class PagedServingEngine(_EngineBase):
         nh, nl = PKV.pages_needed(plen + gen - 1, self.pcfg)
         cap_hi, cap_lo = self.sched.alloc.capacity()
         if nh > cap_hi or nl > cap_lo:
-            return (f"capacity-infeasible: needs {nh} hi + {nl} lo pages at "
-                    f"peak but the pools hold only {cap_hi} hi + {cap_lo} "
-                    f"lo — the request could never run even alone")
+            # Credit the cached prefix before rejecting: the worst case
+            # assumes the full max_new_tokens budget is spent, but warm
+            # shared-prefix traffic routinely stops at EOS long before
+            # that depth — rejecting it on the cold worst case alone
+            # throws away exactly the requests the cache makes cheap.
+            # Only FULLY shared pages count (a mid-page CoW divergence
+            # nets zero: the copy costs the page the share saved).  A
+            # credited request that does run to worst-case depth degrades
+            # through the normal exhaustion path (preempt-self, watchdog)
+            # instead of being refused up front.
+            matched = self.sched.probe_prefix(req.prompt)
+            bs = self.pcfg.block_size
+            ch, cl = PKV.pages_needed(matched // bs * bs, self.pcfg)
+            if nh - ch > cap_hi or nl - cl > cap_lo:
+                return (f"capacity-infeasible: needs {nh} hi + {nl} lo "
+                        f"pages at peak but the pools hold only {cap_hi} "
+                        f"hi + {cap_lo} lo — the request could never run "
+                        f"even alone")
         return None
 
     def _enqueue(self, req: Request) -> None:
@@ -885,6 +985,7 @@ class PagedServingEngine(_EngineBase):
             fused_decode_matmul=False)
         self._build_step_fns()
         self._refresh_eligibility()
+        self._refresh_prefix_gauges()
         self._inc("demotions")
         self._event("demote", to="reference")
 
@@ -926,6 +1027,9 @@ class PagedServingEngine(_EngineBase):
                 self.fault.begin_step(self._step_i)
                 if self.fault.exhausted():
                     self._event("fault_exhaust")
+                if self.fault.flush_prefix():
+                    dropped = self.sched.alloc.flush_cache()
+                    self._event("fault_prefix_flush", dropped=dropped)
             self._check_deadlines()
             plan = self.sched.plan_step()
             for sreq in plan.admitted:
@@ -962,6 +1066,7 @@ class PagedServingEngine(_EngineBase):
         for name, v in self.sched.load().items():
             self.metrics.gauge(f"sched_{name}",
                                help=f"scheduler {name}").set(v)
+        self._refresh_prefix_gauges()
 
     def _run_unified(self, plan, done: List[Request]) -> None:
         """Build the flattened ragged batch the scheduler planned and run
@@ -1053,6 +1158,9 @@ class PagedServingEngine(_EngineBase):
                 sreq = w.sreq
                 try:
                     sreq.pos = w.end
+                    # completed prompt pages become addressable for later
+                    # arrivals (before _maybe_finish can release them)
+                    self.sched.register_prefix(sreq)
                     self._inc("prefill_chunks")
                     self._event("prefill_chunk", uid=sreq.uid,
                                 start=w.start, end=w.end)
@@ -1122,6 +1230,7 @@ class PagedServingEngine(_EngineBase):
             self._absorb_telemetry(telem)
         with self._timer.phase("post"):
             sreq.pos = end
+            self.sched.register_prefix(sreq)
             self._inc("prefill_chunks")
             self._event("prefill_chunk", uid=sreq.uid, start=start, end=end)
             if end == sreq.prompt_len:

@@ -15,7 +15,12 @@ block allocator, and the swap layer consult at well-defined points:
 * **device-step NaN/Inf** — a chosen request's logits row is overwritten
   with NaN after the device step, exercising the ``ServeConfig.
   numerics_guard`` quarantine (and, on fused engines, the
-  fused→reference demotion).
+  fused→reference demotion);
+* **prefix-cache flush** — the allocator's prefix cache is dropped whole
+  (``BlockAllocator.flush_cache``) on the steps the plan names, an
+  eviction storm proving that requests already sharing cached pages keep
+  their references, finish bit-identically, and leak nothing once the
+  registrations under them disappear.
 
 Every decision is a pure function of ``(seed, fault kind, event
 ordinal)`` — never of wall-clock time or host state — so a chaos run is
@@ -30,9 +35,9 @@ from typing import FrozenSet, Optional, Tuple
 
 import numpy as np
 
-# kind codes folded into the per-decision PRNG seed so the three fault
+# kind codes folded into the per-decision PRNG seed so the fault
 # streams are independent even at equal ordinals
-_KIND_EXHAUST, _KIND_CORRUPT, _KIND_NAN = 1, 2, 3
+_KIND_EXHAUST, _KIND_CORRUPT, _KIND_NAN, _KIND_FLUSH = 1, 2, 3, 4
 
 
 def _draw(seed: int, kind: int, *key: int) -> float:
@@ -57,10 +62,12 @@ class FaultPlan:
     exhaust_steps: FrozenSet[int] = frozenset()    # engine step numbers
     corrupt_swap_ins: FrozenSet[int] = frozenset()  # swap-in ordinals, 0-based
     nan_faults: FrozenSet[Tuple[int, int]] = frozenset()  # (uid, gen_index)
+    flush_prefix_steps: FrozenSet[int] = frozenset()  # engine step numbers
     # -- seeded rates -------------------------------------------------------
     exhaust_rate: float = 0.0
     corrupt_rate: float = 0.0
     nan_rate: float = 0.0
+    flush_rate: float = 0.0
     window: Optional[Tuple[int, int]] = None       # steps [start, end)
 
     def __post_init__(self):
@@ -69,10 +76,14 @@ class FaultPlan:
                                           for n in self.corrupt_swap_ins)
         self.nan_faults = frozenset((int(u), int(g))
                                     for u, g in self.nan_faults)
+        self.flush_prefix_steps = frozenset(int(s)
+                                            for s in self.flush_prefix_steps)
         self._step = 0
         self._swap_ins = 0
         self._counted_steps: set = set()
-        self.injected = {"exhaustion": 0, "swap_corruption": 0, "nan": 0}
+        self._flushed_steps: set = set()
+        self.injected = {"exhaustion": 0, "swap_corruption": 0, "nan": 0,
+                         "prefix_flush": 0}
 
     # ------------------------------------------------------------------
     def begin_step(self, step: int) -> None:
@@ -94,6 +105,18 @@ class FaultPlan:
         if hit and self._step not in self._counted_steps:
             self._counted_steps.add(self._step)
             self.injected["exhaustion"] += 1
+        return hit
+
+    def flush_prefix(self) -> bool:
+        """True when the prefix cache must be dropped this step.  Stable
+        per step (and counted once), like `exhausted` — the engine calls it
+        in its plan phase and runs ``alloc.flush_cache()`` on a hit."""
+        hit = self._step in self.flush_prefix_steps or (
+            self._in_window() and self.flush_rate > 0.0 and
+            _draw(self.seed, _KIND_FLUSH, self._step) < self.flush_rate)
+        if hit and self._step not in self._flushed_steps:
+            self._flushed_steps.add(self._step)
+            self.injected["prefix_flush"] += 1
         return hit
 
     def corrupt_swap(self, uid: int) -> bool:

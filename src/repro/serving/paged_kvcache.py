@@ -54,10 +54,12 @@ bit-identical end to end: pages AND recurrence state restored exactly.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import hashlib
 import heapq
 import zlib
-from typing import Callable, Optional
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -198,16 +200,70 @@ class SwapCorruption(Exception):
     serving."""
 
 
+#: root of the prefix-hash chain (the digest "before" page 0)
+_PREFIX_ROOT = b""
+
+
+def _prefix_digest(parent: bytes, tokens: np.ndarray) -> bytes:
+    """Chain hash for one token-chunk-aligned page of prompt tokens:
+    ``H(parent_digest || page_tokens)``.  The digest addresses the page's
+    *entire prefix content*, not just its own tokens, so two pages holding
+    equal tokens after different prefixes never collide — and an
+    incremental walk over a prompt costs O(block_size) per page."""
+    h = hashlib.sha256(parent)
+    h.update(np.ascontiguousarray(tokens, np.int32).tobytes())
+    return h.digest()
+
+
+@dataclasses.dataclass
+class PrefixMatch:
+    """One prefix-cache hit: ``matched`` logical tokens [0, matched) are
+    covered by the cached ``hi_pages`` / ``lo_pages`` (refs already
+    acquired).  ``cow`` names the one *partially* covered page — ``(pool,
+    index into that pool's list)`` — when ``matched`` is not a page
+    multiple: the caller must copy that page before any write scatters
+    into it (copy-on-write on the first divergent write)."""
+
+    matched: int
+    hi_pages: List[int]
+    lo_pages: List[int]
+    cow: Optional[tuple] = None      # ("hi"|"lo", list index) or None
+
+
+@dataclasses.dataclass
+class _CacheEntry:
+    pool: str                        # "hi" | "lo"
+    page: int
+    tokens: np.ndarray               # the block_size prompt tokens it holds
+    parent: bytes                    # parent digest in the chain
+
+
 class BlockAllocator:
-    """Free-list allocator over the hi and lo pools (host, deterministic).
+    """Ref-counted, hash-addressed page store over the hi and lo pools
+    (host, deterministic).
 
     Page ids are handed out lowest-first (min-heap pop) so identical request
     streams produce identical placements (the engine-parity tests rely on
     this).  Page 0 of either pool is never allocated — it is the null page.
-    Freeing page 0, an out-of-range id, or an already-free page raises
+    Releasing page 0, an out-of-range id, or a page nobody holds raises
     ``ValueError`` (a real exception, not an ``assert`` stripped under
-    ``python -O``); membership is tracked in a set mirror so the check is
-    O(1) per page.
+    ``python -O``); membership is tracked in set/dict mirrors so the check
+    is O(1) per page.
+
+    **Ref-counting + prefix cache** (vLLM-style prefix reuse): every
+    allocated page carries a reference count (``alloc_* = 1``; ``acquire``
+    adds a holder, ``release`` drops one).  Pages *registered* in the
+    prefix cache (`register_prefix`) are addressed by the chain hash of
+    the prompt tokens they hold; a later request with the same prompt
+    prefix shares them (`lookup_prefix`) instead of re-allocating and
+    re-prefilling.  A cached page whose ref count reaches zero is not
+    freed — it parks in a per-pool LRU of **evictable** pages, still
+    holding its quantized content for future hits, and is reclaimed
+    lazily: ``alloc_*`` evicts the least-recently-used zero-ref cached
+    page only once the true free list is empty.  ``can_allocate`` /
+    ``all_free`` therefore count evictable pages as free-equivalent
+    capacity (`flush_cache` evicts everything for tests that want exact
+    free-list equality).
 
     ``fault`` is the deterministic fault-injection hook
     (`serving/faults.py`): a zero-arg callable that returns True while
@@ -229,9 +285,34 @@ class BlockAllocator:
         self._free_lo_set = set(self._free_lo)
         self._num_blocks = {"hi": cfg.num_hi_blocks if cfg.quant.quantized
                             else 0, "lo": cfg.num_lo_blocks}
+        # page id -> holders; an entry exists while the page is allocated
+        # OR parked evictable (ref 0, cached)
+        self._ref = {"hi": {}, "lo": {}}
+        # prefix cache: chain digest -> entry, plus the reverse and
+        # parent->children maps the lookup/eviction paths need
+        self._cache: dict = {}                       # digest -> _CacheEntry
+        self._by_page: dict = {}                     # (pool, page) -> digest
+        self._children: dict = {}                    # digest -> set(digest)
+        # zero-ref cached pages in LRU order (oldest first) per pool
+        self._evict = {"hi": collections.OrderedDict(),
+                       "lo": collections.OrderedDict()}
+        self.cache_evictions = 0
+        # peak pages simultaneously *referenced* (ref >= 1) — the bench's
+        # pages-held-per-workload signal (evictable cache copies excluded:
+        # they are reclaimable capacity, not demand)
+        self.peak_referenced = 0
 
     def free_counts(self) -> tuple[int, int]:
         return len(self._free_hi), len(self._free_lo)
+
+    def evictable_counts(self) -> tuple[int, int]:
+        """(hi, lo) zero-ref cached pages — reclaimable on demand."""
+        return len(self._evict["hi"]), len(self._evict["lo"])
+
+    def available_counts(self) -> tuple[int, int]:
+        """(hi, lo) pages an allocation could obtain: free + evictable."""
+        return (len(self._free_hi) + len(self._evict["hi"]),
+                len(self._free_lo) + len(self._evict["lo"]))
 
     def capacity(self) -> tuple[int, int]:
         """(hi, lo) *allocatable* pages — pool sizes minus the null page.
@@ -243,10 +324,13 @@ class BlockAllocator:
                 max(self._num_blocks["lo"] - 1, 0))
 
     def all_free(self) -> bool:
-        """True when every allocatable page is back on the free list — the
-        leak invariant the chaos/soak tests assert once all requests reach
-        a terminal state."""
-        return self.free_counts() == self.capacity()
+        """True when every allocatable page is reclaimable — on the free
+        list or parked as a zero-ref cached page (the prefix cache
+        legitimately outlives the requests that populated it).  The leak
+        invariant the chaos/soak tests assert once all requests reach a
+        terminal state; `flush_cache` collapses it to exact free-list
+        equality."""
+        return self.available_counts() == self.capacity()
 
     def _fault_active(self) -> bool:
         return self.fault is not None and self.fault()
@@ -254,26 +338,86 @@ class BlockAllocator:
     def can_allocate(self, n_hi: int, n_lo: int) -> bool:
         if (n_hi > 0 or n_lo > 0) and self._fault_active():
             return False
-        return n_hi <= len(self._free_hi) and n_lo <= len(self._free_lo)
+        avail_hi, avail_lo = self.available_counts()
+        return n_hi <= avail_hi and n_lo <= avail_lo
+
+    def _note_usage(self) -> None:
+        cap_hi, cap_lo = self.capacity()
+        avail_hi, avail_lo = self.available_counts()
+        used = (cap_hi - avail_hi) + (cap_lo - avail_lo)
+        if used > self.peak_referenced:
+            self.peak_referenced = used
+
+    def _heap(self, pool: str) -> tuple[list, set]:
+        return ((self._free_hi, self._free_hi_set) if pool == "hi"
+                else (self._free_lo, self._free_lo_set))
+
+    def _evict_lru(self, pool: str) -> None:
+        """Reclaim the least-recently-used zero-ref cached page: drop its
+        cache registration and return it to the free list."""
+        page, _ = self._evict[pool].popitem(last=False)
+        self._drop_cache_entry(pool, page)
+        del self._ref[pool][page]
+        heap, members = self._heap(pool)
+        heapq.heappush(heap, page)
+        members.add(page)
+        self.cache_evictions += 1
+
+    def _drop_cache_entry(self, pool: str, page: int) -> None:
+        digest = self._by_page.pop((pool, page))
+        entry = self._cache.pop(digest)
+        kids = self._children.get(entry.parent)
+        if kids is not None:
+            kids.discard(digest)
+            if not kids:
+                del self._children[entry.parent]
+
+    def _alloc(self, pool: str) -> int:
+        heap, members = self._heap(pool)
+        if self._fault_active():
+            raise OutOfBlocks(f"{pool} pool exhausted")
+        if not heap and self._evict[pool]:
+            self._evict_lru(pool)
+        if not heap:
+            raise OutOfBlocks(f"{pool} pool exhausted")
+        i = heapq.heappop(heap)
+        members.remove(i)
+        self._ref[pool][i] = 1
+        self._note_usage()
+        return i
 
     def alloc_hi(self) -> int:
-        if not self._free_hi or self._fault_active():
-            raise OutOfBlocks("hi pool exhausted")
-        i = heapq.heappop(self._free_hi)
-        self._free_hi_set.remove(i)
-        return i
+        return self._alloc("hi")
 
     def alloc_lo(self) -> int:
-        if not self._free_lo or self._fault_active():
-            raise OutOfBlocks("lo pool exhausted")
-        i = heapq.heappop(self._free_lo)
-        self._free_lo_set.remove(i)
-        return i
+        return self._alloc("lo")
 
-    def free(self, hi_ids, lo_ids) -> None:
-        for pool, ids, heap, members in (
-                ("hi", hi_ids, self._free_hi, self._free_hi_set),
-                ("lo", lo_ids, self._free_lo, self._free_lo_set)):
+    def ref_count(self, pool: str, page: int) -> int:
+        return self._ref[pool].get(int(page), 0)
+
+    def acquire(self, hi_ids, lo_ids) -> None:
+        """Add one holder to each page (a prefix-cache hit sharing them).
+        A zero-ref evictable page leaves the LRU — it is referenced
+        again."""
+        for pool, ids in (("hi", hi_ids), ("lo", lo_ids)):
+            for i in ids:
+                i = int(i)
+                refs = self._ref[pool]
+                if refs.get(i) is None:
+                    raise ValueError(
+                        f"cannot acquire {pool} page {i}: not allocated")
+                if refs[i] == 0:
+                    self._evict[pool].pop(i, None)
+                refs[i] += 1
+        self._note_usage()
+
+    def release(self, hi_ids, lo_ids) -> None:
+        """Drop one holder from each page.  A page reaching zero holders
+        returns to the free list — unless it is registered in the prefix
+        cache, in which case it parks in the evictable LRU with its
+        content intact (newest-released = most recently used)."""
+        for pool, ids in (("hi", hi_ids), ("lo", lo_ids)):
+            heap, members = self._heap(pool)
             for i in ids:
                 i = int(i)
                 if not 0 < i < self._num_blocks[pool]:
@@ -281,10 +425,172 @@ class BlockAllocator:
                         f"cannot free {pool} page {i}: outside the "
                         f"allocatable range [1, {self._num_blocks[pool]}) "
                         f"(page 0 is the null page)")
-                if i in members:
+                refs = self._ref[pool]
+                if i in members or refs.get(i, 0) <= 0:
                     raise ValueError(f"double free of {pool} page {i}")
-                heapq.heappush(heap, i)
-                members.add(i)
+                refs[i] -= 1
+                if refs[i] > 0:
+                    continue
+                if (pool, i) in self._by_page:
+                    # cached: keep content, park LRU-evictable
+                    self._evict[pool][i] = None
+                    self._evict[pool].move_to_end(i)
+                else:
+                    del refs[i]
+                    heapq.heappush(heap, i)
+                    members.add(i)
+
+    # back-compat name: scheduler/tests predate ref-counting — with every
+    # page at ref 1 (no sharing) this is exactly the old free()
+    def free(self, hi_ids, lo_ids) -> None:
+        self.release(hi_ids, lo_ids)
+
+    # -- prefix cache ---------------------------------------------------
+    def _hi_per_seq(self) -> int:
+        return self.cfg.hi_blocks_per_seq
+
+    def _page_for_index(self, g: int, hi_pages, lo_pages) -> tuple[str, int]:
+        hps = self._hi_per_seq()
+        if g < hps:
+            return "hi", int(hi_pages[g])
+        return "lo", int(lo_pages[g - hps])
+
+    def register_prefix(self, prompt: np.ndarray, upto: int,
+                        hi_pages, lo_pages) -> int:
+        """Register every *fully materialized* prompt page in [0, upto) —
+        upto is the request's materialized position, so only pages whose
+        block_size tokens are all written (and all prompt tokens, never
+        generated ones) become addressable.  A digest collision keeps the
+        existing entry: the newcomer's page simply stays private.  Returns
+        the number of new registrations."""
+        bs = self.cfg.block_size
+        n_full = min(int(upto), int(len(prompt))) // bs
+        parent, new = _PREFIX_ROOT, 0
+        for g in range(n_full):
+            toks = np.asarray(prompt[g * bs:(g + 1) * bs], np.int32)
+            digest = _prefix_digest(parent, toks)
+            if digest not in self._cache:
+                pool, page = self._page_for_index(g, hi_pages, lo_pages)
+                if (pool, page) not in self._by_page:
+                    self._cache[digest] = _CacheEntry(pool, page,
+                                                      toks.copy(), parent)
+                    self._by_page[(pool, page)] = digest
+                    self._children.setdefault(parent, set()).add(digest)
+                    new += 1
+            parent = digest
+        return new
+
+    def _walk_prefix(self, prompt: np.ndarray,
+                     limit: int) -> tuple[int, list]:
+        """Longest cached coverage of ``prompt[:limit]``: full pages along
+        the digest chain, then at most one partially-matching child page
+        (the divergence point CoW exists for).  Returns ``(raw_tokens,
+        [(pool, page), ...])`` covering them — no refs taken."""
+        bs = self.cfg.block_size
+        limit = min(int(limit), int(len(prompt)))
+        parent, pages = _PREFIX_ROOT, []
+        full = 0
+        while (full + 1) * bs <= limit:
+            toks = np.asarray(prompt[full * bs:(full + 1) * bs], np.int32)
+            digest = _prefix_digest(parent, toks)
+            entry = self._cache.get(digest)
+            if entry is None:
+                break
+            pages.append((entry.pool, entry.page))
+            parent = digest
+            full += 1
+        matched = full * bs
+        # partial tail: a cached child page whose stored tokens share a
+        # proper prefix with the remaining prompt (divergence mid-page)
+        rest = np.asarray(prompt[matched:limit], np.int32)
+        best_extra, best = 0, None
+        for digest in sorted(self._children.get(parent, ()),
+                             key=lambda d: (self._cache[d].pool,
+                                            self._cache[d].page)):
+            entry = self._cache[digest]
+            n = min(len(rest), len(entry.tokens))
+            eq = entry.tokens[:n] == rest[:n]
+            extra = int(n if eq.all() else np.argmin(eq))
+            if extra > best_extra:
+                best_extra, best = extra, (entry.pool, entry.page)
+        if best is not None:
+            pages.append(best)
+            matched += best_extra
+        return matched, pages
+
+    def peek_prefix(self, prompt: np.ndarray, limit: int,
+                    quantum: int) -> int:
+        """Side-effect-free probe: the aligned token count `lookup_prefix`
+        would return right now (the submit-time capacity check's prefix
+        credit)."""
+        raw, _ = self._walk_prefix(prompt, limit)
+        return min(raw, int(limit)) // quantum * quantum
+
+    def lookup_prefix(self, prompt: np.ndarray, limit: int,
+                      quantum: int) -> Optional[PrefixMatch]:
+        """Longest cached prefix of ``prompt``, aligned DOWN to a multiple
+        of ``quantum`` (the engine's aligned-chunk length, so a cache-hit
+        prefill restarts exactly on a cache-off chunk boundary — the
+        bit-identical-token guarantee) and capped at ``limit``.  Acquires
+        one reference on every returned page.  When the aligned match ends
+        mid-page, the final page is returned for *reading* only and
+        flagged in ``cow``: the caller must replace it with a copy before
+        writing (see `copy_page`) — if the CoW copy could not be allocated
+        the match is shortened until it ends on a page boundary."""
+        bs = self.cfg.block_size
+        raw, pages = self._walk_prefix(prompt, limit)
+        matched = min(raw, int(limit)) // quantum * quantum
+        while matched > 0 and matched % bs and not (
+                self.can_allocate(1, 0)
+                if pages[(matched - 1) // bs][0] == "hi"
+                else self.can_allocate(0, 1)):
+            # no page for the copy-on-write copy: retreat to the previous
+            # quantum until the match ends on a page boundary (or dies)
+            matched = (matched - 1) // quantum * quantum
+        if matched <= 0:
+            return None
+        n_pages = -(-matched // bs)
+        hi_pages = [p for pool, p in pages[:n_pages] if pool == "hi"]
+        lo_pages = [p for pool, p in pages[:n_pages] if pool == "lo"]
+        cow = None
+        if matched % bs:
+            pool, _ = pages[n_pages - 1]
+            cow = (pool, (len(hi_pages) if pool == "hi" else len(lo_pages))
+                   - 1)
+        self.acquire(hi_pages, lo_pages)
+        return PrefixMatch(matched=matched, hi_pages=hi_pages,
+                           lo_pages=lo_pages, cow=cow)
+
+    def flush_cache(self) -> int:
+        """Drop every prefix-cache registration: zero-ref (evictable) pages
+        return to the free list; pages still referenced by live requests
+        merely lose their registration (they free normally on release).
+        Returns the number of registrations dropped — the fault-injection
+        hook for cache-eviction storms, and the test hook for exact
+        free-list equality."""
+        dropped = len(self._cache)
+        for pool in ("hi", "lo"):
+            while self._evict[pool]:
+                self._evict_lru(pool)
+        # remaining registrations belong to ref>0 pages: unregister only
+        for (pool, page) in list(self._by_page):
+            self._drop_cache_entry(pool, page)
+        return dropped
+
+    def cache_stats(self) -> dict:
+        """Live prefix-cache occupancy for the engine's gauges."""
+        shared = sum(1 for refs in self._ref.values()
+                     for r in refs.values() if r >= 2)
+        pinned_sink = sum(1 for (pool, page) in self._by_page
+                          if pool == "hi"
+                          and self._ref["hi"].get(page, 0) >= 1)
+        ev_hi, ev_lo = self.evictable_counts()
+        return {"cached_pages": len(self._by_page),
+                "evictable_pages": ev_hi + ev_lo,
+                "kv_pages_shared": shared,
+                "sink_pages_pinned": pinned_sink,
+                "cache_evictions": self.cache_evictions,
+                "peak_referenced_pages": self.peak_referenced}
 
 
 # ---------------------------------------------------------------------------
@@ -549,6 +855,33 @@ def insert_pages(pools: dict, swapped: dict, hi_ids: list[int],
                 saved = jnp.asarray(swapped[layer_key][name])
                 layer[name] = arr.at[:, ids].set(saved) if periods \
                     else arr.at[ids].set(saved)
+        out[layer_key] = layer
+    return out
+
+
+def copy_page(pools: dict, pool: str, src: int, dst: int) -> dict:
+    """Copy-on-write device copy: duplicate one physical page (codes +
+    scale/zp) from ``src`` to ``dst`` within the named pool, across every
+    attention layer.  Used when a prefix-cache match ends mid-page: the
+    child reads positions below the divergence point from the copy and
+    its first `write_ragged` scatters the divergent tokens into the copy,
+    leaving the shared original untouched.  Bytes beyond the divergence
+    offset carry the parent's stale values — masked by slot length exactly
+    like the null page's residue, never read.  SSM slot entries (hybrid
+    stacks) are skipped: recurrent state is per-request, never shared."""
+    out = {}
+    for layer_key, entry in pools.items():
+        if is_ssm_entry(entry):
+            out[layer_key] = entry
+            continue
+        periods = _has_periods_axis(entry)
+        layer = dict(entry)
+        for name, arr in entry.items():
+            in_lo = name in ("k", "v") or "_lo" in name
+            if in_lo != (pool == "lo"):
+                continue
+            layer[name] = arr.at[:, dst].set(arr[:, src]) if periods \
+                else arr.at[dst].set(arr[src])
         out[layer_key] = layer
     return out
 

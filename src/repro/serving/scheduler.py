@@ -7,7 +7,11 @@ produces a :class:`StepPlan`:
 
 * **admissions** — FCFS by arrival.  A request is admitted when a slot is
   free and (for a preempted request resuming) every page it held can be
-  re-allocated; the engine then swaps its saved pages back in.
+  re-allocated; the engine then swaps its saved pages back in.  With
+  ``prefix_caching`` on, a fresh admission first adopts the longest cached
+  prefix of its prompt (ref-counted page sharing + copy-on-write at a
+  mid-page divergence) and chunked prefill starts at the first uncached
+  token — see `_attach_prefix` / `BlockAllocator.lookup_prefix`.
 * **prefill chunks** — up to ``max_prefills`` requests that still have
   prompt tokens uncached each get their next ``prefill_chunk`` tokens, in
   strict ``(arrival, uid)`` order (the one-prefill-per-step FCFS limit of
@@ -97,6 +101,7 @@ class SchedRequest:
     swapped: Optional[dict] = None   # host-side pages while preempted
     admit_seq: int = -1              # preemption priority (latest = victim)
     preemptions: int = 0
+    prefix_matched: int = 0          # tokens served from the prefix cache
     error: Optional[str] = None      # set when state is FAILED / REJECTED
 
     @property
@@ -175,17 +180,32 @@ class SchedulerConfig:
     # scramble.  1.0 disables the watermark (preempt only on true
     # exhaustion, the pre-robustness behavior).
     preempt_watermark: float = 1.0
+    # Prefix caching: on fresh admission, look up the longest cached prefix
+    # of the prompt (BlockAllocator's hash-addressed page store) and start
+    # chunked prefill at the first uncached token, sharing the covered
+    # pages by ref count.  Off by default so direct-Scheduler callers are
+    # unaffected; `PagedServingEngine` turns it on (and registers completed
+    # prompt pages after every chunk).
+    prefix_caching: bool = False
 
 
 class Scheduler:
     def __init__(self, cfg: SchedulerConfig, cache_cfg: PagedCacheConfig,
                  swap_out: Callable[[SchedRequest], None],
-                 swap_in: Callable[[SchedRequest], None]):
+                 swap_in: Callable[[SchedRequest], None],
+                 cow: Optional[Callable[[SchedRequest, str, int, int],
+                                        None]] = None,
+                 on_prefix: Optional[Callable] = None):
         self.cfg = cfg
         self.cache_cfg = cache_cfg
         self.alloc = BlockAllocator(cache_cfg)
         self._swap_out = swap_out
         self._swap_in = swap_in
+        # copy-on-write device copy: cow(sreq, pool, src_page, dst_page)
+        # duplicates one physical page before the request's first divergent
+        # write; on_prefix(sreq, match_or_None) observes every lookup
+        self._cow = cow
+        self._on_prefix = on_prefix
         self.waiting: List[SchedRequest] = []    # sorted by (arrival, uid)
         self.active: List[SchedRequest] = []     # PREFILLING | RUNNING
         # min-heap: O(log n) admission instead of pop(0) + sort(), and the
@@ -301,8 +321,82 @@ class Scheduler:
                 self.waiting.pop(0)
                 self._place(sreq)
                 sreq.state = PREFILLING
+                self._attach_prefix(sreq)
             admitted.append(sreq)
         return admitted, resumed
+
+    # -- prefix caching -------------------------------------------------
+    def prefix_quantum(self) -> int:
+        """Prefix-match granularity: the *aligned* chunk length.  Every
+        cache-off non-final chunk spans exactly this many tokens
+        (`_align_chunk_end`), so a match that is a multiple of it restarts
+        prefill on a boundary the cache-off engine would also have used —
+        identical chunk splits mean identical online-softmax merge order,
+        which is what makes cache-on tokens bit-identical."""
+        c, w = self.cfg.prefill_chunk, self.cfg.transform_window
+        return (c // w) * w if 1 < w <= c else c
+
+    def _prefix_on(self) -> bool:
+        return self.cfg.prefix_caching and self.cfg.needs_kv_pages
+
+    def probe_prefix(self, prompt: np.ndarray) -> int:
+        """Side-effect-free: tokens a fresh admission of ``prompt`` would
+        serve from the cache right now — the submit-time capacity check's
+        prefix credit."""
+        if not self._prefix_on():
+            return 0
+        prompt = np.asarray(prompt)
+        limit = max(int(prompt.shape[0]) - 1, 0)
+        return self.alloc.peek_prefix(prompt, limit, self.prefix_quantum())
+
+    def _attach_prefix(self, sreq: SchedRequest) -> None:
+        """Fresh admission: adopt the longest cached prefix of the prompt.
+        The match is capped at ``prompt_len - 1`` so at least one prompt
+        token always runs through prefill (the final chunk computes the
+        first sampled logit).  A match ending mid-page triggers
+        copy-on-write: the partial page is duplicated (engine device copy)
+        before this request's first chunk scatters into it, and the shared
+        original's reference is dropped."""
+        if not self._prefix_on():
+            return
+        limit = sreq.prompt_len - 1
+        m = self.alloc.lookup_prefix(sreq.prompt, limit,
+                                     self.prefix_quantum()) \
+            if limit > 0 else None
+        if self._on_prefix is not None:
+            self._on_prefix(sreq, m)
+        if m is None:
+            return
+        if m.cow is not None:
+            pool, idx = m.cow
+            pages = m.hi_pages if pool == "hi" else m.lo_pages
+            src = pages[idx]
+            try:
+                dst = self.alloc.alloc_hi() if pool == "hi" \
+                    else self.alloc.alloc_lo()
+            except OutOfBlocks:
+                # raced out of the copy page lookup_prefix checked for:
+                # fall back to an uncached start rather than fail
+                self.alloc.release(m.hi_pages, m.lo_pages)
+                return
+            if self._cow is not None:
+                self._cow(sreq, pool, src, dst)
+            pages[idx] = dst
+            self.alloc.release([src] if pool == "hi" else [],
+                               [src] if pool == "lo" else [])
+        sreq.hi_pages = m.hi_pages
+        sreq.lo_pages = m.lo_pages
+        sreq.pos = m.matched
+        sreq.prefix_matched = m.matched
+
+    def register_prefix(self, sreq: SchedRequest) -> int:
+        """Register the request's fully-materialized prompt pages in the
+        prefix cache (the engine calls this after every completed prefill
+        chunk, before any release).  Returns new registrations."""
+        if not self._prefix_on():
+            return 0
+        return self.alloc.register_prefix(sreq.prompt, sreq.pos,
+                                          sreq.hi_pages, sreq.lo_pages)
 
     def _place(self, sreq: SchedRequest) -> None:
         sreq.slot = heapq.heappop(self._free_slots)
@@ -341,8 +435,11 @@ class Scheduler:
         if total == 0:
             return
         while True:
-            free_hi, free_lo = self.alloc.free_counts()
-            if total - free_hi - free_lo <= wm * total:
+            # evictable (zero-ref cached) pages count as headroom: they are
+            # reclaimed inside alloc_* on demand, so cache occupancy alone
+            # must never trigger a preemption
+            avail_hi, avail_lo = self.alloc.available_counts()
+            if total - avail_hi - avail_lo <= wm * total:
                 return
             cands = [r for r in self.active
                      if (r.hi_pages or r.lo_pages) and r not in skip]

@@ -179,6 +179,68 @@ class TestNaNQuarantine:
         assert pe.stats["nan_quarantines"] == 0
 
 
+class TestPrefixSharingChaos:
+    def _shared_reqs(self, seed=21, n=5):
+        rng = np.random.default_rng(seed)
+        pre = rng.integers(0, CFG.vocab_size, 32)
+        return [np.concatenate([pre, rng.integers(0, CFG.vocab_size, w)])
+                for w in (10, 14, 8, 12, 9)[:n]]
+
+    def _oracle(self, params, reqs, **kw):
+        pe = PagedServingEngine(params, CFG,
+                                lm.ServeConfig(stamp=None, kv=QUANT),
+                                paged_cfg(**kw))
+        got = drain(pe, reqs, (6,) * len(reqs))
+        assert pe.stats["prefix_cache_hits"] > 0, \
+            "chaos workload must actually share prefixes"
+        return {u: r.out_tokens for u, r in got.items()}
+
+    def test_exhaustion_storm_with_prefix_sharing(self, params):
+        """Injected page exhaustion while requests share cached prefix
+        pages: preemption releases shared refs mid-storm, eviction churns
+        the zero-ref cache under the survivors — every request must still
+        finish bit-identical to a fault-free prefix-sharing run with the
+        pools fully drained (no leaked ref, no double free)."""
+        reqs = self._shared_reqs()
+        kw = dict(max_slots=2)                   # serialize → warm hits
+        oracle = self._oracle(params, reqs, **kw)
+        fault = FaultPlan(seed=5, exhaust_steps=frozenset(range(2, 40, 3)))
+        pe = PagedServingEngine(params, CFG,
+                                lm.ServeConfig(stamp=None, kv=QUANT),
+                                paged_cfg(**kw), fault=fault)
+        got = drain(pe, reqs, (6,) * len(reqs))
+        assert fault.injected["exhaustion"] > 0
+        assert pe.stats["preemptions"] > 0, "the storm never preempted"
+        assert pe.stats["prefix_cache_hits"] > 0
+        for uid, req in got.items():
+            assert req.status == "finished"
+            np.testing.assert_array_equal(req.out_tokens, oracle[uid])
+        assert pe.sched.alloc.all_free()
+
+    def test_flush_fault_storm_keeps_sharers_alive(self, params):
+        """Periodic whole-cache flushes (``FaultPlan.flush_prefix_steps``)
+        while sharers are in flight: requests already holding refs to
+        de-registered pages keep them until release, later arrivals just
+        miss — tokens stay bit-identical and nothing leaks once drained."""
+        reqs = self._shared_reqs(seed=23)
+        kw = dict(max_slots=2)
+        oracle = self._oracle(params, reqs, **kw)
+        fault = FaultPlan(seed=7,
+                          flush_prefix_steps=frozenset(range(1, 30, 4)))
+        pe = PagedServingEngine(params, CFG,
+                                lm.ServeConfig(stamp=None, kv=QUANT),
+                                paged_cfg(**kw), fault=fault)
+        got = drain(pe, reqs, (6,) * len(reqs))
+        assert fault.injected["prefix_flush"] > 0
+        assert "fault_prefix_flush" in [k for _, k, _ in pe.events]
+        for uid, req in got.items():
+            assert req.status == "finished"
+            np.testing.assert_array_equal(req.out_tokens, oracle[uid])
+        assert pe.sched.alloc.all_free()
+        assert pe.stats["prefix_cached_pages"] == \
+            pe.sched.alloc.cache_stats()["cached_pages"]
+
+
 class TestSeededSoak:
     def test_combined_faults_reproducible(self, params, prompts):
         """Rate-based exhaustion + swap corruption + NaN under one seed on

@@ -1,0 +1,416 @@
+"""Prefix-sharing KV cache tests: the ref-counted hash-addressed page
+store (acquire/release lifecycle, LRU eviction of zero-ref cached pages,
+whole-cache flush), prefix registration/lookup with quantum alignment and
+partial-tail matching, engine-level copy-on-write with bit-identical
+tokens, shared-page preemption + swap roundtrip, the cancel-while-sharing
+leak oracle, the capacity-rejection prefix credit (EOS early stop), and
+gauge recomputation across ``reset_stats`` and fused → reference
+demotion."""
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_platform_name", "cpu")
+
+from repro.core.stamp import StampConfig
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.serving import kvcache as KV
+from repro.serving import paged_kvcache as PKV
+from repro.serving.engine import PagedEngineConfig, PagedServingEngine
+from repro.serving.faults import FaultPlan
+from repro.serving.paged_kvcache import (BlockAllocator, OutOfBlocks,
+                                         PagedCacheConfig)
+
+CFG = ModelConfig(name="prefix-test", family="dense", num_layers=2,
+                  d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                  vocab_size=128)
+QUANT = KV.KVCacheConfig(quantized=True, num_hi=16)
+BF16 = KV.KVCacheConfig(quantized=False)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return lm.init_params(jax.random.PRNGKey(0), CFG)
+
+
+def paged_cfg(**kw):
+    kw.setdefault("max_slots", 5)
+    kw.setdefault("prefill_chunk", 32)
+    kw.setdefault("max_seq", 96)
+    kw.setdefault("block_size", 16)
+    return PagedEngineConfig(**kw)
+
+
+def lo_alloc(n_lo: int = 8) -> BlockAllocator:
+    """bf16 (lo-pool-only) allocator: every token page is a lo page, so
+    the page math in the store tests stays one-dimensional."""
+    return BlockAllocator(PagedCacheConfig(block_size=8, num_lo_blocks=n_lo,
+                                           num_hi_blocks=1, quant=BF16))
+
+
+def toks(*vals) -> np.ndarray:
+    return np.asarray(vals, dtype=np.int32)
+
+
+# ---------------------------------------------------------------------------
+# ref-count lifecycle
+# ---------------------------------------------------------------------------
+
+
+class TestRefCounting:
+    def test_acquire_release_roundtrip(self):
+        a = lo_alloc()
+        p = a.alloc_lo()
+        assert a.ref_count("lo", p) == 1
+        a.acquire([], [p])
+        assert a.ref_count("lo", p) == 2
+        a.release([], [p])
+        assert a.ref_count("lo", p) == 1
+        a.release([], [p])                       # uncached → free list
+        assert a.ref_count("lo", p) == 0
+        assert a.alloc_lo() == p                 # lowest-first reuse
+
+    def test_acquire_unallocated_raises(self):
+        a = lo_alloc()
+        with pytest.raises(ValueError, match="not allocated"):
+            a.acquire([], [3])
+
+    def test_release_of_cached_page_parks_evictable(self):
+        a = lo_alloc()
+        prompt = np.arange(8, dtype=np.int32)
+        p = a.alloc_lo()
+        assert a.register_prefix(prompt, 8, [], [p]) == 1
+        a.release([], [p])
+        assert a.ref_count("lo", p) == 0
+        assert a.evictable_counts() == (0, 1)
+        assert a.all_free()                      # evictable = reclaimable
+        with pytest.raises(ValueError, match="double free"):
+            a.release([], [p])                   # guard survives parking
+
+    def test_lookup_reacquires_evictable_page(self):
+        a = lo_alloc()
+        prompt = np.arange(8, dtype=np.int32)
+        p = a.alloc_lo()
+        a.register_prefix(prompt, 8, [], [p])
+        a.release([], [p])
+        m = a.lookup_prefix(np.arange(12, dtype=np.int32), limit=11,
+                            quantum=4)
+        assert m is not None and m.matched == 8 and m.lo_pages == [p]
+        assert a.ref_count("lo", p) == 1
+        assert a.evictable_counts() == (0, 0)
+        a.release([], [p])
+
+    def test_register_same_prefix_twice_keeps_first(self):
+        """A second request materializing the same prefix privately must
+        not steal the registration (digest-collision skip) — its pages
+        stay private and free normally."""
+        a = lo_alloc()
+        prompt = np.arange(8, dtype=np.int32)
+        p1, p2 = a.alloc_lo(), a.alloc_lo()
+        assert a.register_prefix(prompt, 8, [], [p1]) == 1
+        assert a.register_prefix(prompt, 8, [], [p2]) == 0
+        a.release([], [p2])
+        assert a.evictable_counts() == (0, 0)    # p2 went straight to free
+        a.release([], [p1])
+        assert a.evictable_counts() == (0, 1)
+
+
+# ---------------------------------------------------------------------------
+# LRU eviction + flush
+# ---------------------------------------------------------------------------
+
+
+class TestEvictionAndFlush:
+    def test_lru_eviction_order_is_release_order(self):
+        a = lo_alloc(n_lo=4)                     # pages 1, 2, 3 allocatable
+        pa, pb, pc = a.alloc_lo(), a.alloc_lo(), a.alloc_lo()
+        a.register_prefix(toks(1, 2, 3, 4, 5, 6, 7, 8), 8, [], [pa])
+        a.register_prefix(toks(9, 8, 7, 6, 5, 4, 3, 2), 8, [], [pb])
+        a.release([], [pa])                      # oldest evictable
+        a.release([], [pb])
+        a.release([], [pc])                      # unregistered → free list
+        assert a.free_counts()[1] == 1 and a.evictable_counts()[1] == 2
+        assert a.alloc_lo() == pc                # free list drains first
+        assert a.alloc_lo() == pa                # then LRU-oldest evicts
+        assert a.alloc_lo() == pb
+        assert a.cache_evictions == 2
+        assert a.cache_stats()["cached_pages"] == 0
+        with pytest.raises(OutOfBlocks):
+            a.alloc_lo()
+
+    def test_lookup_refreshes_lru_recency(self):
+        a = lo_alloc(n_lo=3)                     # pages 1, 2 allocatable
+        pr_a, pr_b = toks(*range(8)), toks(*range(8, 16))
+        pa, pb = a.alloc_lo(), a.alloc_lo()
+        a.register_prefix(pr_a, 8, [], [pa])
+        a.register_prefix(pr_b, 8, [], [pb])
+        a.release([], [pa])
+        a.release([], [pb])                      # LRU order: pa, pb
+        m = a.lookup_prefix(pr_a, limit=7, quantum=1)
+        assert m is not None                     # (partial-tail hit)
+        a.release(m.hi_pages, m.lo_pages)        # pa re-released → newest
+        assert a.alloc_lo() == pb                # pb is now the LRU victim
+
+    def test_flush_cache_drops_all_registrations(self):
+        a = lo_alloc()
+        pa, pb = a.alloc_lo(), a.alloc_lo()
+        a.register_prefix(toks(*range(8)), 8, [], [pa])
+        a.register_prefix(toks(*range(8, 16)), 8, [], [pb])
+        a.release([], [pa])                      # evictable
+        assert a.flush_cache() == 2              # pb unregistered in place
+        assert a.cache_stats()["cached_pages"] == 0
+        assert a.evictable_counts() == (0, 0)
+        assert a.ref_count("lo", pb) == 1        # still held by its owner
+        a.release([], [pb])
+        assert a.evictable_counts() == (0, 0)    # freed, not re-parked
+        assert a.all_free()
+
+
+# ---------------------------------------------------------------------------
+# registration + lookup semantics
+# ---------------------------------------------------------------------------
+
+
+class TestPrefixLookup:
+    def _registered(self):
+        a = lo_alloc()
+        prompt = np.arange(24, dtype=np.int32)   # 3 full pages
+        pages = [a.alloc_lo() for _ in range(3)]
+        assert a.register_prefix(prompt, 24, [], pages) == 3
+        a.release([], pages)
+        return a, prompt, pages
+
+    def test_full_match_quantum_and_limit(self):
+        a, prompt, pages = self._registered()
+        longer = np.concatenate([prompt, toks(99, 98, 97)])
+        m = a.lookup_prefix(longer, limit=len(longer) - 1, quantum=8)
+        assert m.matched == 24 and m.lo_pages == pages and m.cow is None
+        a.release(m.hi_pages, m.lo_pages)
+        # the limit caps the match below the full registration …
+        m = a.lookup_prefix(prompt, limit=23, quantum=8)
+        assert m.matched == 16 and m.lo_pages == pages[:2]
+        a.release(m.hi_pages, m.lo_pages)
+        # … and the quantum aligns it down to a chunk boundary
+        m = a.lookup_prefix(longer, limit=len(longer) - 1, quantum=16)
+        assert m.matched == 16
+        a.release(m.hi_pages, m.lo_pages)
+
+    def test_partial_tail_match_sets_cow(self):
+        a, prompt, pages = self._registered()
+        div = prompt.copy()
+        div[20:] = 120                           # diverges inside page 3
+        div = np.concatenate([div, toks(1, 2, 3)])
+        m = a.lookup_prefix(div, limit=len(div) - 1, quantum=4)
+        assert m.matched == 20                   # 16 full + 4 common tail
+        assert m.cow == ("lo", 2)                # page 3 must copy on write
+        a.release(m.hi_pages, m.lo_pages)
+        m = a.lookup_prefix(div, limit=len(div) - 1, quantum=8)
+        assert m.matched == 16 and m.cow is None
+        a.release(m.hi_pages, m.lo_pages)
+
+    def test_peek_is_side_effect_free(self):
+        a, prompt, pages = self._registered()
+        before = a.evictable_counts()
+        assert a.peek_prefix(prompt, limit=len(prompt) - 1, quantum=8) == 16
+        assert a.evictable_counts() == before
+        assert all(a.ref_count("lo", p) == 0 for p in pages)
+
+
+# ---------------------------------------------------------------------------
+# engine: copy-on-write + bit-identical tokens
+# ---------------------------------------------------------------------------
+
+
+def _run(pe, reqs, max_new):
+    uids = [pe.submit(p, m) for p, m in zip(reqs, max_new)]
+    done = {r.uid: r for r in pe.run()}
+    assert sorted(done) == sorted(uids)
+    return [done[u] for u in uids]               # submission order
+
+
+class TestCopyOnWrite:
+    def test_mid_page_divergence_cow_and_parity(self, params):
+        """Two prompts sharing 40 tokens (divergence mid-page: 40 % 16)
+        served serially with an 8-token chunk (quantum 8 → the match ends
+        inside a shared page): the second request must CoW that page and
+        still emit tokens bit-identical to a cache-off run."""
+        rng = np.random.default_rng(7)
+        base = rng.integers(0, CFG.vocab_size, 40)
+        reqs = [np.concatenate([base, rng.integers(0, CFG.vocab_size, 18)]),
+                np.concatenate([base, rng.integers(0, CFG.vocab_size, 14)])]
+        max_new = (5, 6)
+        serve = lm.ServeConfig(stamp=None, kv=QUANT)
+        on = PagedServingEngine(params, CFG, serve,
+                                paged_cfg(max_slots=1, prefill_chunk=8))
+        got_on = _run(on, reqs, max_new)
+        off = PagedServingEngine(
+            params, CFG, serve,
+            paged_cfg(max_slots=1, prefill_chunk=8, prefix_caching=False))
+        got_off = _run(off, reqs, max_new)
+        for a, b in zip(got_on, got_off):
+            np.testing.assert_array_equal(a.out_tokens, b.out_tokens)
+        st = on.stats
+        assert st["prefix_cache_hits"] >= 1
+        assert st["cow_copies"] >= 1, "mid-page hit must copy-on-write"
+        assert st["prefill_chunks"] < off.stats["prefill_chunks"]
+        assert on.sched.quiescent() and on.sched.alloc.all_free()
+        kinds = [k for _, k, _ in on.events]
+        assert "prefix_hit" in kinds and "cow" in kinds
+
+
+class TestSharedPreemption:
+    def test_preempt_while_sharing_swap_roundtrip(self, params):
+        """Tight lo pool + watermark: requests sharing cached prefix pages
+        get preempted mid-flight (CRC'd host swap) and must resume to the
+        same tokens a cache-off run produces — preemption releases shared
+        refs without freeing pages other requests still read."""
+        rng = np.random.default_rng(3)
+        pre = rng.integers(0, CFG.vocab_size, 32)
+        reqs = [np.concatenate([pre, rng.integers(0, CFG.vocab_size, n)])
+                for n in (14, 16, 15, 13)]
+        max_new = (6, 6, 6, 6)
+        serve = lm.ServeConfig(stamp=None, kv=QUANT)
+        kw = dict(max_slots=3, num_lo_blocks=5, preempt_watermark=0.75)
+        on = PagedServingEngine(params, CFG, serve, paged_cfg(**kw))
+        got_on = _run(on, reqs, max_new)
+        off = PagedServingEngine(params, CFG, serve,
+                                 paged_cfg(prefix_caching=False, **kw))
+        got_off = _run(off, reqs, max_new)
+        assert on.stats["preemptions"] > 0, "pool never tightened"
+        assert on.stats["swap_bytes"] > 0
+        for a, b in zip(got_on, got_off):
+            assert a.status == b.status == "finished"
+            np.testing.assert_array_equal(a.out_tokens, b.out_tokens)
+        assert on.sched.quiescent() and on.sched.alloc.all_free()
+
+
+class TestCancelWhileSharing:
+    def test_cancel_holding_shared_pages_leaks_nothing(self, params):
+        """Cancel a request mid-flight while it holds references to cached
+        prefix pages: the release must drop exactly its refs — the cache
+        registrations survive, the other sharer finishes bit-identically,
+        and the allocator drains to fully free."""
+        rng = np.random.default_rng(9)
+        pre = rng.integers(0, CFG.vocab_size, 48)
+        reqs = [np.concatenate([pre, rng.integers(0, CFG.vocab_size, n)])
+                for n in (10, 12)]
+        serve = lm.ServeConfig(stamp=None, kv=QUANT)
+        pe = PagedServingEngine(params, CFG, serve,
+                                paged_cfg(prefill_chunk=16))
+        pe.submit(pre, 1)                        # registers the prefix
+        pe.run()
+        uids = [pe.submit(p, 8) for p in reqs]
+        done = []
+        for _ in range(3):                       # both mid-flight, sharing
+            pe._step(done)
+        assert pe.stats["prefix_cache_hits"] >= 2
+        assert pe.cancel(uids[0])
+        done += pe.run()
+        by_uid = {r.uid: r for r in done}
+        assert by_uid[uids[0]].status == "cancelled"
+        assert by_uid[uids[1]].status == "finished"
+        assert pe.sched.quiescent() and pe.sched.alloc.all_free()
+        off = PagedServingEngine(params, CFG, serve,
+                                 paged_cfg(prefill_chunk=16,
+                                           prefix_caching=False))
+        want = _run(off, [reqs[1]], (8,))[0]
+        np.testing.assert_array_equal(by_uid[uids[1]].out_tokens,
+                                      want.out_tokens)
+
+
+# ---------------------------------------------------------------------------
+# capacity rejection credits the cached prefix (EOS early stop)
+# ---------------------------------------------------------------------------
+
+
+class TestCapacityPrefixCredit:
+    def test_reject_then_would_have_fit(self, params):
+        """A request whose WORST-CASE page demand (full max_new budget)
+        exceeds the pool used to be rejected outright — even when a warm
+        shared prefix meant it would start deep and stop at EOS long
+        before that depth.  The admission check must credit fully shared
+        pages; the credited request must then actually finish."""
+        rng = np.random.default_rng(5)
+        prompt = rng.integers(0, CFG.vocab_size, 64)
+        serve = lm.ServeConfig(stamp=None, kv=QUANT)
+        kw = dict(max_slots=2, prefill_chunk=32, max_seq=112,
+                  num_lo_blocks=6, num_hi_blocks=2)
+
+        # oracle: learn the greedy continuation, pick an early token as
+        # EOS that does not appear before its own index
+        ora = PagedServingEngine(params, CFG, serve, paged_cfg(**kw))
+        tokens = _run(ora, [prompt], (4,))[0].out_tokens
+        k = next(i for i in range(2, len(tokens))
+                 if tokens[i] not in tokens[:i])
+        eos = int(tokens[k])
+
+        pe = PagedServingEngine(params, CFG, serve,
+                                paged_cfg(eos_id=eos, **kw))
+        # the workload really is worst-case infeasible on this pool …
+        nh, nl = PKV.pages_needed(64 + 47 - 1, pe.pcfg)
+        cap_hi, cap_lo = pe.sched.alloc.capacity()
+        assert nl > cap_lo, "test workload must exceed the raw capacity"
+        # … so COLD it is rejected (the pre-credit behavior, still correct
+        # when nothing is cached) …
+        cold = pe.submit(prompt, 47)
+        assert {r.uid: r for r in pe.run()}[cold].status == "rejected"
+        # … warm the cache, and the same request must now be admitted and
+        # finish via EOS far above the worst-case depth
+        pe.submit(prompt, k)                     # registers prompt pages
+        pe.run()
+        big = pe.submit(prompt, 47)
+        done = {r.uid: r for r in pe.run()}
+        assert done[big].status == "finished", done[big].error
+        assert len(done[big].out_tokens) <= k + 1
+        assert int(done[big].out_tokens[-1]) == eos
+        assert pe.sched.quiescent() and pe.sched.alloc.all_free()
+
+
+# ---------------------------------------------------------------------------
+# gauges: recomputed, never carried
+# ---------------------------------------------------------------------------
+
+
+class TestPrefixGauges:
+    def _shared_reqs(self, seed=13, n=3):
+        rng = np.random.default_rng(seed)
+        pre = rng.integers(0, CFG.vocab_size, 32)
+        return [np.concatenate([pre, rng.integers(0, CFG.vocab_size, 8)])
+                for _ in range(n)]
+
+    def test_reset_stats_recomputes_live_gauges(self, params):
+        pe = PagedServingEngine(params, CFG,
+                                lm.ServeConfig(stamp=None, kv=QUANT),
+                                paged_cfg(max_slots=1))
+        reqs = self._shared_reqs()
+        _run(pe, reqs, (4,) * len(reqs))
+        st = pe.stats
+        assert st["prefix_cache_hits"] > 0
+        assert st["prefix_cached_pages"] > 0
+        cached = st["prefix_cached_pages"]
+        pe.reset_stats(clear_events=True)
+        st = pe.stats
+        assert st["prefix_cache_hits"] == 0      # counters zeroed …
+        assert st["prefix_cache_hit_rate"] == 0.0
+        assert st["prefix_cached_pages"] == cached  # … gauges recomputed
+
+    def test_demotion_keeps_live_gauges(self, params):
+        """Fused → reference demotion rebuilds the step functions and
+        re-derives every gauge — the prefix-cache occupancy must survive
+        exactly like ``reference_fallback_sites`` does."""
+        serve = lm.ServeConfig(
+            stamp=StampConfig(num_hi_tokens=8, execution="fused"),
+            kv=QUANT, numerics_guard=True)
+        fault = FaultPlan(seed=0, nan_faults=frozenset({(2, 1)}))
+        pe = PagedServingEngine(params, CFG, serve,
+                                paged_cfg(max_slots=1), fault=fault)
+        reqs = self._shared_reqs(seed=17)
+        got = _run(pe, reqs, (4,) * len(reqs))   # uids are 1-based
+        assert pe.stats["demotions"] == 1 and pe._demoted
+        assert got[1].status == "failed"         # uid 2 = second submitted
+        st = pe.stats
+        assert st["prefix_cached_pages"] > 0
+        assert st["prefix_cache_hits"] > 0
+        assert pe.sched.quiescent() and pe.sched.alloc.all_free()
